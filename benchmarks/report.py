@@ -1,0 +1,101 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from
+results/dryrun/*.json.
+
+Usage: PYTHONPATH=src python -m benchmarks.report [--out EXPERIMENTS_gen.md]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+RESULTS = REPO / "results" / "dryrun"
+
+ARCH_ORDER = [
+    "qwen2-moe-a2.7b", "kimi-k2-1t-a32b", "musicgen-large", "gemma3-4b",
+    "gemma-2b", "deepseek-67b", "codeqwen1.5-7b", "rwkv6-7b",
+    "recurrentgemma-9b", "qwen2-vl-2b",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def fmt_bytes(b):
+    return f"{b / 2**30:.2f}"
+
+
+def fmt_e(x):
+    return f"{x:.3g}"
+
+
+def load():
+    cells = {}
+    for f in RESULTS.glob("*.json"):
+        d = json.loads(f.read_text())
+        cells[(d["arch"], d["shape"])] = d
+    return cells
+
+
+def dryrun_table(cells) -> str:
+    rows = ["| arch | shape | mesh | compile | peak GiB/dev | fits 16GiB "
+            "| #coll | coll GB/chip |",
+            "|---|---|---|---|---|---|---|---|"]
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            d = cells.get((a, s))
+            if d is None:
+                continue
+            if "skipped" in d:
+                rows.append(f"| {a} | {s} | — | SKIP (sub-quadratic gate) "
+                            f"| — | — | — | — |")
+                continue
+            if "error" in d:
+                rows.append(f"| {a} | {s} | — | ERROR | — | — | — | — |")
+                continue
+            for mesh in ("pod", "multipod"):
+                m = d.get("mesh", {}).get(mesh)
+                if not m:
+                    continue
+                rows.append(
+                    f"| {a} | {s} | {mesh} | {m['compile_seconds']}s "
+                    f"| {fmt_bytes(m.get('peak_bytes_per_device', 0))} "
+                    f"| {'yes' if m.get('fits_hbm') else 'NO'} "
+                    f"| {m.get('collective_count', 0)} "
+                    f"| {m.get('collective_bytes_per_chip', 0)/1e9:.1f} |")
+    return "\n".join(rows)
+
+
+def roofline_table(cells) -> str:
+    rows = ["| arch | shape | compute s | memory s | collective s | "
+            "dominant | MODEL_FLOPS/HLO | roofline frac | step s |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            d = cells.get((a, s))
+            if d is None or "roofline" not in d:
+                continue
+            r = d["roofline"]
+            rows.append(
+                f"| {a} | {s} | {r['compute_s']:.4f} | {r['memory_s']:.4f} "
+                f"| {r['collective_s']:.4f} | **{r['dominant']}** "
+                f"| {r['useful_flops_ratio']:.2f} "
+                f"| {r['roofline_fraction']:.3f} | {r['step_s']:.3f} |")
+    return "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", type=Path, default=None)
+    args = ap.parse_args()
+    cells = load()
+    out = ["## §Dry-run (generated)", "", dryrun_table(cells), "",
+           "## §Roofline (generated, single-pod 256 chips)", "",
+           roofline_table(cells), ""]
+    text = "\n".join(out)
+    if args.out:
+        args.out.write_text(text)
+    print(text)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Fault-tolerance demo: inject failures mid-training, watch the supervisor
+restore from the atomic checkpoint and replay to an identical trajectory.
+
+Run:  PYTHONPATH=src python examples/fault_tolerant_training.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np  # noqa: E402
+
+from repro.launch import train as train_mod  # noqa: E402
+
+ARGS = ["--arch", "qwen2-moe-a2.7b", "--smoke", "--steps", "40",
+        "--batch", "4", "--seq", "32", "--save-every", "10",
+        "--log-every", "10"]
+
+if __name__ == "__main__":
+    print("=== clean run ===")
+    clean = train_mod.main(ARGS + ["--ckpt-dir", "/tmp/ft_clean"])
+    print("\n=== run with injected failures at steps 17 and 33 ===")
+    faulty = train_mod.main(ARGS + ["--ckpt-dir", "/tmp/ft_faulty",
+                                    "--inject-failures", "17,33"])
+    same = np.allclose(clean[-1], faulty[-1], rtol=1e-5)
+    print(f"\nfinal losses match after 2 failures + restores: {same}")
+    assert same

@@ -1,0 +1,14 @@
+"""Batched-serving example: continuous batching with KV caches.
+
+Run:  PYTHONPATH=src python examples/serve_batch.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch import serve as serve_mod  # noqa: E402
+
+if __name__ == "__main__":
+    serve_mod.main(["--arch", "gemma-2b", "--smoke", "--slots", "4",
+                    "--requests", "8", "--prompt-len", "8",
+                    "--max-new", "16", "--max-len", "64"])

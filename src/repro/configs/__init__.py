@@ -1,0 +1,14 @@
+from .base import (  # noqa: F401
+    ArchConfig,
+    ShapeSpec,
+    SHAPES,
+    input_specs,
+    shape_applicable,
+)
+from .archs import ARCHS  # noqa: F401
+
+
+def get_arch(name: str) -> ArchConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(ARCHS)}")
+    return ARCHS[name]

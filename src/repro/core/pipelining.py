@@ -1,0 +1,166 @@
+"""Pipeline-enabling transformations (paper §2), adapted to JAX/TPU.
+
+The FPGA problem: a loop-carried dependency through an ``L_acc``-cycle
+operation forces initiation interval ``I = L_acc``.  The TPU analogue is a
+*sequential* reduction (``lax.scan``/``fori_loop`` carrying a scalar) that
+serializes what the VPU/MXU could do in parallel, or an XLA reduction whose
+shape defeats lane parallelism.  The cures are the paper's cures:
+
+* §2.1.1/2.1.2  transpose / tile the iteration space so each accumulator is
+  revisited only every M >= L_acc steps  -> ``interleaved_accumulate``
+* §2.1.4        interleave independent problem instances -> ``cross_input_interleave``
+* §2.4          fuse sequential pipelined phases          -> ``fuse_phases``
+* §2.5          flatten nested iteration spaces           -> ``flatten_grid``
+
+These helpers are used by the Pallas kernels, the RWKV6 chunked scan, and the
+optimizer, and are unit/property tested against naive references.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def interleaved_accumulate(
+    xs: jax.Array,
+    *,
+    lanes: int = 8,
+    axis: int = 0,
+    op: Callable[[jax.Array, jax.Array], jax.Array] = jnp.add,
+    init: float = 0.0,
+) -> jax.Array:
+    """Single-loop accumulation interleaving (paper §2.1.3, Lst. 2).
+
+    Splits a length-N sequential reduction into ``lanes`` independent partial
+    accumulators (stage 0: the pipelined loop with the dependency broken) and
+    collapses them in a short second stage (stage 1).  On TPU the "lanes" are
+    literal vector lanes: the partial accumulators live in one VREG row, so
+    stage 0 runs at I=1 independent of the op latency.
+
+    Works for any associative+commutative ``op``; matches the naive fold
+    bit-for-bit for integer types, and up to reassociation error for floats
+    (which is exactly the trade the paper makes).
+    """
+    xs = jnp.moveaxis(xs, axis, 0)
+    n = xs.shape[0]
+    pad = (-n) % lanes
+    if pad:
+        fill = jnp.full((pad,) + xs.shape[1:], init, dtype=xs.dtype)
+        xs = jnp.concatenate([xs, fill], axis=0)
+    # stage 0: lane-strided partials.  shape (n/lanes, lanes, ...) reduced
+    # over the *sequential* axis; every lane is an independent accumulator.
+    xs = xs.reshape((-1, lanes) + xs.shape[1:])
+
+    def body(acc, row):
+        return op(acc, row), None
+
+    acc0 = jnp.full((lanes,) + xs.shape[2:], init, dtype=xs.dtype)
+    partials, _ = jax.lax.scan(body, acc0, xs)
+    # stage 1: collapse the lane partials (short, not throughput-critical).
+    return _fold(partials, op, init, axis=0)
+
+
+def _fold(xs: jax.Array, op, init, axis: int) -> jax.Array:
+    """Tree-fold along ``axis`` (log-depth collapse; paper's stage 1)."""
+    xs = jnp.moveaxis(xs, axis, 0)
+    n = xs.shape[0]
+    while n > 1:
+        half = n // 2
+        lo, hi, rest = xs[:half], xs[half:2 * half], xs[2 * half:]
+        xs = jnp.concatenate([op(lo, hi), rest], axis=0)
+        n = xs.shape[0]
+    return xs[0]
+
+
+def tiled_accumulate(
+    terms_fn: Callable[[jax.Array], jax.Array],
+    n: int,
+    tile: int,
+    out_shape: Tuple[int, ...],
+    dtype=jnp.float32,
+) -> jax.Array:
+    """Tiled accumulation interleaving (paper §2.1.2, Lst. 1c).
+
+    Evaluates ``sum_{i<n} terms_fn(i)`` where ``terms_fn`` maps a vector of
+    indices to a (tile,) + out_shape block of terms.  A buffer of ``tile``
+    partial accumulators is carried through a scan over n/tile chunks — each
+    accumulator is touched once per chunk, breaking the dependency chain as
+    long as ``tile >= L_acc``.
+    """
+    assert n % tile == 0, (n, tile)
+
+    def body(acc, chunk):
+        idx = chunk * tile + jnp.arange(tile)
+        return acc + terms_fn(idx), None
+
+    acc0 = jnp.zeros((tile,) + out_shape, dtype)
+    acc, _ = jax.lax.scan(body, acc0, jnp.arange(n // tile))
+    return acc.sum(axis=0)
+
+
+def cross_input_interleave(
+    step: Callable[[jax.Array], jax.Array],
+    states: jax.Array,
+    n_steps: int,
+) -> jax.Array:
+    """Cross-input accumulation interleaving (paper §2.1.4, Lst. 3).
+
+    An iterative solver with a true dependency on its own state cannot be
+    pipelined — but throughput across *independent problem instances* can.
+    The FPGA version rotates N >= L_step states through one pipeline; the TPU
+    version vmaps the step across the leading axis (instances fill the VPU/
+    MXU instead of pipeline stages) and scans over time.
+    """
+    vstep = jax.vmap(step)
+
+    def body(s, _):
+        return vstep(s), None
+
+    out, _ = jax.lax.scan(body, states, None, length=n_steps)
+    return out
+
+
+def fuse_phases(
+    phases: Sequence[Callable[[jax.Array], jax.Array]],
+) -> Callable[[jax.Array], jax.Array]:
+    """Pipelined loop fusion (paper §2.4): run consecutive elementwise phases
+    as one fused pass.  Under jit, composing the callables in one trace is
+    sufficient — XLA fuses them into a single loop over the data with a
+    single "fill/drain", exactly the paper's Lst. 5c.  The helper exists so
+    call sites document the transformation and tests can compare fused vs.
+    phase-at-a-time execution.
+    """
+
+    def fused(x: jax.Array) -> jax.Array:
+        for p in phases:
+            x = p(x)
+        return x
+
+    return fused
+
+
+def flatten_grid(shape: Sequence[int]) -> Tuple[int, Callable[[jax.Array], Tuple[jax.Array, ...]]]:
+    """Pipelined loop flattening (paper §2.5, Lst. 7 + §2.7 Lst. 8).
+
+    Returns the collapsed trip count and an index-reconstruction function
+    mapping the flat index to per-dimension indices using the paper's
+    condition-flattened update (compare-then-increment, branch-free).
+    Used to collapse multi-dimensional Pallas grids so the inner "pipeline"
+    (the grid's DMA double-buffer) never drains between outer iterations.
+    """
+    total = 1
+    for s in shape:
+        total *= int(s)
+
+    def unflatten(flat: jax.Array) -> Tuple[jax.Array, ...]:
+        idx = []
+        rem = flat
+        for s in reversed(shape):
+            idx.append(rem % s)
+            rem = rem // s
+        return tuple(reversed(idx))
+
+    return total, unflatten

@@ -1,0 +1,64 @@
+"""TransformConfig: the staged optimization levels from the paper's §6.
+
+Each application example in the paper is optimized in stages; we encode the
+same ladder so kernels/models can be built "at" a level and the benchmark
+harness can sweep it (reproducing Fig. 7's progression structure):
+
+  T0 naive        — straight loop nest, no transformations
+  T1 pipelined    — pipeline-enabling transforms applied (§2): accumulation
+                    interleaving, delay buffering, fusion/flattening
+  T2 vectorized   — + vectorization / lane alignment (§3.1) and memory
+                    access extraction/oversubscription (§4.1/4.2)
+  T3 replicated   — + replication/streaming/tiling (§3.2-3.4) and striping
+                    (§4.3): the full spatial design
+
+plus orthogonal memory knobs (type demotion §4.4, striping ways §4.3).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional
+
+from .memory import BF16_POLICY, DtypePolicy
+
+
+class Level(enum.IntEnum):
+    T0_NAIVE = 0
+    T1_PIPELINED = 1
+    T2_VECTORIZED = 2
+    T3_REPLICATED = 3
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformConfig:
+    level: Level = Level.T3_REPLICATED
+    # §2.1 accumulation interleaving: number of concurrent accumulators
+    accum_lanes: int = 8
+    # §3.1 vectorization width (elements per cycle target)
+    vector_width: int = 128
+    # §3.2 replication factor (compute units / resident rows / TP ways)
+    replication: int = 1
+    # §3.3 streaming dataflow stages (pipeline-parallel stages)
+    stream_stages: int = 1
+    # §3.4 tiling: VMEM budget fraction the TilePlanner may use
+    vmem_fraction: float = 0.75
+    # §4.2 oversubscription: prefetch depth (data pipeline / DMA buffers)
+    prefetch_depth: int = 2
+    # §4.3 striping ways (FSDP shards for weights/moments)
+    stripe_ways: int = 1
+    # §4.4 type demotion
+    dtypes: DtypePolicy = BF16_POLICY
+    int8_moments: bool = False
+    int8_grad_wire: bool = False
+
+    def at_level(self, level: Level) -> "TransformConfig":
+        return dataclasses.replace(self, level=level)
+
+
+PAPER_STAGES = {
+    Level.T0_NAIVE: "naive loop nest",
+    Level.T1_PIPELINED: "pipeline-enabled (§2)",
+    Level.T2_VECTORIZED: "+ vectorized & memory-extracted (§3.1, §4.1-4.2)",
+    Level.T3_REPLICATED: "+ replicated/streamed/tiled (§3.2-3.4, §4.3)",
+}

@@ -1,0 +1,169 @@
+"""Scaling transformations (paper §3): vectorization, replication, tiling.
+
+On the FPGA, scaling = folding pipelined loops into unrolled hardware.  On
+the TPU the "unrolled hardware" already exists (8x128 VPU lanes, 128x128 MXU,
+N chips) — the transformation becomes *choosing shapes and shardings that
+keep it fed*:
+
+* vectorization §3.1  -> pad/align trailing dims to (sublane, lane) tiles,
+* replication  §3.2   -> reuse-fed parallelism: K-blocking in kernels,
+                         TP/EP sharding across chips,
+* tiling       §3.4   -> ``TilePlanner``: solve BlockSpec shapes against the
+                         VMEM budget, the paper's "fit fast memory" objective.
+
+``TilePlanner`` is used by every Pallas kernel in ``repro.kernels`` to derive
+its BlockSpecs, so the kernels' VMEM claims are *planned*, not guessed — the
+roofline napkin math in EXPERIMENTS.md §Perf reads straight off it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .model import TPU_V5E, HardwareSpec
+
+
+def round_up(x: int, to: int) -> int:
+    return ((x + to - 1) // to) * to
+
+
+def vector_pad(shape: Sequence[int], dtype_bytes: int = 4,
+               hw: HardwareSpec = TPU_V5E) -> Tuple[int, ...]:
+    """Vectorization §3.1: the lane-aligned shape the VPU actually processes.
+
+    Trailing dim pads to the 128-lane width; the second-to-last pads to the
+    sublane count scaled by the packing factor of the dtype (bf16 packs 2x,
+    int8 4x) — narrower types widen W, the paper's W_max = B/(f*S).
+    """
+    if not shape:
+        return tuple(shape)
+    packing = max(1, 4 // dtype_bytes)
+    out = list(shape)
+    out[-1] = round_up(out[-1], hw.lane)
+    if len(out) >= 2:
+        out[-2] = round_up(out[-2], hw.sublane * packing)
+    return tuple(out)
+
+
+def lane_utilization(shape: Sequence[int], dtype_bytes: int = 4,
+                     hw: HardwareSpec = TPU_V5E) -> float:
+    """Fraction of VPU lanes doing useful work for this (unpadded) shape."""
+    padded = vector_pad(shape, dtype_bytes, hw)
+    used = math.prod(shape) if shape else 1
+    total = math.prod(padded) if padded else 1
+    return used / total
+
+
+@dataclasses.dataclass(frozen=True)
+class TilePlan:
+    """A solved tiling for a matmul-like kernel (bm, bn, bk blocks)."""
+
+    bm: int
+    bn: int
+    bk: int
+    vmem_bytes: int          # working set incl. double buffering
+    grid: Tuple[int, ...]    # (m/bm, n/bn, k/bk)
+    flops_per_step: float
+    hbm_bytes_per_step: float
+
+    @property
+    def arithmetic_intensity(self) -> float:
+        return self.flops_per_step / max(self.hbm_bytes_per_step, 1)
+
+
+class TilePlanner:
+    """Tiling §3.4 as a solver: pick MXU-aligned (bm, bn, bk) maximizing
+    arithmetic intensity subject to the VMEM budget.
+
+    Working set per grid step for C[bm,bn] += A[bm,bk] @ B[bk,bn]:
+        A-block + B-block (double-buffered: x2 for DMA overlap, the paper's
+        memory oversubscription §4.2) + C-accumulator (single, revisited).
+    Larger bm*bn raises reuse of each loaded A/B element — the §3.2
+    "replication fed by reuse" argument in shape form.
+    """
+
+    def __init__(self, hw: HardwareSpec = TPU_V5E, *,
+                 vmem_fraction: float = 0.75,
+                 double_buffer: bool = True):
+        self.hw = hw
+        self.budget = int(hw.vmem_bytes * vmem_fraction)
+        self.double_buffer = double_buffer
+
+    def plan_matmul(self, m: int, n: int, k: int, *,
+                    in_bytes: int = 2, acc_bytes: int = 4,
+                    candidates: Optional[Sequence[int]] = None) -> TilePlan:
+        cands = list(candidates or (128, 256, 512, 1024, 2048))
+        best: Optional[TilePlan] = None
+        mxu = self.hw.mxu_dim
+        for bm in cands:
+            if bm > round_up(m, mxu):
+                continue
+            for bn in cands:
+                if bn > round_up(n, mxu):
+                    continue
+                for bk in cands:
+                    if bk > round_up(k, mxu):
+                        continue
+                    buf = 2 if self.double_buffer else 1
+                    vmem = (bm * bk + bk * bn) * in_bytes * buf \
+                        + bm * bn * acc_bytes
+                    if vmem > self.budget:
+                        continue
+                    grid = (math.ceil(m / bm), math.ceil(n / bn),
+                            math.ceil(k / bk))
+                    flops = 2.0 * bm * bn * bk
+                    hbm = (bm * bk + bk * bn) * in_bytes
+                    plan = TilePlan(bm, bn, bk, vmem, grid, flops, hbm)
+                    if best is None or _better(plan, best):
+                        best = plan
+        if best is None:
+            raise ValueError(
+                f"no MXU-aligned tiling of ({m},{n},{k}) fits "
+                f"{self.budget} bytes of VMEM")
+        return best
+
+    def plan_stencil(self, rows: int, cols: int, halo: int = 1, *,
+                     dtype_bytes: int = 4,
+                     candidates: Optional[Sequence[int]] = None
+                     ) -> Tuple[int, int]:
+        """Block shape for a 2-D stencil: (brows+2*halo, bcols+2*halo) input
+        window + (brows, bcols) output, double-buffered.  The halo overlap is
+        the TPU form of the paper's delay buffer — each interior row is
+        DMA'd once per block instead of once per use."""
+        cands = list(candidates or (128, 256, 512, 1024, 2048, 4096))
+        best = None
+        for br in cands:
+            if br > round_up(rows, self.hw.sublane):
+                continue
+            for bc in cands:
+                if bc > round_up(cols, self.hw.lane):
+                    continue
+                vmem = ((br + 2 * halo) * (bc + 2 * halo) + br * bc) \
+                    * dtype_bytes * 2
+                if vmem > self.budget:
+                    continue
+                waste = ((br + 2 * halo) * (bc + 2 * halo)) / (br * bc)
+                key = (waste, -br * bc)
+                if best is None or key < best[0]:
+                    best = (key, (br, bc))
+        if best is None:
+            raise ValueError("no stencil tiling fits VMEM")
+        return best[1]
+
+
+def _better(a: TilePlan, b: TilePlan) -> bool:
+    """Prefer higher arithmetic intensity; tie-break on fewer grid steps."""
+    ka = (a.arithmetic_intensity, -math.prod(a.grid))
+    kb = (b.arithmetic_intensity, -math.prod(b.grid))
+    return ka > kb
+
+
+def replication_factor(reuse: int, unit_flops: float,
+                       hw: HardwareSpec = TPU_V5E) -> int:
+    """§3.2 napkin math: with `reuse` uses per loaded element, how many
+    parallel units can one HBM stream feed before compute saturates?
+        P_max = reuse * machine_balance / (flops per element per unit)
+    """
+    balance = hw.peak_flops / hw.hbm_bw
+    return max(1, int(reuse * balance / max(unit_flops, 1e-9)))

@@ -1,0 +1,276 @@
+"""Machine-readable encoding of the paper's Table 1 and Table 2.
+
+The paper's primary contribution is a *taxonomy* of HLS transformations: three
+classes (pipelining / scaling / memory), each transformation annotated with
+
+* characteristics — effects on the code and the generated hardware, and
+* objectives — the bottlenecks a performance engineer can target with it.
+
+This module encodes that cheat sheet so tooling (the benchmark harness, the
+perf-iteration loop in EXPERIMENTS.md, and users of the library) can *query*
+it: ``recommend(Objective.LOOP_CARRIED_DEPENDENCY)`` returns the
+transformations the paper prescribes, together with the TPU-native mechanism
+this repo implements for each (see ``tpu_mechanism``).
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+
+class TransformClass(enum.Enum):
+    PIPELINING = "pipelining"
+    SCALING = "scaling"
+    MEMORY = "memory"
+
+
+class Characteristic(enum.Enum):
+    """Center column group of Table 1."""
+
+    ENABLES_PIPELINING = "PL"      # enables pipelining
+    INCREASES_REUSE = "RE"         # increases arithmetic intensity
+    INCREASES_PARALLELISM = "PR"   # exposes more parallelism
+    OPTIMIZES_MEMORY = "ME"        # optimizes memory accesses
+    RESOURCE_NEUTRAL = "RS"        # does not significantly increase resources
+    ROUTING_NEUTRAL = "RT"         # does not impair routing / frequency
+    SCHEDULE_NEUTRAL = "SC"        # does not change loop-nest schedule
+    CODE_NEUTRAL = "CC"            # does not increase code complexity
+
+
+class Objective(enum.Enum):
+    """Right column group of Table 1 — what the engineer wants to fix."""
+
+    LOOP_CARRIED_DEPENDENCY = "LD"   # resolve loop-carried dependencies
+    INTERFACE_CONTENTION = "IC"      # resolve interface contention
+    DATA_REUSE = "RE"                # increase data reuse
+    PARALLELISM = "CU"               # increase parallelism (compute units)
+    MEMORY_BANDWIDTH = "BW"          # increase usable memory bandwidth
+    PIPELINING_OVERHEAD = "PL"       # reduce pipeline fill/drain overhead
+    ROUTING = "RT"                   # improve routing results
+    RESOURCES = "RS"                 # reduce resource utilization
+
+
+@dataclass(frozen=True)
+class Transformation:
+    name: str
+    cls: TransformClass
+    section: str                      # paper section
+    characteristics: Tuple[Characteristic, ...]
+    objectives: Tuple[Objective, ...]
+    fpga_mechanism: str               # what the paper does on FPGA
+    tpu_mechanism: str                # what this repo does on TPU
+    repo_entrypoints: Tuple[str, ...] = field(default_factory=tuple)
+
+
+_T = Transformation
+_C = Characteristic
+_O = Objective
+_K = TransformClass
+
+TABLE1: Dict[str, Transformation] = {
+    t.name: t
+    for t in [
+        _T(
+            "accumulation_interleaving", _K.PIPELINING, "2.1",
+            (_C.ENABLES_PIPELINING, _C.SCHEDULE_NEUTRAL),
+            (_O.LOOP_CARRIED_DEPENDENCY,),
+            "interleave independent accumulations across an M-deep buffer so "
+            "each partial sum is revisited only every M >= L_acc cycles",
+            "multi-accumulator reductions: K-blocked VMEM accumulators in the "
+            "Pallas matmul; lane-parallel partial sums + tree collapse for "
+            "float reductions; online-softmax running stats in flash attention",
+            ("repro.core.pipelining.interleaved_accumulate",
+             "repro.core.pipelining.cross_input_interleave",
+             "repro.kernels.matmul", "repro.kernels.attention"),
+        ),
+        _T(
+            "delay_buffering", _K.PIPELINING, "2.2",
+            (_C.ENABLES_PIPELINING, _C.INCREASES_REUSE, _C.OPTIMIZES_MEMORY),
+            (_O.INTERFACE_CONTENTION, _O.DATA_REUSE),
+            "FIFO line buffers / shift registers hold each loaded element "
+            "until its last use (sliding-window stencils)",
+            "overlapping BlockSpec halo windows stage each HBM row into VMEM "
+            "exactly once per block; sliding-window KV caches; conv ring "
+            "buffers in RG-LRU blocks",
+            ("repro.kernels.stencil", "repro.models.griffin"),
+        ),
+        _T(
+            "random_access_buffering", _K.PIPELINING, "2.3",
+            (_C.ENABLES_PIPELINING, _C.OPTIMIZES_MEMORY),
+            (_O.INTERFACE_CONTENTION, _O.MEMORY_BANDWIDTH),
+            "stage tiles into on-chip RAM and do random accesses there",
+            "gather/scatter have no fast TPU analogue; histogram becomes a "
+            "one-hot matmul on the MXU over VMEM-resident tiles (the MXU is "
+            "the bank array), with banked partial histograms",
+            ("repro.kernels.histogram",),
+        ),
+        _T(
+            "pipelined_loop_fusion", _K.PIPELINING, "2.4",
+            (_C.ENABLES_PIPELINING, _C.RESOURCE_NEUTRAL),
+            (_O.PIPELINING_OVERHEAD,),
+            "fuse sequential pipelined loops under loop guards to share one "
+            "fill/drain",
+            "XLA op fusion inside one jit; fused layer bodies in a single "
+            "scan; fused optimizer update (no per-phase kernel launches)",
+            ("repro.core.pipelining.fuse_phases", "repro.optim.adamw"),
+        ),
+        _T(
+            "loop_flattening", _K.PIPELINING, "2.5",
+            (_C.ENABLES_PIPELINING, _C.RESOURCE_NEUTRAL),
+            (_O.PIPELINING_OVERHEAD,),
+            "coalesce nested loops so the inner pipeline never drains",
+            "collapsed Pallas grids (1-D grid over (M/bm)*(N/bn)); "
+            "scan-over-layers keeps one loop, not L jit calls",
+            ("repro.core.pipelining.flatten_grid", "repro.models.transformer"),
+        ),
+        _T(
+            "inlining", _K.PIPELINING, "2.6",
+            (_C.ENABLES_PIPELINING, _C.CODE_NEUTRAL),
+            (_O.LOOP_CARRIED_DEPENDENCY, _O.PIPELINING_OVERHEAD),
+            "instantiate called functions as dedicated hardware",
+            "JAX tracing inlines everything by construction; jit boundaries "
+            "exist only at step level (train_step / serve_step)",
+            ("repro.train.steps",),
+        ),
+        _T(
+            "condition_flattening", _K.PIPELINING, "2.7",
+            (_C.RESOURCE_NEUTRAL, _C.SCHEDULE_NEUTRAL),
+            (_O.ROUTING,),
+            "balance conditional logic depth to shorten the critical path",
+            "predication: branch-free jnp.where masks (causal / sliding "
+            "window / MoE capacity) instead of lax.cond in hot loops",
+            ("repro.models.layers.attention_mask",),
+        ),
+        _T(
+            "vectorization", _K.SCALING, "3.1",
+            (_C.INCREASES_PARALLELISM, _C.OPTIMIZES_MEMORY, _C.CODE_NEUTRAL),
+            (_O.PARALLELISM, _O.MEMORY_BANDWIDTH),
+            "widen the datapath by W via unrolling / vector types; bounded by "
+            "W_max = B/(f*S)",
+            "lane alignment: trailing dims padded to (8,128) VREG tiles; "
+            "bf16 doubles elements/lane; TilePlanner enforces MXU-aligned "
+            "block shapes",
+            ("repro.core.scaling.vector_pad", "repro.core.scaling.TilePlanner"),
+        ),
+        _T(
+            "replication", _K.SCALING, "3.2",
+            (_C.INCREASES_PARALLELISM, _C.INCREASES_REUSE),
+            (_O.PARALLELISM,),
+            "replicate compute units fed from on-chip reuse; scales with "
+            "silicon, not memory bandwidth",
+            "within-chip: more MXU passes per loaded operand (K-blocking, "
+            "P-resident rows); across chips: tensor/expert parallelism via "
+            "sharding over the `model` mesh axis",
+            ("repro.runtime.sharding", "repro.kernels.matmul",
+             "repro.kernels.nbody"),
+        ),
+        _T(
+            "streaming_dataflow", _K.SCALING, "3.3",
+            (_C.INCREASES_PARALLELISM, _C.ROUTING_NEUTRAL),
+            (_O.PARALLELISM, _O.ROUTING),
+            "partition into PEs connected by FIFOs; systolic arrays",
+            "pipeline parallelism over a mesh axis with jax.lax.ppermute "
+            "(GPipe microbatch streaming); Pallas's per-grid-step DMA "
+            "pipeline is the intra-chip FIFO",
+            ("repro.runtime.pipeline_parallel",),
+        ),
+        _T(
+            "tiling", _K.SCALING, "3.4",
+            (_C.OPTIMIZES_MEMORY, _C.RESOURCE_NEUTRAL),
+            (_O.DATA_REUSE, _O.RESOURCES),
+            "fold large problems into chunks that fit on-chip memory",
+            "BlockSpec tiling solved by TilePlanner against the 16 MiB VMEM "
+            "budget; sequence chunking in RWKV6; microbatching",
+            ("repro.core.scaling.TilePlanner",),
+        ),
+        _T(
+            "memory_access_extraction", _K.MEMORY, "4.1",
+            (_C.ENABLES_PIPELINING, _C.OPTIMIZES_MEMORY),
+            (_O.INTERFACE_CONTENTION, _O.MEMORY_BANDWIDTH),
+            "move memory accesses into separate modules; long bursts + "
+            "streams decouple memory from compute schedules",
+            "pallas_call's emitted DMA pipeline: kernels only touch VMEM Refs "
+            "while the grid prefetches the next blocks; host data pipeline "
+            "prefetches batches on a background thread",
+            ("repro.data.pipeline", "repro.kernels"),
+        ),
+        _T(
+            "memory_oversubscription", _K.MEMORY, "4.2",
+            (_C.OPTIMIZES_MEMORY,),
+            (_O.MEMORY_BANDWIDTH,),
+            "read ahead aggressively into deep buffers; gearbox bus widths",
+            "multi-batch prefetch depth in the data loader; double/multiple "
+            "buffering of VMEM blocks across grid steps",
+            ("repro.data.pipeline",),
+        ),
+        _T(
+            "memory_striping", _K.MEMORY, "4.3",
+            (_C.OPTIMIZES_MEMORY,),
+            (_O.MEMORY_BANDWIDTH,),
+            "stripe arrays across DRAM banks (RAID-0)",
+            "FSDP/ZeRO: weights and optimizer moments striped over the mesh "
+            "(every chip's HBM is a bank); expert striping (EP); KV-cache "
+            "head striping",
+            ("repro.runtime.sharding",),
+        ),
+        _T(
+            "type_demotion", _K.MEMORY, "4.4",
+            (_C.OPTIMIZES_MEMORY, _C.RESOURCE_NEUTRAL, _C.CODE_NEUTRAL),
+            (_O.MEMORY_BANDWIDTH, _O.RESOURCES),
+            "demote to cheaper types that still meet precision needs",
+            "bf16 compute policy; block-scaled int8 gradient compression and "
+            "int8 Adam moments (makes the 1T-param arch fit 512 chips)",
+            ("repro.core.memory.QuantizedBlock", "repro.optim.adamw",
+             "repro.optim.compress"),
+        ),
+    ]
+}
+
+
+def recommend(objective: Objective) -> List[Transformation]:
+    """The paper's cheat-sheet lookup: objective -> candidate transformations."""
+    return [t for t in TABLE1.values() if objective in t.objectives]
+
+
+def by_class(cls: TransformClass) -> List[Transformation]:
+    return [t for t in TABLE1.values() if t.cls is cls]
+
+
+# --------------------------------------------------------------------------
+# Table 2: classic software transformations and their HLS/TPU relevance.
+# --------------------------------------------------------------------------
+
+class Relevance(enum.Enum):
+    CORE = "core component of an HLS transformation"
+    DIRECT = "applies directly, as in software"
+    NONE = "little or no relevance to HLS/TPU"
+
+
+TABLE2: Dict[str, Tuple[Relevance, str]] = {
+    "loop_interchange": (Relevance.CORE, "resolves loop-carried deps (§2.1.1)"),
+    "strip_mining": (Relevance.CORE, "backbone of tiling/vectorization"),
+    "loop_tiling": (Relevance.CORE, "fit fast memory (§3.4 / BlockSpec)"),
+    "loop_distribution": (Relevance.CORE, "separate schedules (§3.3)"),
+    "loop_unrolling": (Relevance.CORE, "generates parallel hardware (§3.1/3.2)"),
+    "software_pipelining": (Relevance.CORE, "what the scheduler does (§1.2)"),
+    "loop_coalescing": (Relevance.CORE, "saves pipeline drains (§2.5)"),
+    "reduction_recognition": (Relevance.CORE, "prevents accumulation deps (§2.1)"),
+    "loop_idiom_recognition": (Relevance.CORE, "shift-buffer detection (§2.2)"),
+    "procedure_inlining": (Relevance.CORE, "required for pipelining (§2.6)"),
+    "loop_peeling": (Relevance.DIRECT, "opposite often better: coalesce (§2.5)"),
+    "simd_transforms": (Relevance.CORE, "via unrolling (§3.1)"),
+    "licm_hoisting": (Relevance.DIRECT, "saves memory operations"),
+    "loop_normalization": (Relevance.DIRECT, "useful intermediate step"),
+    "loop_reversal": (Relevance.DIRECT, "as in software"),
+    "array_padding": (Relevance.DIRECT, "lane alignment is exactly this"),
+    "scalar_replacement": (Relevance.DIRECT, "registers instead of buffers"),
+    "function_memoization": (Relevance.DIRECT, "explicit fast-memory tables"),
+    "tail_recursion_elimination": (Relevance.DIRECT, "enables hardware mapping"),
+    "regular_array_decomposition": (Relevance.DIRECT, "on/off-chip partitioning"),
+    "short_circuiting": (Relevance.NONE, "all logic is instantiated anyway"),
+    "code_colocation": (Relevance.NONE, "no runtime function calls"),
+    "vliw_transforms": (Relevance.NONE, "no instruction stream"),
+    "cache_alignment": (Relevance.NONE, "no implicit cache coherence"),
+    "supercompiling": (Relevance.NONE, "synthesis times prohibitive"),
+}

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the paper's compute hot-spots, each with
+``ops.py`` (jit'd wrapper) and ``ref.py`` (pure-jnp oracle), validated in
+interpret mode on CPU and targeting pl.pallas_call + BlockSpec on TPU.
+
+Kernels mirror the paper's §6 application examples:
+  matmul/    — §6.2 staged matrix multiplication (T0 naive ... T3 systolic)
+  stencil/   — §6.1 4-point 2D Jacobi with delay-buffer halo BlockSpecs
+  nbody/     — §6.3 tiled accumulation interleaving over resident particles
+  histogram/ — §2.3 random-access buffering as one-hot MXU reduction
+  attention/ — flash attention: §2.1 accumulation interleaving on softmax
+  wkv/       — RWKV6 recurrence, sub-chunked MXU matmul form (§Perf-1)
+"""

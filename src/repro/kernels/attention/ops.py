@@ -1,0 +1,38 @@
+"""jit'd wrapper for flash attention."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from ...core.plan import Level
+from ..common import interpret_default
+from . import ref
+from .flash import flash_attention_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "level",
+                                             "block_q", "block_kv",
+                                             "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    level: Level = Level.T3_REPLICATED,
+                    block_q: int = 512, block_kv: int = 512,
+                    interpret: Optional[bool] = None) -> jax.Array:
+    """(B, H, S, hd) attention.  T0/T1 materialize (S, S); T2+ run the
+    online-softmax Pallas kernel."""
+    if interpret is None:
+        interpret = interpret_default()
+    if level in (Level.T0_NAIVE, Level.T1_PIPELINED):
+        return ref.attention_ref(q, k, v, causal=causal, window=window)
+    s = q.shape[2]
+    bq = min(block_q, s)
+    bkv = min(block_kv, s)
+    while s % bq:
+        bq //= 2
+    while s % bkv:
+        bkv //= 2
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  block_q=bq, block_kv=bkv,
+                                  interpret=interpret)

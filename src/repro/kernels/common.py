@@ -1,0 +1,14 @@
+"""Shared kernel utilities: interpret-mode dispatch, grid helpers."""
+from __future__ import annotations
+
+import jax
+
+
+def on_cpu() -> bool:
+    """Kernels run interpret=True on CPU (the container) and compiled on
+    real TPUs — same source, per the assignment's validation scheme."""
+    return jax.default_backend() == "cpu"
+
+
+def interpret_default() -> bool:
+    return on_cpu()

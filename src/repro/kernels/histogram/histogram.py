@@ -1,0 +1,65 @@
+"""Pallas histogram — random-access buffering (§2.3) without random access.
+
+The paper's FPGA version scatters increments into an on-chip bin buffer and
+breaks the read-modify-write dependency with banked partials (§2.1).  A TPU
+has no scatter unit; the adaptation keeps the *structure* (on-chip partial
+bins, revisited once per block) but turns the update into dataflow the
+hardware has: a one-hot compare (VPU) reduced over the block (MXU-friendly
+matmul with a ones-vector, here a sum over the sublane axis).  The bank
+array is literally the 8-row sublane dimension: 8 partial histograms
+accumulate independently (accumulation interleaving §2.1.3) and collapse
+once at the end.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _hist_kernel(v_ref, o_ref, acc_ref, *, n_blocks: int, n_bins: int,
+                 banks: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    v = v_ref[...]                              # (banks, bn // banks)
+    # one-hot compare: (banks, bn/banks, n_bins) VPU predicate
+    bins = jax.lax.broadcasted_iota(jnp.int32, (1, 1, n_bins), 2)
+    onehot = (v[:, :, None] == bins).astype(jnp.int32)
+    acc_ref[...] += onehot.sum(axis=1)          # (banks, n_bins) partials
+
+    @pl.when(i == n_blocks - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].sum(axis=0, keepdims=True) \
+            .astype(o_ref.dtype)
+
+
+def histogram_pallas(values: jax.Array, n_bins: int = 256, *,
+                     block: int = 2048, banks: int = 8,
+                     interpret: bool = False) -> jax.Array:
+    n = values.shape[0]
+    block = min(block, n)
+    assert n % block == 0 and block % banks == 0, (n, block, banks)
+    n_blocks = n // block
+    v2d = values.reshape(n_blocks * banks, block // banks)
+
+    kernel = functools.partial(_hist_kernel, n_blocks=n_blocks,
+                               n_bins=n_bins, banks=banks)
+    out = pl.pallas_call(
+        kernel,
+        grid=(n_blocks,),
+        in_specs=[pl.BlockSpec((banks, block // banks), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, n_bins), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, n_bins), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((banks, n_bins), jnp.int32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(v2d)
+    return out[0]

@@ -1,0 +1,33 @@
+"""jit'd wrapper for the histogram kernel."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ...core.plan import Level
+from ..common import interpret_default
+from . import ref
+from .histogram import histogram_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("n_bins", "level", "block",
+                                             "interpret"))
+def histogram(values: jax.Array, n_bins: int = 256, *,
+              level: Level = Level.T3_REPLICATED, block: int = 2048,
+              interpret: Optional[bool] = None) -> jax.Array:
+    if interpret is None:
+        interpret = interpret_default()
+    if level in (Level.T0_NAIVE, Level.T1_PIPELINED):
+        return ref.histogram_ref(values, n_bins)
+    n = values.shape[0]
+    block = min(block, n)
+    while n % block or block % 8:
+        block //= 2
+    return histogram_pallas(values, n_bins, block=max(block, 8),
+                            interpret=interpret)
+
+
+__all__ = ["histogram"]

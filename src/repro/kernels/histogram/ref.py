@@ -1,0 +1,10 @@
+"""Oracle for the histogram kernel (paper §2.3, Lst. 6)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def histogram_ref(values: jax.Array, n_bins: int = 256) -> jax.Array:
+    """values: (N,) int32 in [0, n_bins) -> counts (n_bins,) int32."""
+    return jnp.bincount(values, length=n_bins).astype(jnp.int32)

@@ -1,0 +1,1 @@
+from .ops import matmul  # noqa: F401

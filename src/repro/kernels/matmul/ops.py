@@ -1,0 +1,45 @@
+"""jit'd public wrapper for the staged matmul."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ...core.plan import Level
+from ...core.scaling import TilePlan, TilePlanner
+from ..common import interpret_default
+from . import ref
+from .matmul import matmul_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("level", "plan", "interpret"))
+def matmul(a: jax.Array, b: jax.Array, *, level: Level = Level.T3_REPLICATED,
+           plan: Optional[TilePlan] = None,
+           interpret: Optional[bool] = None) -> jax.Array:
+    """C = A @ B at a paper-§6.2 optimization stage.
+
+    T0: naive K-loop (loop-carried dependency; measured, never used).
+    T1: pipelined — XLA dot with f32 accumulation (dependency resolved by
+        reduction recognition, §2.1/Tab. 2).
+    T2+: Pallas kernel; BlockSpecs from the TilePlanner (T2 uses minimal
+        MXU-aligned 128 blocks = vectorization only; T3 uses the VMEM-
+        budget-maximal plan = +replication/tiling).
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    if level == Level.T0_NAIVE:
+        return ref.matmul_t0_naive(a, b)
+    if level == Level.T1_PIPELINED:
+        return ref.matmul_ref(a, b)
+    n, k = a.shape
+    _, m = b.shape
+    if plan is None:
+        if level == Level.T2_VECTORIZED:
+            plan = TilePlan(128, 128, 128, 0, (n // 128, m // 128, k // 128),
+                            0.0, 0.0)
+        else:
+            plan = TilePlanner().plan_matmul(
+                n, m, k, in_bytes=a.dtype.itemsize)
+    return matmul_pallas(a, b, plan, interpret=interpret)

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the staged matmul kernels (paper §6.2).
+
+T0 (naive) is also *expressed* here the way the paper's Lst. 1a is: an
+explicit K-inner loop accumulating into one scalar-per-(n,m) register — the
+loop-carried dependency the transformations remove.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jax.Array, b: jax.Array,
+               acc_dtype=jnp.float32) -> jax.Array:
+    """C = A @ B with f32 accumulation — the oracle for all stages."""
+    return jnp.dot(a, b, preferred_element_type=acc_dtype) \
+        .astype(acc_dtype)
+
+
+def matmul_t0_naive(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Paper Lst. 1a: K-loop with a loop-carried accumulation dependency.
+    On TPU this lowers to a sequential fori_loop of rank-1 updates — the
+    initiation-interval disaster the paper's §2.1 removes.  Kept tiny-only
+    (benchmarks use small shapes); exists to *measure* the T0 stage."""
+    n, k = a.shape
+    k2, m = b.shape
+    assert k == k2
+
+    def body(i, acc):
+        return acc + jnp.outer(a[:, i], b[i, :])
+
+    return jax.lax.fori_loop(
+        0, k, body, jnp.zeros((n, m), jnp.float32))

@@ -1,0 +1,1 @@
+from .ops import nbody_accel  # noqa: F401

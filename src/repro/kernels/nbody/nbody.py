@@ -1,0 +1,77 @@
+"""Pallas N-body kernel — the paper's §6.3 design, TPU-adapted.
+
+Paper version: L resident particles held in registers per PE, interacting
+particles streamed through a systolic chain; the loop-carried dependency on
+the acceleration accumulator is broken by interleaving across the L
+residents (§2.1.2).
+
+TPU version: a (3, bt) block of *target* particles is the "resident" set —
+it stays pinned in VMEM across the source grid axis while (3, bs) source
+blocks stream through (the pallas_call DMA pipeline is the systolic data
+stream, §3.3/§4.1).  The accumulator scratch (3, bt) is revisited once per
+source block: the same tiled accumulation interleaving, with the VPU lane
+dimension (targets) playing the role of the FPGA's parallel PEs (§3.2).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .ref import SOFTENING
+
+
+def _nbody_kernel(tp_ref, sp_ref, sm_ref, o_ref, acc_ref, *,
+                  n_src: int, eps: float):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    tp = tp_ref[...]                     # (3, bt) resident targets
+    sp = sp_ref[...]                     # (3, bs) streamed sources
+    sm = sm_ref[...]                     # (1, bs)
+    # pairwise (bt, bs) interaction tile — all VPU work
+    diff = sp[:, None, :] - tp[:, :, None]          # (3, bt, bs)
+    r2 = jnp.sum(jnp.square(diff), axis=0) + eps * eps
+    inv_r = jax.lax.rsqrt(r2)
+    w = (inv_r / r2) * sm                           # (bt, bs) masses folded
+    acc_ref[...] += jnp.einsum("cts,ts->ct", diff, w,
+                               preferred_element_type=jnp.float32)
+
+    @pl.when(j == n_src - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def nbody_pallas(pos: jax.Array, mass: jax.Array, *, block_targets: int = 512,
+                 block_sources: int = 512, eps: float = SOFTENING,
+                 interpret: bool = False) -> jax.Array:
+    _, n = pos.shape
+    bt = min(block_targets, n)
+    bs = min(block_sources, n)
+    assert n % bt == 0 and n % bs == 0, (n, bt, bs)
+    n_src = n // bs
+    grid = (n // bt, n_src)
+    mass2d = mass[None, :]               # (1, N) — sublane-friendly
+
+    kernel = functools.partial(_nbody_kernel, n_src=n_src, eps=eps)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((3, bt), lambda i, j: (0, i)),   # resident targets
+            pl.BlockSpec((3, bs), lambda i, j: (0, j)),   # streamed sources
+            pl.BlockSpec((1, bs), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((3, bt), lambda i, j: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((3, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((3, bt), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(pos, pos, mass2d)

@@ -1,0 +1,39 @@
+"""jit'd wrapper for the N-body acceleration kernel."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ...core.plan import Level
+from ..common import interpret_default
+from . import ref
+from .nbody import nbody_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("level", "block_targets",
+                                             "block_sources", "interpret"))
+def nbody_accel(pos: jax.Array, mass: jax.Array, *,
+                level: Level = Level.T3_REPLICATED,
+                block_targets: int = 512, block_sources: int = 512,
+                interpret: Optional[bool] = None) -> jax.Array:
+    """Gravitational accelerations, staged per paper §6.3.
+
+    T0/T1: jnp reference (materializes the full (N, N) interaction tensor —
+    the naive memory pattern).  T2+: Pallas kernel with VMEM-resident target
+    blocks and streamed source blocks (tiled accumulation interleaving)."""
+    if interpret is None:
+        interpret = interpret_default()
+    if level in (Level.T0_NAIVE, Level.T1_PIPELINED):
+        return ref.nbody_accel_ref(pos, mass)
+    n = pos.shape[1]
+    bt = min(block_targets, n)
+    bs = min(block_sources, n)
+    while n % bt:
+        bt //= 2
+    while n % bs:
+        bs //= 2
+    return nbody_pallas(pos, mass, block_targets=bt, block_sources=bs,
+                        interpret=interpret)

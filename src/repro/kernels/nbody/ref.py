@@ -1,0 +1,22 @@
+"""Oracle for gravitational N-body acceleration (paper §6.3).
+
+SoA layout (pos (3, N), mass (N,)) — the lane dimension is the particle
+index, the TPU-native form of the paper's 512-bit vector extraction.
+Plummer-softened gravity: a_i = sum_j m_j (r_j - r_i) / (|r|^2 + eps^2)^1.5.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+SOFTENING = 1e-3
+
+
+def nbody_accel_ref(pos: jax.Array, mass: jax.Array,
+                    eps: float = SOFTENING) -> jax.Array:
+    """pos: (3, N) f32; mass: (N,) f32 -> accel (3, N) f32."""
+    diff = pos[:, None, :] - pos[:, :, None]          # (3, i, j): r_j - r_i
+    r2 = jnp.sum(jnp.square(diff), axis=0) + eps * eps
+    inv_r3 = jax.lax.rsqrt(r2) / r2                   # (i, j)
+    w = inv_r3 * mass[None, :]
+    return jnp.einsum("cij,ij->ci", diff, w)

@@ -1,0 +1,1 @@
+from .ops import jacobi4  # noqa: F401

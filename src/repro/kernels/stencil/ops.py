@@ -1,0 +1,46 @@
+"""jit'd wrapper for the Jacobi stencil."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ...core.plan import Level
+from ...core.scaling import TilePlanner
+from ..common import interpret_default
+from . import ref
+from .stencil import jacobi4_pallas
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("steps", "level", "block_rows",
+                                    "interpret"))
+def jacobi4(x: jax.Array, *, steps: int = 1,
+            level: Level = Level.T3_REPLICATED,
+            block_rows: Optional[int] = None,
+            interpret: Optional[bool] = None) -> jax.Array:
+    """`steps` sweeps of the 4-point Jacobi stencil.
+
+    T0/T1 run the jnp reference (XLA fuses the shifted adds); T2+ run the
+    Pallas delay-buffer kernel.  On real TPUs the iteration over `steps`
+    is the paper's §3.3 systolic time-replication: P consecutive sweeps
+    chained through VMEM-resident stripes.
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    if level in (Level.T0_NAIVE, Level.T1_PIPELINED):
+        return ref.jacobi4_iter_ref(x, steps)
+    if block_rows is None:
+        rows, cols = x.shape
+        br, _ = TilePlanner().plan_stencil(rows, cols,
+                                           dtype_bytes=x.dtype.itemsize)
+        block_rows = min(br, rows)
+        while rows % block_rows:
+            block_rows //= 2
+
+    def body(_, x):
+        return jacobi4_pallas(x, block_rows=block_rows, interpret=interpret)
+
+    return jax.lax.fori_loop(0, steps, body, x)

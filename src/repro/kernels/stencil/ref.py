@@ -1,0 +1,24 @@
+"""Oracle for the 4-point 2D Jacobi stencil (paper §6.1, Lst. 4).
+
+Boundary convention: boundary cells are copied through unchanged; interior
+cells become the mean of their 4 neighbors.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def jacobi4_ref(x: jax.Array) -> jax.Array:
+    north = x[:-2, 1:-1]
+    south = x[2:, 1:-1]
+    west = x[1:-1, :-2]
+    east = x[1:-1, 2:]
+    interior = 0.25 * (north + south + west + east)
+    return x.at[1:-1, 1:-1].set(interior.astype(x.dtype))
+
+
+def jacobi4_iter_ref(x: jax.Array, steps: int) -> jax.Array:
+    def body(_, x):
+        return jacobi4_ref(x)
+    return jax.lax.fori_loop(0, steps, body, x)

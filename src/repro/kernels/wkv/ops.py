@@ -1,0 +1,35 @@
+"""jit'd public wrapper for the Pallas WKV kernel."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..common import interpret_default
+from .wkv import wkv_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "subchunk",
+                                             "interpret"))
+def wkv(r: jax.Array, k: jax.Array, v: jax.Array, lw: jax.Array,
+        u: jax.Array, *, chunk: int = 64, subchunk: int = 16,
+        interpret: Optional[bool] = None) -> jax.Array:
+    """RWKV6 WKV recurrence on the MXU.
+
+    r,k,v: (B, S, H, hd); lw: (B, S, H, hd) log-decays (<= 0, f32);
+    u: (H, hd) bonus.  Returns (B, S, H, hd) f32.
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    b, s, h, hd = r.shape
+
+    def fold(x):
+        return jnp.moveaxis(x, 2, 1).reshape(b * h, s, hd)
+
+    u_bh = jnp.broadcast_to(u[None], (b, h, hd)).reshape(b * h, 1, hd)
+    out = wkv_pallas(fold(r), fold(k), fold(v), fold(lw.astype(jnp.float32)),
+                     u_bh.astype(jnp.float32), chunk=chunk,
+                     subchunk=subchunk, interpret=interpret)
+    return jnp.moveaxis(out.reshape(b, h, s, hd), 1, 2)

@@ -1,0 +1,13 @@
+"""Oracle for the WKV kernel: the validated chunked implementation from
+repro.models.rwkv (itself tested against a per-timestep recurrence)."""
+from __future__ import annotations
+
+import jax
+
+from ...models.rwkv import wkv_chunked
+
+
+def wkv_ref(r, k, v, lw, u, *, chunk: int = 64):
+    """r,k,v,lw: (B, S, H, hd); u: (H, hd) -> (B, S, H, hd) f32."""
+    out, _ = wkv_chunked(r, k, v, lw, u, chunk=chunk, intra="direct")
+    return out

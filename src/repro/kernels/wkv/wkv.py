@@ -1,0 +1,130 @@
+"""Pallas WKV kernel — the §Perf-1 blueprint as hardware.
+
+The XLA lowering of the chunked WKV recurrence spills its (c, c, hd) decay
+tensor to HBM every chunk (the measured memory-dominant term of rwkv6-7b
+training).  This kernel is the paper's prescription executed at the kernel
+level:
+
+* the chunk loop is the sequential grid axis; the (hd, hd) state matrix is
+  a VMEM scratch accumulator revisited once per chunk — tiled accumulation
+  interleaving (§2.1.2);
+* within a chunk, the intra-chunk attention uses the sub-chunked
+  *matmul form* (§2.1.1 transposition): off-diagonal sub-blocks are
+  boundary-normalized (sc, hd) x (hd, sc) MXU matmuls, diagonal blocks a
+  small (sc, sc, hd) direct product — everything VMEM-resident
+  (c=64, hd=64: the largest temporary is 1 MiB);
+* the batch*heads grid axis is 'parallel' — replication (§3.2).
+
+VMEM working set per grid step (c=64, hd=64, f32): 4 inputs x 16 KiB +
+state 16 KiB + diag temp 1 MiB + out 16 KiB << 16 MiB budget — the
+TilePlanner-style claim the roofline napkin math uses.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, o_ref, s_ref, *,
+                n_chunks: int, c: int, sc: int, hd: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    f32 = jnp.float32
+    r = r_ref[0].astype(f32)          # (c, hd)
+    k = k_ref[0].astype(f32)
+    v = v_ref[0].astype(f32)
+    lw = lw_ref[0].astype(f32)
+    u = u_ref[0].astype(f32)          # (1, hd)
+    S = s_ref[...]                    # (hd, hd)
+
+    cum = jnp.cumsum(lw, axis=0)      # inclusive, decreasing (lw <= 0)
+    ecum = cum - lw                   # exclusive
+
+    # inter-chunk contribution (exponents <= 0)
+    r_in = r * jnp.exp(ecum)
+    o_inter = jnp.dot(r_in, S, preferred_element_type=f32)
+
+    # intra-chunk: sub-chunked matmul form (§2.1.1)
+    nsc = c // sc
+    rows = []
+    for a in range(nsc):
+        ra = r[a * sc:(a + 1) * sc]
+        ecum_a = ecum[a * sc:(a + 1) * sc]
+        m_prev_a = cum[a * sc - 1] if a > 0 else jnp.zeros((hd,), f32)
+        ra_s = ra * jnp.exp(ecum_a - m_prev_a[None, :])
+        acc_a = jnp.zeros((sc, hd), f32)
+        for b in range(a):
+            kb = k[b * sc:(b + 1) * sc]
+            cum_b = cum[b * sc:(b + 1) * sc]
+            m_b = cum[(b + 1) * sc - 1]
+            # fold the (b, a-1] boundary-gap decay into kb (exponent <= 0)
+            kb_s = kb * jnp.exp(m_b[None, :] - cum_b) \
+                * jnp.exp(m_prev_a - m_b)[None, :]
+            att = jnp.dot(ra_s, kb_s.T, preferred_element_type=f32)
+            acc_a += jnp.dot(att, v[b * sc:(b + 1) * sc],
+                             preferred_element_type=f32)
+        # diagonal block: direct masked product at (sc, sc, hd)
+        ka = k[a * sc:(a + 1) * sc]
+        va = v[a * sc:(a + 1) * sc]
+        cum_a = cum[a * sc:(a + 1) * sc]
+        expo = ecum_a[:, None, :] - cum_a[None, :, :]
+        tri = jax.lax.broadcasted_iota(jnp.int32, (sc, sc), 0) \
+            > jax.lax.broadcasted_iota(jnp.int32, (sc, sc), 1)
+        w = jnp.where(tri[:, :, None], jnp.exp(jnp.maximum(expo, -60.0)),
+                      0.0)
+        att_d = jnp.sum(ra[:, None, :] * ka[None, :, :] * w, axis=-1)
+        acc_a += jnp.dot(att_d, va, preferred_element_type=f32)
+        rows.append(acc_a)
+    out = o_inter + jnp.concatenate(rows, axis=0)
+
+    # bonus diagonal term
+    bonus = jnp.sum(r * (u * k), axis=-1, keepdims=True)
+    out = out + bonus * v
+
+    # state update (exponents <= 0)
+    total = cum[-1]
+    k_dec = k * jnp.exp(total[None, :] - cum)
+    s_ref[...] = jnp.exp(total)[:, None] * S \
+        + jnp.dot(k_dec.T, v, preferred_element_type=f32)
+    o_ref[0] = out.astype(o_ref.dtype)
+
+
+def wkv_pallas(r, k, v, lw, u, *, chunk: int = 64, subchunk: int = 16,
+               interpret: bool = False):
+    """r,k,v,lw: (BH, S, hd); u: (BH, 1, hd) -> out (BH, S, hd) f32."""
+    bh, s, hd = r.shape
+    c = min(chunk, s)
+    while c > 1 and s % c:
+        c //= 2
+    sc = min(subchunk, c)
+    while sc > 1 and c % sc:
+        sc //= 2
+    n_chunks = s // c
+
+    kernel = functools.partial(_wkv_kernel, n_chunks=n_chunks, c=c, sc=sc,
+                               hd=hd)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, c, hd), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, c, hd), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, c, hd), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, c, hd), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, 1, hd), lambda b, j: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, c, hd), lambda b, j: (b, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, hd), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(r, k, v, lw, u)

@@ -1,0 +1,397 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture x input shape) cell this driver:
+
+1. builds the production mesh — (data=16, model=16) and, unless skipped,
+   (pod=2, data=16, model=16);
+2. compiles the full-depth scanned train_step / serve_step with real
+   in/out shardings (`.lower().compile()`), records
+   ``compiled.memory_analysis()`` (fits?) and the collective schedule;
+3. runs the *cost* compiles — python-unrolled 0-layer and 1-layer-per-kind
+   variants — and affine-extrapolates exact per-step FLOPs / HBM bytes /
+   collective bytes to full depth (XLA counts scan bodies once; DESIGN.md
+   §6 explains the method and its validation);
+4. emits one JSON per cell under results/dryrun/ used by the roofline
+   report generator.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma-2b --shape train_4k
+  python -m repro.launch.dryrun --all
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+from pathlib import Path
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import ARCHS, SHAPES, get_arch, input_specs, shape_applicable
+from ..configs.base import ArchConfig, ShapeSpec
+from ..core.memory import DtypePolicy
+from ..core.model import TPU_V5E, Roofline
+from ..models.transformer import ExecOptions, Model, param_counts
+from ..optim.adamw import AdamWConfig
+from ..roofline.analysis import analyze_compiled
+from ..runtime.sharding import MeshRules, make_rules, tree_shardings
+from ..train.steps import (TrainStepConfig, abstract_train_state,
+                           make_train_step, make_serve_step)
+from .mesh import make_production_mesh
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+BIG_PARAM_THRESHOLD = 30e9      # archs above this get bf16 params + int8 Adam
+
+
+def policy_for(cfg: ArchConfig, kind: str) -> Tuple[DtypePolicy, bool]:
+    """(dtype policy, int8_moments) — type demotion §4.4 decisions."""
+    big = param_counts(cfg)["total"] >= BIG_PARAM_THRESHOLD
+    if kind in ("decode", "prefill_serve"):
+        return DtypePolicy(param=jnp.bfloat16), False
+    if big:
+        return DtypePolicy(param=jnp.bfloat16), True
+    return DtypePolicy(param=jnp.float32), False
+
+
+def block_sizes(seq: int) -> Tuple[int, int]:
+    b = min(max(512, seq // 8), 4096)
+    b = min(b, seq)
+    return b, b
+
+
+def make_constrain(rules: MeshRules):
+    def con(x):
+        if x.ndim != 3:
+            return x
+        spec = rules.activation_spec(x.shape)
+        if spec is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(rules.mesh, spec))
+    return con
+
+
+def attn_hook(rules: MeshRules):
+    """q/k/v sharding at attention entry (Megatron SP->TP transition):
+    heads over `model` when divisible; otherwise q falls back to sequence
+    sharding (its rows are independent) and k/v replicate over model."""
+    model = rules.model_axis
+    msz = rules.axis_size(model)
+
+    def hook(t, role):
+        if t.ndim != 4:
+            return t
+        b, sq, h, _hd = t.shape
+        dp = rules.dp_axes if b % rules.axis_size(rules.dp_axes) == 0 \
+            else ("data" if b % rules.axis_size("data") == 0 else None)
+        seq_ok = sq > 1 and sq % msz == 0
+        if rules.attn_prefer_seq and seq_ok:
+            # §Perf-2: sequence-parallel attention — q/k/v stay seq-sharded,
+            # all heads local; no residual-stream resharding at all
+            spec = P(dp, model, None, None) if role == "q" \
+                else P(dp, None, None, None)
+        elif h % msz == 0:
+            spec = P(dp, None, model, None)
+        elif role == "q" and seq_ok:
+            spec = P(dp, model, None, None)
+        else:
+            spec = P(dp, None, None, None)
+        return jax.lax.with_sharding_constraint(
+            t, NamedSharding(rules.mesh, spec))
+
+    return hook
+
+
+def build_model(cfg: ArchConfig, shape: ShapeSpec, mode: str,
+                rules: MeshRules, dt: DtypePolicy) -> Model:
+    bq, bkv = block_sizes(shape.seq_len)
+    opts = ExecOptions(mode=mode, block_q=bq, block_kv=bkv, remat=True,
+                       constrain=make_constrain(rules),
+                       attn_constrain=attn_hook(rules),
+                       moe_mesh=rules.mesh,
+                       moe_dp_axes=rules.dp_axes,
+                       moe_ep_axes=rules.ep_axes,
+                       expert_pad=rules.axis_size(rules.ep_axes))
+    return Model(cfg, dt=dt, opts=opts)
+
+
+# --------------------------------------------------------------------------
+# compiles
+# --------------------------------------------------------------------------
+
+def compile_train(cfg: ArchConfig, shape: ShapeSpec, rules: MeshRules,
+                  mode: str, seq_override: Optional[int] = None
+                  ) -> Tuple[object, int]:
+    seq = seq_override or shape.seq_len
+    shape_eff = dataclasses.replace(shape, seq_len=seq)
+    dt, int8 = policy_for(cfg, "train")
+    model = build_model(cfg, shape_eff, mode, rules, dt)
+    # big archs train with microbatched gradient accumulation (saved-
+    # activation stacks shrink by the microbatch count); cost compiles use
+    # one full-size batch — FLOPs/bytes are batch-linear, so the affine
+    # totals are unchanged and scan-body once-counting is avoided.
+    # deep big-vocab archs (gemma3/recurrentgemma: >=30 layers x >=200k
+    # vocab) also microbatch: their saved-carry stacks + f32-dup'd xent
+    # chunks are the measured capacity misses.
+    big = param_counts(cfg)["total"] >= BIG_PARAM_THRESHOLD
+    deep_vocab = cfg.n_layers >= 30 and cfg.vocab_size >= 200_000
+    mb = 4 if ((big or deep_vocab) and mode == "mem") else 1
+    ts_cfg = TrainStepConfig(opt=AdamWConfig(int8_moments=int8),
+                             microbatches=mb)
+    params_s0, _ = abstract_train_state(model, ts_cfg)
+    grad_sh = tree_shardings(rules, params_s0)
+    ts_cfg = dataclasses.replace(ts_cfg, grad_shardings=grad_sh)
+    step = make_train_step(model, ts_cfg)
+    params_s, opt_s = abstract_train_state(model, ts_cfg)
+    batch_s = input_specs(cfg, shape_eff)
+    p_sh = tree_shardings(rules, params_s)
+    o_sh = tree_shardings(rules, opt_s)
+    b_sh = tree_shardings(rules, batch_s, kind="batch")
+    jitted = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                     out_shardings=(p_sh, o_sh, None),
+                     donate_argnums=(0, 1))
+    with rules.mesh:
+        lowered = jitted.lower(params_s, opt_s, batch_s)
+        compiled = lowered.compile()
+    return compiled, rules.mesh.size
+
+
+def compile_prefill(cfg: ArchConfig, shape: ShapeSpec, rules: MeshRules,
+                    mode: str) -> Tuple[object, int]:
+    """Inference prefill: forward-only, last-token logits out."""
+    dt, _ = policy_for(cfg, "decode")
+    model = build_model(cfg, shape, mode, rules, dt)
+    params_s = model.param_specs()
+    batch_s = input_specs(cfg, shape)
+    p_sh = tree_shardings(rules, params_s)
+    b_sh = tree_shardings(rules, batch_s, kind="batch")
+    jitted = jax.jit(model.prefill, in_shardings=(p_sh, b_sh))
+    with rules.mesh:
+        lowered = jitted.lower(params_s, batch_s)
+        compiled = lowered.compile()
+    return compiled, rules.mesh.size
+
+
+def compile_serve(cfg: ArchConfig, shape: ShapeSpec, rules: MeshRules,
+                  mode: str) -> Tuple[object, int]:
+    dt, _ = policy_for(cfg, "decode")
+    model = build_model(cfg, shape, mode, rules, dt)
+    step = make_serve_step(model)
+    params_s = model.param_specs()
+    cache_s = model.cache_specs(shape.global_batch, shape.seq_len)
+    batch_s = input_specs(cfg, shape)
+    pos_s = jax.ShapeDtypeStruct((), jnp.int32)
+    p_sh = tree_shardings(rules, params_s)
+    c_sh = tree_shardings(rules, cache_s, kind="cache")
+    b_sh = tree_shardings(rules, batch_s, kind="batch")
+    pos_sh = NamedSharding(rules.mesh, P())
+    jitted = jax.jit(step, in_shardings=(p_sh, c_sh, b_sh, pos_sh),
+                     out_shardings=(None, c_sh), donate_argnums=(1,))
+    with rules.mesh:
+        lowered = jitted.lower(params_s, cache_s, batch_s, pos_s)
+        compiled = lowered.compile()
+    return compiled, rules.mesh.size
+
+
+def compile_cell(cfg, shape, rules, mode, seq_override=None):
+    if shape.kind == "decode":
+        return compile_serve(cfg, shape, rules, mode)
+    if shape.kind == "prefill":
+        if seq_override:
+            shape = dataclasses.replace(shape, seq_len=seq_override)
+        return compile_prefill(cfg, shape, rules, mode)
+    return compile_train(cfg, shape, rules, mode, seq_override)
+
+
+# --------------------------------------------------------------------------
+# affine cost extraction
+# --------------------------------------------------------------------------
+
+COST_KEYS = ("flops_per_device", "hbm_bytes_per_device",
+             "collective_bytes_per_chip")
+
+
+def _needs_seq_split(cfg: ArchConfig, kind, shape: ShapeSpec) -> bool:
+    """rwkv chunk loops are python-unrolled in cost mode; cap the compiled
+    sequence and extrapolate (layer cost is affine in S — no quadratic
+    terms in an SSM)."""
+    return (kind[0] == "rwkv" and shape.kind != "decode"
+            and shape.seq_len > 4096)
+
+
+def cost_terms(cfg: ArchConfig, shape: ShapeSpec, rules: MeshRules,
+               log=print) -> Dict:
+    chips = rules.mesh.size
+    counts = cfg.kind_counts()
+    cache: Dict[Tuple, Dict] = {}
+
+    def compiled_cost(kinds: Tuple, seq: Optional[int] = None) -> Dict:
+        key = (kinds, seq)
+        if key not in cache:
+            sub = cfg.with_layers(kinds)
+            t0 = time.time()
+            comp, _ = compile_cell(sub, shape, rules, "cost", seq)
+            res = analyze_compiled(comp, chips)
+            log(f"    cost[{'+'.join('/'.join(k) for k in kinds) or 'base'}"
+                f"{f'@S={seq}' if seq else ''}] "
+                f"{time.time()-t0:.1f}s flops/dev={res['flops_per_device']:.3g}")
+            cache[key] = res
+        return cache[key]
+
+    base = compiled_cost(())
+    totals = {k: base.get(k, 0.0) for k in COST_KEYS}
+    per_kind = {}
+    for kind, n in counts.items():
+        if _needs_seq_split(cfg, kind, shape):
+            s1, s2 = 2048, 4096
+            b1, b2 = compiled_cost((), s1), compiled_cost((), s2)
+            k1, k2 = compiled_cost((kind,), s1), compiled_cost((kind,), s2)
+            delta = {}
+            for key in COST_KEYS:
+                d1 = k1.get(key, 0.0) - b1.get(key, 0.0)
+                d2 = k2.get(key, 0.0) - b2.get(key, 0.0)
+                slope = (d2 - d1) / (s2 - s1)
+                delta[key] = d2 + slope * (shape.seq_len - s2)
+        else:
+            kc = compiled_cost((kind,))
+            delta = {key: kc.get(key, 0.0) - base.get(key, 0.0)
+                     for key in COST_KEYS}
+        per_kind["/".join(kind)] = delta
+        for key in COST_KEYS:
+            totals[key] += n * delta[key]
+
+    return {"base": {k: base.get(k, 0.0) for k in COST_KEYS},
+            "per_kind": per_kind,
+            "kind_counts": {"/".join(k): v for k, v in counts.items()},
+            "totals": totals}
+
+
+# --------------------------------------------------------------------------
+# cell driver
+# --------------------------------------------------------------------------
+
+def run_cell(arch: str, shape_name: str, *, multipod: bool = True,
+             cost: bool = True, out_dir: Path = RESULTS_DIR,
+             log=print) -> Dict:
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    out_dir.mkdir(parents=True, exist_ok=True)
+    out_path = out_dir / f"{arch}--{shape_name}.json"
+    result: Dict = {"arch": arch, "shape": shape_name,
+                    "shape_detail": dataclasses.asdict(shape)}
+
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        result["skipped"] = reason
+        out_path.write_text(json.dumps(result, indent=2, default=str))
+        log(f"[{arch} x {shape_name}] SKIP: {reason}")
+        return result
+
+    pc = param_counts(cfg)
+    result["params"] = pc
+    n = pc["n_active"]
+    d_tokens = shape.tokens_per_step
+    model_flops = (6.0 if shape.kind == "train" else 2.0) * n * d_tokens
+    result["model_flops"] = model_flops
+
+    meshes = {"pod": make_production_mesh(multi_pod=False)}
+    if multipod:
+        meshes["multipod"] = make_production_mesh(multi_pod=True)
+
+    big = pc["total"] >= BIG_PARAM_THRESHOLD
+    result["mesh"] = {}
+    for mesh_name, mesh in meshes.items():
+        fsdp_axes = ("pod", "data") if (big and mesh_name == "multipod") \
+            else ("data",)
+        ep_axes = ("pod", "model") if (big and mesh_name == "multipod") \
+            else ("model",)
+        rules = make_rules(mesh, fsdp=True, fsdp_axes=fsdp_axes,
+                           ep_axes=ep_axes)
+        t0 = time.time()
+        comp, chips = compile_cell(cfg, shape, rules, "mem")
+        res = analyze_compiled(comp, chips)
+        res["compile_seconds"] = round(time.time() - t0, 1)
+        hbm = TPU_V5E.hbm_bytes
+        res["fits_hbm"] = bool(res.get("peak_bytes_per_device", 0) <= hbm)
+        result["mesh"][mesh_name] = res
+        log(f"[{arch} x {shape_name}] {mesh_name}: compiled in "
+            f"{res['compile_seconds']}s; peak/dev="
+            f"{res.get('peak_bytes_per_device', 0)/2**30:.2f} GiB "
+            f"fits={res['fits_hbm']} collectives={res['collective_count']}")
+
+    if cost:
+        rules = make_rules(meshes["pod"], fsdp=True)
+        ct = cost_terms(cfg, shape, rules, log=log)
+        result["cost"] = ct
+        chips = meshes["pod"].size
+        rl = Roofline(
+            name=f"{arch}--{shape_name}", chips=chips,
+            hlo_flops=ct["totals"]["flops_per_device"] * chips,
+            hlo_bytes=ct["totals"]["hbm_bytes_per_device"] * chips,
+            collective_bytes=ct["totals"]["collective_bytes_per_chip"]
+            * chips,
+            model_flops=model_flops)
+        result["roofline"] = rl.to_dict()
+        log(f"[{arch} x {shape_name}] roofline: compute={rl.compute_s:.4f}s "
+            f"mem={rl.memory_s:.4f}s coll={rl.collective_s:.4f}s "
+            f"dominant={rl.dominant} frac={rl.roofline_fraction:.3f}")
+
+    out_path.write_text(json.dumps(result, indent=2, default=str))
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=sorted(ARCHS), default=None)
+    ap.add_argument("--shape", choices=sorted(SHAPES), default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--no-multipod", action="store_true")
+    ap.add_argument("--no-cost", action="store_true")
+    ap.add_argument("--out", type=Path, default=RESULTS_DIR)
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args(argv)
+
+    cells = []
+    if args.all:
+        for a in ARCHS:
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        cells = [(args.arch, args.shape)]
+
+    failures = []
+    for arch, shape in cells:
+        out_path = args.out / f"{arch}--{shape}.json"
+        if args.skip_existing and out_path.exists():
+            data = json.loads(out_path.read_text())
+            if "error" not in data:
+                print(f"[{arch} x {shape}] exists, skipping")
+                continue
+        try:
+            run_cell(arch, shape, multipod=not args.no_multipod,
+                     cost=not args.no_cost, out_dir=args.out)
+        except Exception as e:  # noqa: BLE001 — record, keep sweeping
+            traceback.print_exc()
+            failures.append((arch, shape, repr(e)))
+            (args.out / f"{arch}--{shape}.json").write_text(json.dumps(
+                {"arch": arch, "shape": shape, "error": repr(e)}, indent=2))
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", f)
+        sys.exit(1)
+    print("\ndry-run OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Production mesh construction (assignment-mandated shape).
+
+A function, not a module-level constant: importing this module never touches
+jax device state.  Single pod: (data=16, model=16) = 256 chips (v5e-256).
+Multi-pod: (pod=2, data=16, model=16) = 512 chips; the `pod` axis carries
+only the cross-pod gradient all-reduce (or acts as the pipeline-stage axis
+when pipeline parallelism is enabled) because inter-pod links are the
+scarcest bandwidth — the paper's "routing" objective (Tab. 1 RT) maps to
+keeping traffic off that axis.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(shape=None, axes=("data", "model")) -> jax.sharding.Mesh:
+    """Small mesh over whatever devices exist (tests / examples)."""
+    n = len(jax.devices())
+    if shape is None:
+        model = 1
+        for cand in (4, 2, 1):
+            if n % cand == 0:
+                model = cand
+                break
+        shape = (n // model, model)
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))

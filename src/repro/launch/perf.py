@@ -1,0 +1,159 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Perf-iteration driver (§Perf hillclimbs in EXPERIMENTS.md).
+
+Runs one (arch x shape) cell's cost pipeline under a named VARIANT —
+a set of transformation knobs — and appends the resulting roofline terms
+to results/perf/<cell>.jsonl.  Each EXPERIMENTS.md §Perf iteration is one
+invocation; diffs between rows are the measured effect of one change.
+
+Knobs (all optional; defaults reproduce the baseline):
+  remat=full|dots|none        activation-checkpoint policy
+  block_kv=INT                attention KV tile
+  rwkv_chunk=INT              WKV chunk length
+  fsdp=0|1                    weight striping over `data` on/off
+  seq_shard=0|1               Megatron-SP residual sharding on/off
+  capacity=FLOAT              MoE capacity factor
+  microbatches=INT            gradient-accumulation splits
+  xent_chunks=INT             sequence tiles for the loss
+  q_splits handled structurally (see layers.attention_blockwise)
+
+Usage:
+  python -m repro.launch.perf --arch rwkv6-7b --shape train_4k \\
+      --name chunk128 rwkv_chunk=128
+"""
+import argparse
+import dataclasses
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import SHAPES, get_arch, input_specs
+from ..core.model import Roofline
+from ..models.transformer import ExecOptions, Model, param_counts
+from ..optim.adamw import AdamWConfig
+from ..runtime.sharding import make_rules, tree_shardings
+from ..train.steps import TrainStepConfig, abstract_train_state, \
+    make_train_step
+from . import dryrun
+from .mesh import make_production_mesh
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "perf"
+
+
+@dataclasses.dataclass
+class Variant:
+    name: str = "baseline"
+    remat: str = "full"
+    block_kv: int = 0            # 0 = auto
+    rwkv_chunk: int = 0
+    rwkv_intra: str = ""         # "" = config default
+    fsdp: bool = True
+    seq_shard: bool = True
+    embed_stripe: bool = True
+    attn_seq: bool = False
+    capacity: float = 0.0
+    microbatches: int = 1
+    xent_chunks: int = 8
+    mem_proof: bool = False      # also run the full-depth memory compile
+
+
+def apply_variant(cfg, shape, v: Variant, rules):
+    if v.rwkv_chunk:
+        cfg = dataclasses.replace(cfg, rwkv_chunk=v.rwkv_chunk)
+    if v.rwkv_intra:
+        cfg = dataclasses.replace(cfg, rwkv_intra=v.rwkv_intra)
+    if v.capacity:
+        cfg = dataclasses.replace(cfg, capacity_factor=v.capacity)
+    bq, bkv = dryrun.block_sizes(shape.seq_len)
+    if v.block_kv:
+        bkv = v.block_kv
+    con = dryrun.make_constrain(rules) if v.seq_shard else None
+    opts = ExecOptions(
+        mode="cost", block_q=bq, block_kv=bkv, remat=v.remat != "none",
+        remat_policy=v.remat if v.remat != "none" else "full",
+        constrain=con, attn_constrain=dryrun.attn_hook(rules),
+        moe_mesh=rules.mesh, moe_dp_axes=rules.dp_axes,
+        moe_ep_axes=rules.ep_axes,
+        expert_pad=rules.axis_size(rules.ep_axes),
+        xent_chunks=v.xent_chunks)
+    return cfg, opts
+
+
+def run_variant(arch: str, shape_name: str, v: Variant, log=print):
+    cfg0 = get_arch(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh()
+    rules = make_rules(mesh, fsdp=v.fsdp)
+    rules = dataclasses.replace(rules, stripe_embed=v.embed_stripe,
+                                attn_prefer_seq=v.attn_seq)
+    chips = mesh.size
+
+    # monkey-wire the variant into the dryrun cost pipeline
+    orig_build = dryrun.build_model
+
+    def build_model(cfg, shape_, mode, rules_, dt):
+        cfg_v, opts = apply_variant(cfg, shape_, v, rules_)
+        # cost mode only here; opts already set
+        m = Model(cfg_v, dt=dt, opts=dataclasses.replace(opts, mode=mode))
+        return m
+
+    dryrun.build_model = build_model
+    try:
+        t0 = time.time()
+        ct = dryrun.cost_terms(cfg0, shape, rules, log=log)
+        pc = param_counts(cfg0)
+        d_tokens = shape.tokens_per_step
+        mf = (6.0 if shape.kind == "train" else 2.0) * pc["n_active"] \
+            * d_tokens
+        rl = Roofline(
+            name=f"{arch}--{shape_name}--{v.name}", chips=chips,
+            hlo_flops=ct["totals"]["flops_per_device"] * chips,
+            hlo_bytes=ct["totals"]["hbm_bytes_per_device"] * chips,
+            collective_bytes=ct["totals"]["collective_bytes_per_chip"]
+            * chips,
+            model_flops=mf)
+        row = {"variant": dataclasses.asdict(v), "arch": arch,
+               "shape": shape_name, "roofline": rl.to_dict(),
+               "cost": ct, "wall_s": round(time.time() - t0, 1)}
+        if v.mem_proof:
+            comp, _ = dryrun.compile_cell(cfg0, shape, rules, "mem")
+            from ..roofline.analysis import analyze_compiled
+            row["mem"] = analyze_compiled(comp, chips)
+    finally:
+        dryrun.build_model = orig_build
+
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    out = RESULTS / f"{arch}--{shape_name}.jsonl"
+    with out.open("a") as f:
+        f.write(json.dumps(row, default=str) + "\n")
+    log(f"[{v.name}] compute={rl.compute_s:.3f}s mem={rl.memory_s:.3f}s "
+        f"coll={rl.collective_s:.3f}s dominant={rl.dominant} "
+        f"step={rl.step_s:.3f}s frac={rl.roofline_fraction:.4f}")
+    return row
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--name", default="baseline")
+    ap.add_argument("--mem-proof", action="store_true")
+    ap.add_argument("knobs", nargs="*", help="key=value overrides")
+    args = ap.parse_args(argv)
+    kw = {}
+    for k in args.knobs:
+        key, val = k.split("=", 1)
+        field = Variant.__dataclass_fields__[key]
+        kw[key] = field.type(val) if field.type is not bool \
+            else val in ("1", "true", "True")
+    v = Variant(name=args.name, mem_proof=args.mem_proof, **kw)
+    run_variant(args.arch, args.shape, v)
+
+
+if __name__ == "__main__":
+    main()

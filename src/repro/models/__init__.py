@@ -1,0 +1,3 @@
+"""Model substrate: layers, MoE, RWKV6, RG-LRU, and the composable decoder."""
+
+from .transformer import Model  # noqa: F401

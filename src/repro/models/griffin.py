@@ -1,0 +1,143 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+TPU adaptation: the RG-LRU recurrence h_t = a_t * h_{t-1} + b_t is
+*diagonal*, so unlike RWKV's matrix state it maps onto
+``jax.lax.associative_scan`` — a log-depth parallel pipeline instead of a
+sequential one.  In the paper's terms this is the ultimate accumulation
+interleaving: all N partial accumulations proceed concurrently and collapse
+in log2(N) stages.  The width-4 temporal conv is a literal delay buffer
+(§2.2): a 3-deep shift register carried as decode state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+from ..core.memory import DtypePolicy
+
+Params = Dict[str, jax.Array]
+
+_C = 8.0  # Griffin's fixed gate sharpness
+
+
+@dataclasses.dataclass(frozen=True)
+class GriffinSpec:
+    d_model: int
+    lru_width: int
+    conv_width: int = 4
+    block_width: int = 256        # block-diagonal gate projections
+
+    @property
+    def n_blocks(self) -> int:
+        return self.lru_width // self.block_width
+
+
+def rglru_block_init(key, s: GriffinSpec) -> Params:
+    ks = jax.random.split(key, 7)
+    d, w = s.d_model, s.lru_width
+    nb, bw = s.n_blocks, s.block_width
+    return {
+        "w_main": dense_init(ks[0], (d, w)),
+        "w_gate": dense_init(ks[1], (d, w)),
+        "conv_w": 0.01 * jax.random.normal(ks[2], (s.conv_width, w)),
+        "conv_b": jnp.zeros((w,), jnp.float32),
+        # block-diagonal recurrence/input gates (Griffin appendix)
+        "wa": dense_init(ks[3], (nb, bw, bw), in_axis_size=bw),
+        "ba": jnp.zeros((w,), jnp.float32),
+        "wx": dense_init(ks[4], (nb, bw, bw), in_axis_size=bw),
+        "bx": jnp.zeros((w,), jnp.float32),
+        # Lambda parametrizes a in (0,1): a = sigmoid(lam)
+        "lam": jnp.linspace(2.2, 5.5, w),     # a^c in ~(0.9, 0.996)
+        "w_out": dense_init(ks[5], (w, d)),
+    }
+
+
+def _block_diag(x: jax.Array, w: jax.Array, s: GriffinSpec) -> jax.Array:
+    """x: (..., lru) @ block-diag w (nb, bw, bw) -> (..., lru)."""
+    shape = x.shape
+    x = x.reshape(shape[:-1] + (s.n_blocks, s.block_width))
+    y = jnp.einsum("...nc,ncd->...nd", x, w)
+    return y.reshape(shape)
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 prev: jax.Array) -> jax.Array:
+    """Depthwise causal conv, width K.  x: (B,S,w); prev: (B,K-1,w) delay
+    buffer (§2.2).  Implemented as K shifted multiplies (unrolled taps)."""
+    k = w.shape[0]
+    xp = jnp.concatenate([prev.astype(x.dtype), x], axis=1)   # (B, S+K-1, w)
+    out = jnp.zeros_like(x)
+    sq = x.shape[1]
+    for i in range(k):
+        out = out + xp[:, i:i + sq, :] * w[k - 1 - i].astype(x.dtype)
+    return out + b.astype(x.dtype)
+
+
+def _rglru_coeffs(p: Params, s: GriffinSpec, x: jax.Array):
+    """Gates + log-recurrence weight, all f32.  x: (..., lru)."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(_block_diag(xf, p["wa"].astype(jnp.float32), s)
+                       + p["ba"])
+    i = jax.nn.sigmoid(_block_diag(xf, p["wx"].astype(jnp.float32), s)
+                       + p["bx"])
+    log_a = -_C * r * jax.nn.softplus(p["lam"])     # log a_t <= 0
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) in a numerically safe form
+    multiplier = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = multiplier * i * xf
+    return a, b
+
+
+def rglru_scan(a: jax.Array, b: jax.Array, h0=None) -> jax.Array:
+    """h_t = a_t h_{t-1} + b_t via associative_scan over axis 1 (S)."""
+    if h0 is not None:
+        # fold the carried state into the first step
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(l, r):
+        (al, bl), (ar, br) = l, r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rglru_block_apply(p: Params, s: GriffinSpec, x: jax.Array,
+                      dt: DtypePolicy) -> jax.Array:
+    """Full Griffin recurrent block: in-proj -> conv -> RG-LRU -> gate -> out."""
+    cdt = dt.compute
+    b = x.shape[0]
+    gate = jax.nn.gelu(x @ p["w_gate"].astype(cdt), approximate=True)
+    main = x @ p["w_main"].astype(cdt)
+    prev = jnp.zeros((b, s.conv_width - 1, s.lru_width), cdt)
+    main = _causal_conv(main, p["conv_w"], p["conv_b"], prev)
+    a, bb = _rglru_coeffs(p, s, main)
+    h = rglru_scan(a, bb).astype(cdt)
+    return (h * gate) @ p["w_out"].astype(cdt)
+
+
+def rglru_block_decode(p: Params, s: GriffinSpec, x: jax.Array, cache,
+                       dt: DtypePolicy):
+    """x: (B,1,d); cache = {"h": (B,lru) f32, "conv": (B,K-1,lru)}."""
+    cdt = dt.compute
+    gate = jax.nn.gelu(x @ p["w_gate"].astype(cdt), approximate=True)
+    main = x @ p["w_main"].astype(cdt)                     # (B,1,lru)
+    conv_buf = cache["conv"]
+    main_c = _causal_conv(main, p["conv_w"], p["conv_b"], conv_buf)
+    new_conv = jnp.concatenate([conv_buf[:, 1:], main.astype(conv_buf.dtype)],
+                               axis=1)
+    a, bb = _rglru_coeffs(p, s, main_c)
+    h = a[:, 0] * cache["h"] + bb[:, 0]                    # (B, lru)
+    out = (h[:, None].astype(cdt) * gate) @ p["w_out"].astype(cdt)
+    return out, {"h": h, "conv": new_conv}
+
+
+def griffin_cache_init(b: int, s: GriffinSpec, dtype) -> Dict[str, jax.Array]:
+    return {
+        "h": jnp.zeros((b, s.lru_width), jnp.float32),
+        "conv": jnp.zeros((b, s.conv_width - 1, s.lru_width), dtype),
+    }

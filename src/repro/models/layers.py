@@ -1,0 +1,419 @@
+"""Core layers: norms, rotary embeddings, attention, MLPs, losses.
+
+Paper tie-ins (DESIGN.md §2):
+* blockwise attention = tiled accumulation interleaving (§2.1.2) applied to
+  the softmax reduction — the running (max, denom, acc) triple is the
+  "accumulation buffer", revisited once per KV tile;
+* sliding windows = delay buffering (§2.2);
+* all masks are branch-free `where` predication = condition flattening (§2.7);
+* dtype policy application = type demotion (§4.4).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.memory import DtypePolicy
+
+Params = Dict[str, jax.Array]
+
+
+# --------------------------------------------------------------------------
+# initializers
+# --------------------------------------------------------------------------
+
+def dense_init(key, shape, in_axis_size: Optional[int] = None,
+               dtype=jnp.float32) -> jax.Array:
+    fan_in = in_axis_size if in_axis_size is not None else shape[0]
+    scale = 1.0 / math.sqrt(max(fan_in, 1))
+    return scale * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32) -> jax.Array:
+    return jax.random.normal(key, shape, dtype)
+
+
+# --------------------------------------------------------------------------
+# normalization
+# --------------------------------------------------------------------------
+
+def rmsnorm_init(d: int) -> Params:
+    return {"scale": jnp.zeros((d,), jnp.float32)}
+
+
+def rmsnorm(p: Params, x: jax.Array, *, eps: float = 1e-6) -> jax.Array:
+    """Variance in f32; the normalize/scale multiplies stay in the input
+    dtype (type demotion §4.4) — this also keeps XLA from materializing a
+    full-precision copy of the residual stream per layer."""
+    dt = x.dtype
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(dt)
+    return x * inv * (1.0 + p["scale"]).astype(dt)
+
+
+# --------------------------------------------------------------------------
+# rotary position embeddings (RoPE + M-RoPE)
+# --------------------------------------------------------------------------
+
+def _rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, *, theta: float = 1e4,
+               mrope_sections: Tuple[int, ...] = ()) -> jax.Array:
+    """x: (B, S, H, hd). positions: (B, S) int32, or (B, S, 3) for M-RoPE.
+
+    M-RoPE (qwen2-vl): the hd/2 frequency slots are split into
+    ``mrope_sections`` groups, each rotated by its own position stream
+    (temporal / height / width).
+    """
+    hd = x.shape[-1]
+    freqs = _rope_freqs(hd, theta)                       # (hd/2,)
+    if mrope_sections:
+        assert positions.ndim == 3 and positions.shape[-1] == len(
+            mrope_sections)
+        sec_ids = jnp.repeat(
+            jnp.arange(len(mrope_sections)),
+            jnp.asarray(mrope_sections),
+            total_repeat_length=hd // 2)                 # (hd/2,)
+        # pos_per_freq[b, s, f] = positions[b, s, sec_ids[f]]
+        pos = jnp.take_along_axis(
+            positions.astype(jnp.float32),
+            jnp.broadcast_to(sec_ids[None, None, :],
+                             positions.shape[:2] + (hd // 2,)),
+            axis=-1)                                     # (B, S, hd/2)
+        angle = pos * freqs[None, None, :]
+    else:
+        angle = positions.astype(jnp.float32)[..., None] * freqs  # (B,S,hd/2)
+    sin = jnp.sin(angle)[:, :, None, :]
+    cos = jnp.cos(angle)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# attention
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AttnSpec:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    window: int = 0              # 0 = global causal; >0 = sliding window
+    rope_theta: float = 1e4
+    mrope_sections: Tuple[int, ...] = ()
+    qkv_bias: bool = False
+    softcap: float = 0.0
+
+
+def attention_init(key, s: AttnSpec) -> Params:
+    kq, kk, kv, ko, kb = jax.random.split(key, 5)
+    p = {
+        "wq": dense_init(kq, (s.d_model, s.n_heads, s.head_dim), s.d_model),
+        "wk": dense_init(kk, (s.d_model, s.n_kv_heads, s.head_dim), s.d_model),
+        "wv": dense_init(kv, (s.d_model, s.n_kv_heads, s.head_dim), s.d_model),
+        "wo": dense_init(ko, (s.n_heads, s.head_dim, s.d_model),
+                         s.n_heads * s.head_dim),
+    }
+    if s.qkv_bias:
+        p["bq"] = jnp.zeros((s.n_heads, s.head_dim), jnp.float32)
+        p["bk"] = jnp.zeros((s.n_kv_heads, s.head_dim), jnp.float32)
+        p["bv"] = jnp.zeros((s.n_kv_heads, s.head_dim), jnp.float32)
+    return p
+
+
+def _qkv(p: Params, s: AttnSpec, x: jax.Array, positions: jax.Array,
+         dt: DtypePolicy):
+    cdt = dt.compute
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cdt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(cdt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(cdt))
+    if s.qkv_bias:
+        q = q + p["bq"].astype(cdt)
+        k = k + p["bk"].astype(cdt)
+        v = v + p["bv"].astype(cdt)
+    q = apply_rope(q, positions, theta=s.rope_theta,
+                   mrope_sections=s.mrope_sections)
+    k = apply_rope(k, positions, theta=s.rope_theta,
+                   mrope_sections=s.mrope_sections)
+    return q, k, v
+
+
+def _expand_kv(k: jax.Array, n_heads: int) -> jax.Array:
+    """GQA: (B,S,Hkv,hd) -> (B,S,H,hd) by group broadcast."""
+    b, sq, hkv, hd = k.shape
+    g = n_heads // hkv
+    if g == 1:
+        return k
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, sq, hkv, g, hd)) \
+        .reshape(b, sq, n_heads, hd)
+
+
+def _mask(qpos: jax.Array, kpos: jax.Array, window: int) -> jax.Array:
+    """Branch-free causal (+ sliding window) mask — condition flattening."""
+    m = kpos[None, :] <= qpos[:, None]
+    if window > 0:
+        m &= kpos[None, :] > (qpos[:, None] - window)
+    return m
+
+
+def _attend_block(q, k, v, qpos, kpos, s: AttnSpec, accum_dtype):
+    """Scores + masked softmax statistics for one (q-tile, kv-tile) pair."""
+    scale = 1.0 / math.sqrt(s.head_dim)
+    scores = jnp.einsum("bqhk,bshk->bhqs", q, k).astype(accum_dtype) * scale
+    if s.softcap > 0:
+        scores = jnp.tanh(scores / s.softcap) * s.softcap
+    mask = _mask(qpos, kpos, s.window)
+    scores = jnp.where(mask[None, None, :, :], scores, -1e30)
+    return scores
+
+
+def attention_naive(p: Params, s: AttnSpec, x: jax.Array,
+                    positions: jax.Array, dt: DtypePolicy) -> jax.Array:
+    """T0/T1 reference: materializes the full (S, S) score tensor."""
+    q, k, v = _qkv(p, s, x, positions, dt)
+    k = _expand_kv(k, s.n_heads)
+    v = _expand_kv(v, s.n_heads)
+    sq = x.shape[1]
+    pos = jnp.arange(sq)
+    scores = _attend_block(q, k, v, pos, pos, s, dt.accum)
+    probs = jax.nn.softmax(scores, axis=-1).astype(dt.compute)
+    out = jnp.einsum("bhqs,bshk->bqhk", probs, v)
+    return jnp.einsum("bqhk,hkd->bqd", out, p["wo"].astype(dt.compute))
+
+
+def attention_blockwise(p: Params, s: AttnSpec, x: jax.Array,
+                        positions: jax.Array, dt: DtypePolicy, *,
+                        block_q: int = 512, block_kv: int = 512,
+                        unroll: bool = False, q_splits: int = 4,
+                        hook=None) -> jax.Array:
+    """Blockwise (flash-style) attention in pure XLA.
+
+    Tiled accumulation interleaving (§2.1.2) on the softmax reduction: the
+    running (m, l, acc) statistics are the accumulation buffer, revisited
+    once per KV tile — never materializing (S, S).
+
+    Structure chosen for SPMD sanity: q stays un-blocked (its sharding —
+    heads for TP archs, sequence for MQA archs — passes through the whole
+    computation; the ``hook(t, role)`` lets the runtime constrain q/k/v),
+    and only K/V are tiled and scanned.  Causality is exploited with
+    ``q_splits`` *static* sequence quarters, each scanning only the KV
+    range its rows can see — recovering most of the causal/window FLOP
+    savings without a dynamic q loop that GSPMD would try to partition.
+    ``unroll=True`` (dry-run cost compiles) python-unrolls the KV scans so
+    ``cost_analysis`` counts every tile with identical math/FLOPs.
+    """
+    del block_q  # q is not blocked in this formulation
+    b, sq, _ = x.shape
+    hook = hook or (lambda t, _role: t)
+    q, k, v = _qkv(p, s, x, positions, dt)
+    q = hook(q, "q")
+    k = hook(k, "kv")
+    v = hook(v, "kv")
+    k = _expand_kv(k, s.n_heads)
+    v = _expand_kv(v, s.n_heads)
+
+    block_kv = min(block_kv, sq)
+    while block_kv > 1 and sq % block_kv:
+        block_kv //= 2
+    nkv = sq // block_kv
+    h, hd = s.n_heads, s.head_dim
+    scale = 1.0 / math.sqrt(hd)
+
+    kb = jnp.moveaxis(k.reshape(b, nkv, block_kv, h, hd), 1, 0)
+    vb = jnp.moveaxis(v.reshape(b, nkv, block_kv, h, hd), 1, 0)
+
+    while q_splits > 1 and sq % q_splits != 0:
+        q_splits //= 2
+    qlen = sq // q_splits
+
+    def kv_step(carry, kj, q_slice, qpos):
+        m, l, acc = carry
+        kpos = kj * block_kv + jnp.arange(block_kv)
+        sc = jnp.einsum("bqhk,bshk->bhqs", q_slice,
+                        jax.lax.dynamic_index_in_dim(kb, kj, 0, False)) \
+            .astype(dt.accum) * scale
+        if s.softcap > 0:
+            sc = jnp.tanh(sc / s.softcap) * s.softcap
+        msk = _mask(qpos, kpos, s.window)[None, None]
+        sc = jnp.where(msk, sc, -1e30)
+        m_new = jnp.maximum(m, sc.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        pexp = jnp.exp(sc - m_new[..., None])
+        l_new = l * alpha + pexp.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhqs,bshk->bhqk", pexp.astype(dt.compute),
+            jax.lax.dynamic_index_in_dim(vb, kj, 0, False)).astype(dt.accum)
+        return (m_new, l_new, acc_new)
+
+    outs = []
+    for qi in range(q_splits):
+        q_lo, q_hi = qi * qlen, (qi + 1) * qlen - 1
+        q_slice = jax.lax.slice_in_dim(q, q_lo, q_hi + 1, axis=1)
+        qpos = jnp.arange(q_lo, q_hi + 1)
+        # static KV range this quarter can see (causal upper bound,
+        # window lower bound) — condition flattening at compile time
+        kj_hi = min(nkv - 1, q_hi // block_kv)
+        kj_lo = 0
+        if s.window > 0:
+            kj_lo = max(0, (q_lo - s.window + 1) // block_kv)
+        m0 = jnp.full((b, h, qlen), -1e30, dt.accum)
+        l0 = jnp.zeros((b, h, qlen), dt.accum)
+        a0 = jnp.zeros((b, h, qlen, hd), dt.accum)
+        if unroll:
+            carry = (m0, l0, a0)
+            for kj in range(kj_lo, kj_hi + 1):
+                carry = kv_step(carry, kj, q_slice, qpos)
+            m, l, acc = carry
+        else:
+            def body(c, kj, _q=q_slice, _p=qpos):
+                return kv_step(c, kj, _q, _p), None
+            (m, l, acc), _ = jax.lax.scan(
+                body, (m0, l0, a0), jnp.arange(kj_lo, kj_hi + 1))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        outs.append(out.astype(dt.compute))      # (b, h, qlen, hd)
+
+    out = jnp.concatenate(outs, axis=2) if len(outs) > 1 else outs[0]
+    out = jnp.moveaxis(out, 1, 2)                # (b, sq, h, hd)
+    return jnp.einsum("bqhk,hkd->bqd", out, p["wo"].astype(dt.compute))
+
+
+def attention_decode(p: Params, s: AttnSpec, x: jax.Array, pos: jax.Array,
+                     k_cache: jax.Array, v_cache: jax.Array,
+                     dt: DtypePolicy,
+                     positions_override: Optional[jax.Array] = None
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode against a KV cache.
+
+    x: (B, 1, d).  pos: scalar int32 current position (batch-uniform).
+    caches: (B, C, Hkv, hd) where C = S_max (global) or window (rolling —
+    the delay-buffer §2.2 layout: slot = pos mod window).
+    Returns (out (B,1,d), k_cache, v_cache).
+    """
+    b = x.shape[0]
+    cap = k_cache.shape[1]
+    positions = (positions_override if positions_override is not None
+                 else jnp.full((b, 1), pos, jnp.int32))
+    q, k, v = _qkv(p, s, x, positions, dt)
+    slot = pos % cap if s.window > 0 else pos
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        k_cache, k.astype(k_cache.dtype), slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        v_cache, v.astype(v_cache.dtype), slot, axis=1)
+
+    kk = _expand_kv(k_cache.astype(dt.compute), s.n_heads)
+    vv = _expand_kv(v_cache.astype(dt.compute), s.n_heads)
+    scale = 1.0 / math.sqrt(s.head_dim)
+    sc = jnp.einsum("bqhk,bshk->bhqs", q, kk).astype(dt.accum) * scale
+    if s.softcap > 0:
+        sc = jnp.tanh(sc / s.softcap) * s.softcap
+    idx = jnp.arange(cap)
+    if s.window > 0:
+        # rolling buffer: slot i holds absolute position
+        #   pos - ((slot - i) mod cap)
+        age = (slot - idx) % cap
+        valid = (age >= 0) & (pos - age >= 0) & (age < s.window)
+    else:
+        valid = idx <= pos
+    sc = jnp.where(valid[None, None, None, :], sc, -1e30)
+    probs = jax.nn.softmax(sc, axis=-1).astype(dt.compute)
+    out = jnp.einsum("bhqs,bshk->bqhk", probs, vv)
+    out = jnp.einsum("bqhk,hkd->bqd", out, p["wo"].astype(dt.compute))
+    return out, k_cache, v_cache
+
+
+# --------------------------------------------------------------------------
+# MLPs
+# --------------------------------------------------------------------------
+
+def mlp_init(key, d: int, ff: int, activation: str) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    if activation in ("swiglu", "geglu"):
+        return {"wg": dense_init(k1, (d, ff)),
+                "wu": dense_init(k2, (d, ff)),
+                "wd": dense_init(k3, (ff, d))}
+    return {"wi": dense_init(k1, (d, ff)), "wd": dense_init(k2, (ff, d))}
+
+
+def mlp_apply(p: Params, x: jax.Array, activation: str,
+              dt: DtypePolicy) -> jax.Array:
+    cdt = dt.compute
+    if activation in ("swiglu", "geglu"):
+        g = x @ p["wg"].astype(cdt)
+        u = x @ p["wu"].astype(cdt)
+        act = jax.nn.silu(g) if activation == "swiglu" \
+            else jax.nn.gelu(g, approximate=True)
+        return (act * u) @ p["wd"].astype(cdt)
+    h = x @ p["wi"].astype(cdt)
+    h = jax.nn.relu(h) if activation == "relu" \
+        else jax.nn.gelu(h, approximate=True)
+    return h @ p["wd"].astype(cdt)
+
+
+# --------------------------------------------------------------------------
+# vocab-parallel cross entropy
+# --------------------------------------------------------------------------
+
+def softmax_xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean token cross-entropy.  logits (..., V) f32; labels (...) int32.
+
+    Written max/sum-first so GSPMD turns the vocab reductions into psums
+    when V is sharded over the `model` axis (vocab-parallel loss) without
+    ever gathering the full logits on one device (striping §4.3).
+    """
+    logits = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(logits.max(axis=-1, keepdims=True))
+    shifted = logits - m
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1))
+    label_logit = jnp.take_along_axis(
+        shifted, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - label_logit)
+
+
+def chunked_xent(x: jax.Array, head: jax.Array, labels: jax.Array, *,
+                 n_chunks: int, unroll: bool, remat: bool = True
+                 ) -> jax.Array:
+    """Head matmul + cross entropy, tiled over the sequence (§3.4 tiling).
+
+    The (B, S, V) logits tensor of a 256k-vocab model is the largest
+    activation in training by an order of magnitude; computing it one
+    sequence-tile at a time (and rematerializing in the backward pass)
+    keeps only (B, S/n_chunks, V) alive — the same transformation the
+    paper applies to fit on-chip buffers.  x: (B, S, d) post-final-norm.
+    """
+    b, sq, d = x.shape
+    while n_chunks > 1 and sq % n_chunks != 0:
+        n_chunks //= 2
+    c = sq // n_chunks
+    xc = jnp.moveaxis(x.reshape(b, n_chunks, c, d), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(b, n_chunks, c), 1, 0)
+
+    def chunk(x_c, l_c):
+        logits = (x_c @ head).astype(jnp.float32)
+        m = jax.lax.stop_gradient(logits.max(axis=-1, keepdims=True))
+        shifted = logits - m
+        lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1))
+        label_logit = jnp.take_along_axis(
+            shifted, l_c[..., None], axis=-1)[..., 0]
+        return jnp.sum(lse - label_logit)
+
+    if remat:
+        chunk = jax.checkpoint(chunk)
+
+    if unroll or n_chunks == 1:
+        total = jnp.zeros((), jnp.float32)
+        for i in range(n_chunks):
+            total = total + chunk(xc[i], lc[i])
+    else:
+        def body(tot, args):
+            return tot + chunk(*args), None
+        total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xc, lc))
+    return total / (b * sq)

@@ -1,0 +1,158 @@
+"""Mixture-of-Experts with sort-based capacity dispatch.
+
+Paper tie-ins:
+* experts sharded over the `model` mesh axis = memory striping (§4.3) —
+  every chip's HBM holds E/n_model expert shards;
+* fixed per-expert capacity + drop = condition flattening (§2.7): the
+  variable-length token->expert routing becomes branch-free masked writes
+  into a dense (E, C, d) buffer, which is what spatial hardware (MXU) wants;
+* the dispatch gather/scatter is memory access extraction (§4.1): routing
+  (addresses) is computed apart from the expert matmuls (compute).
+
+Compute cost is proportional to *active* parameters (top_k + shared), times
+the capacity factor — there is no dense-all-experts fallback, so the
+dry-run's HLO FLOPs stay honest for the MoE archs (qwen2-moe, kimi-k2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, mlp_init, mlp_apply
+from ..core.memory import DtypePolicy
+
+Params = Dict[str, jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoESpec:
+    d_model: int
+    n_experts: int
+    top_k: int
+    d_expert: int                 # per-expert FFN width
+    n_shared_experts: int = 0
+    shared_d_expert: int = 0      # width of the fused shared-expert MLP
+    capacity_factor: float = 1.25
+    activation: str = "swiglu"
+    aux_loss_coef: float = 0.001
+    norm_topk: bool = True
+    # experts padded to a multiple of the EP axis (dummies never routed;
+    # set by the runtime to the mesh's model-axis size)
+    pad_to: int = 1
+
+    @property
+    def e_pad(self) -> int:
+        return -(-self.n_experts // self.pad_to) * self.pad_to
+
+    def capacity(self, n_tokens: int) -> int:
+        c = math.ceil(n_tokens * self.top_k * self.capacity_factor
+                      / self.n_experts)
+        return max(8, -(-c // 8) * 8)     # sublane-aligned (§3.1)
+
+
+def moe_init(key, s: MoESpec) -> Params:
+    kr, kg, ku, kd, ks = jax.random.split(key, 5)
+    e, d, f = s.e_pad, s.d_model, s.d_expert
+    p = {
+        "router": dense_init(kr, (d, e)),
+        "wg": dense_init(kg, (e, d, f), in_axis_size=d),
+        "wu": dense_init(ku, (e, d, f), in_axis_size=d),
+        "wd": dense_init(kd, (e, f, d), in_axis_size=f),
+    }
+    if s.n_shared_experts:
+        width = s.shared_d_expert or s.n_shared_experts * s.d_expert
+        p["shared"] = mlp_init(ks, d, width, s.activation)
+    return p
+
+
+def _act(x: jax.Array, activation: str) -> jax.Array:
+    if activation == "swiglu":
+        return jax.nn.silu(x)
+    if activation == "geglu":
+        return jax.nn.gelu(x, approximate=True)
+    return jax.nn.relu(x)
+
+
+def moe_apply(p: Params, s: MoESpec, x: jax.Array, dt: DtypePolicy,
+              hook=None) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out (B, S, d), aux_loss scalar).
+
+    ``hook(tensor, role)`` lets the runtime constrain the sharding of the
+    (E, C, d) dispatch/expert buffers (EP striping §4.3) without the model
+    knowing about meshes."""
+    hook = hook or (lambda t, _role: t)
+    b, sq, d = x.shape
+    n_tok = b * sq
+    cap = s.capacity(n_tok)
+    tokens = x.reshape(n_tok, d)
+
+    # ---- routing (f32 for a stable softmax) ----
+    logits = tokens.astype(jnp.float32) @ p["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                   # (T, E)
+    gate, eidx = jax.lax.top_k(probs, s.top_k)                # (T, K)
+    if s.norm_topk:
+        gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # ---- load-balancing aux loss (Switch-style) ----
+    me = probs.mean(axis=0)                                   # (E,)
+    one_hot_top1 = jax.nn.one_hot(eidx[:, 0], s.n_experts)
+    ce = one_hot_top1.mean(axis=0)
+    aux = s.aux_loss_coef * s.n_experts * jnp.sum(me * ce)
+
+    # ---- sort-based dispatch: rank of each assignment within its expert ----
+    tk = n_tok * s.top_k
+    flat_e = eidx.reshape(tk)                                 # (T*K,)
+    flat_t = jnp.repeat(jnp.arange(n_tok), s.top_k)
+    flat_g = gate.reshape(tk)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sg = flat_e[order], flat_t[order], flat_g[order]
+    counts = jnp.bincount(flat_e, length=s.e_pad)             # (E,)
+    starts = jnp.cumsum(counts) - counts
+    rank = jnp.arange(tk) - starts[se]                        # pos within expert
+    keep = rank < cap                                         # capacity drop
+
+    # ---- masked write into the dense (E, C, d) buffer ----
+    cdt = dt.compute
+    safe_rank = jnp.where(keep, rank, cap)                    # OOB -> dropped
+    dispatch = jnp.zeros((s.e_pad, cap, d), cdt)
+    dispatch = dispatch.at[se, safe_rank].set(
+        tokens[st].astype(cdt), mode="drop")
+    dispatch = hook(dispatch, "dispatch")
+
+    # ---- expert FFN: (E, C, d) x (E, d, f) ----
+    g = jnp.einsum("ecd,edf->ecf", dispatch, p["wg"].astype(cdt))
+    if s.activation in ("swiglu", "geglu"):
+        u = jnp.einsum("ecd,edf->ecf", dispatch, p["wu"].astype(cdt))
+        h = _act(g, s.activation) * u
+    else:
+        h = _act(g, s.activation)
+    expert_out = hook(
+        jnp.einsum("ecf,efd->ecd", h, p["wd"].astype(cdt)), "expert_out")
+
+    # ---- combine: gather back, weight by gate, scatter-add per token ----
+    back = expert_out[se, safe_rank]                          # (T*K, d)
+    back = jnp.where(keep[:, None], back, 0.0)
+    back = back * sg[:, None].astype(cdt)
+    out = jnp.zeros((n_tok, d), cdt).at[st].add(back)
+
+    if s.n_shared_experts:
+        out = out + mlp_apply(p["shared"], tokens.astype(cdt),
+                              s.activation, dt)
+    return out.reshape(b, sq, d), aux
+
+
+def moe_param_count(s: MoESpec) -> Tuple[int, int]:
+    """(total, active-per-token) parameter counts for MODEL_FLOPS."""
+    glu = 3 if s.activation in ("swiglu", "geglu") else 2
+    per_expert = glu * s.d_model * s.d_expert
+    shared_width = (s.shared_d_expert or s.n_shared_experts * s.d_expert) \
+        if s.n_shared_experts else 0
+    shared = glu * s.d_model * shared_width
+    router = s.d_model * s.n_experts
+    total = s.n_experts * per_expert + shared + router
+    active = s.top_k * per_expert + shared + router
+    return total, active

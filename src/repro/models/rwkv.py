@@ -1,0 +1,304 @@
+"""RWKV6 "Finch" — attention-free time-mix with data-dependent decay.
+
+TPU adaptation (DESIGN.md §Arch-applicability): the per-timestep recurrence
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T,   o_t = r_t (S_{t-1} + diag(u) k_t v_t^T)
+
+is a loop-carried dependency in the paper's sense (§2.1) — a naive scan has
+initiation interval = the full state-update latency and no MXU utilization.
+We apply **tiled accumulation interleaving (§2.1.2)**: the sequence is strip-
+mined into chunks of C tokens; within a chunk all interactions are batched
+matmuls (MXU work), and only one state matrix per chunk crosses the scan —
+the classic chunked linear-attention formulation.  Numerical safety: all
+decay ratios are exponentials of *non-positive* log-sums, so nothing
+overflows; underflow is the mathematically-correct limit.
+
+Structure simplifications vs. the reference implementation (documented):
+token-shift mixing coefficients are static per-channel (RWKV5-style lerp)
+rather than data-dependent ddlerp; the decay LoRA is kept (it is the "data-
+dependent decay" headline feature).  Parameter count matches 7B to <2%.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+from ..core.memory import DtypePolicy
+
+Params = Dict[str, jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class RwkvSpec:
+    d_model: int
+    head_dim: int = 64
+    decay_lora: int = 64
+    chunk: int = 64
+    d_ff: int = 0                # channel-mix width
+    # intra-chunk algorithm: "direct" materializes the (c, c, hd) decay
+    # tensor (elementwise/VPU form); "matmul" is the §2.1.1-transposed
+    # sub-chunked form whose off-diagonal blocks are boundary-normalized
+    # MXU matmuls (EXPERIMENTS.md §Perf-1)
+    intra: str = "direct"
+    subchunk: int = 16
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_model // self.head_dim
+
+
+# --------------------------------------------------------------------------
+# time mix
+# --------------------------------------------------------------------------
+
+def time_mix_init(key, s: RwkvSpec) -> Params:
+    ks = jax.random.split(key, 8)
+    d = s.d_model
+    return {
+        "mu": 0.5 * jnp.ones((5, d), jnp.float32),   # shift-lerp for r,k,v,g,w
+        "wr": dense_init(ks[0], (d, d)),
+        "wk": dense_init(ks[1], (d, d)),
+        "wv": dense_init(ks[2], (d, d)),
+        "wg": dense_init(ks[3], (d, d)),
+        "wo": dense_init(ks[4], (d, d)),
+        "w0": -6.0 * jnp.ones((d,), jnp.float32),    # base log-log decay
+        "wa": dense_init(ks[5], (d, s.decay_lora)),
+        "wb": 0.01 * dense_init(ks[6], (s.decay_lora, d)),
+        "u": jnp.zeros((s.n_heads, s.head_dim), jnp.float32),  # bonus
+        "ln_scale": jnp.ones((d,), jnp.float32),     # group-norm on output
+        "ln_bias": jnp.zeros((d,), jnp.float32),
+    }
+
+
+def _token_shift(x: jax.Array, prev: jax.Array) -> jax.Array:
+    """Delay buffer of depth one (§2.2): x_{t-1}, seeded by `prev`."""
+    return jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _rkvgw(p: Params, s: RwkvSpec, x: jax.Array, x_prev: jax.Array,
+           dt: DtypePolicy):
+    cdt = dt.compute
+    xx = _token_shift(x, x_prev)
+    mix = [x + (xx - x) * p["mu"][i].astype(x.dtype) for i in range(5)]
+    r = mix[0] @ p["wr"].astype(cdt)
+    k = mix[1] @ p["wk"].astype(cdt)
+    v = mix[2] @ p["wv"].astype(cdt)
+    g = mix[3] @ p["wg"].astype(cdt)
+    # data-dependent decay (LoRA), in f32: w in (0, 1)
+    lw = -jnp.exp(
+        p["w0"].astype(jnp.float32)
+        + jnp.tanh(mix[4].astype(jnp.float32) @ p["wa"].astype(jnp.float32))
+        @ p["wb"].astype(jnp.float32))          # log(w) <= 0, (B, S, d)
+    return r, k, v, g, lw
+
+
+def _heads(x: jax.Array, s: RwkvSpec) -> jax.Array:
+    b, sq, d = x.shape
+    return x.reshape(b, sq, s.n_heads, s.head_dim)
+
+
+def _group_norm(p: Params, o: jax.Array, s: RwkvSpec, eps=1e-5) -> jax.Array:
+    """Per-head layer norm (RWKV's GroupNorm(n_heads))."""
+    b, sq, h, hd = o.shape
+    mean = o.mean(axis=-1, keepdims=True)
+    var = o.var(axis=-1, keepdims=True)
+    o = (o - mean) * jax.lax.rsqrt(var + eps)
+    o = o.reshape(b, sq, h * hd)
+    return o * p["ln_scale"] + p["ln_bias"]
+
+
+def _intra_direct(rj, kj, vj, cum, ecum, c):
+    """Direct per-channel form: materializes the (c, c, hd) decay tensor
+    (VPU-elementwise; memory-bound — the §Perf-1 baseline)."""
+    expo = ecum[:, :, None] - cum[:, None, :, :, :]          # (b,c,c,h,hd)
+    expo = jnp.where(jnp.tril(jnp.ones((c, c), bool), k=-1)
+                     [None, :, :, None, None], expo, -jnp.inf)
+    a = jnp.einsum("bchk,bdhk,bcdhk->bcdh", rj, kj,
+                   jnp.exp(jnp.maximum(expo, -60.0))
+                   * (expo > -jnp.inf))
+    return jnp.einsum("bcdh,bdhv->bchv", a, vj)
+
+
+def _intra_matmul(rj, kj, vj, cum, ecum, c, sc):
+    """Sub-chunked matmul form (paper §2.1.1 transposition + §3.1/3.2 on
+    the MXU).  Off-diagonal (a > b) sub-blocks factor the decay as
+        exp(ecum_i - cum_j) = exp(ecum_i - m_a') * exp(m_a' - m_b)
+                              * exp(m_b - cum_j)
+    with m_x = cum at sub-chunk x's end and a' = a-1; cum is a cumsum of
+    log-decays (<= 0), hence DECREASING, so every exponent above is <= 0 —
+    numerically safe, and the contraction over channels becomes a plain
+    (sc, hd) @ (hd, sc) matmul.  Diagonal blocks use the direct form at
+    (sc, sc, hd) cost.  No (c, c, hd) tensor is ever materialized."""
+    b_, cdim, h, hd = rj.shape
+    nsc = c // sc
+    # boundaries m[x] = cum at last element of sub-chunk x; m[-1] ~ 0
+    cum_s = cum.reshape(b_, nsc, sc, h, hd)
+    ecum_s = ecum.reshape(b_, nsc, sc, h, hd)
+    m = cum_s[:, :, -1]                                      # (b,nsc,h,hd)
+    m_prev = jnp.concatenate(
+        [jnp.zeros_like(m[:, :1]), m[:, :-1]], axis=1)
+    r_s = rj.reshape(b_, nsc, sc, h, hd)
+    k_s = kj.reshape(b_, nsc, sc, h, hd)
+    v_s = vj.reshape(b_, nsc, sc, h, hd)
+    ra = r_s * jnp.exp(ecum_s - m_prev[:, :, None])          # <=0 exponents
+    kb = k_s * jnp.exp(m[:, :, None] - cum_s)                # <=0 exponents
+
+    outs = []
+    for a in range(nsc):
+        o_a = jnp.zeros((b_, sc, h, hd), rj.dtype)
+        for b in range(a):
+            # decay across the (b, a-1] boundary gap, folded into kb
+            gap = jnp.exp(m_prev[:, a] - m[:, b])            # (b_,h,hd) <=0
+            kba = kb[:, b] * gap[:, None]
+            att = jnp.einsum("bchk,bdhk->bcdh", ra[:, a], kba)
+            o_a = o_a + jnp.einsum("bcdh,bdhv->bchv", att, v_s[:, b])
+        # diagonal block: direct form at (sc, sc, hd)
+        expo = ecum_s[:, a, :, None] - cum_s[:, a, None, :]
+        expo = jnp.where(jnp.tril(jnp.ones((sc, sc), bool), k=-1)
+                         [None, :, :, None, None], expo, -jnp.inf)
+        att_d = jnp.einsum("bchk,bdhk,bcdhk->bcdh", r_s[:, a], k_s[:, a],
+                           jnp.exp(jnp.maximum(expo, -60.0))
+                           * (expo > -jnp.inf))
+        o_a = o_a + jnp.einsum("bcdh,bdhv->bchv", att_d, v_s[:, a])
+        outs.append(o_a)
+    return jnp.concatenate(outs, axis=1)
+
+
+def wkv_chunked(r, k, v, lw, u, *, chunk: int, state=None,
+                unroll: bool = False, intra: str = "direct",
+                subchunk: int = 16):
+    """Chunked WKV recurrence.
+
+    r,k,v: (B, S, H, hd) compute dtype; lw: (B, S, H, hd) f32 log-decay
+    (<=0); u: (H, hd) bonus.  Returns (o (B,S,H,hd) f32, final state
+    (B,H,hd,hd) f32).  `unroll=True` python-unrolls the chunk loop (dry-run
+    cost compiles).  `intra` selects the intra-chunk algorithm (§Perf-1).
+    """
+    b, sq, h, hd = r.shape
+    c = min(chunk, sq)
+    while c > 1 and sq % c:
+        c //= 2
+    n_chunks = sq // c
+    sc = min(subchunk, c)
+    use_matmul = intra == "matmul" and c % sc == 0 and c > sc
+    f32 = jnp.float32
+
+    def reshape_c(x):
+        return x.reshape(b, n_chunks, c, h, hd)
+
+    rc, kc, vc, lwc = map(reshape_c, (r, k, v, lw))
+
+    if state is None:
+        state = jnp.zeros((b, h, hd, hd), f32)
+
+    def chunk_step(S, args):
+        rj, kj, vj, lwj = args                   # (b, c, h, hd)
+        rj = rj.astype(f32)
+        kj = kj.astype(f32)
+        vj = vj.astype(f32)
+        cum = jnp.cumsum(lwj, axis=1)            # inclusive, (b,c,h,hd)
+        ecum = cum - lwj                         # exclusive
+        total = cum[:, -1]                       # (b,h,hd)
+        # inter-chunk: o_i += (r_i * exp(ecum_i)) @ S        [exponent <= 0]
+        r_in = rj * jnp.exp(ecum)
+        o_inter = jnp.einsum("bchk,bhkv->bchv", r_in, S)
+        if use_matmul:
+            o_intra = _intra_matmul(rj, kj, vj, cum, ecum, c, sc)
+        else:
+            o_intra = _intra_direct(rj, kj, vj, cum, ecum, c)
+        # bonus diagonal term
+        diag = jnp.einsum("bchk,hk,bchk->bch", rj, u.astype(f32), kj)
+        o_diag = diag[..., None] * vj
+        # state update: S' = diag(exp(total)) S + sum_j (k_j exp(total-cum_j)) v_j
+        k_dec = kj * jnp.exp(total[:, None] - cum)           # exponent <= 0
+        S_new = jnp.exp(total)[..., None] * S \
+            + jnp.einsum("bchk,bchv->bhkv", k_dec, vj)
+        return S_new, o_inter + o_intra + o_diag
+
+    args = tuple(jnp.moveaxis(x, 1, 0) for x in (rc, kc, vc, lwc))
+    if unroll:
+        outs = []
+        S = state
+        for i in range(n_chunks):
+            S, o = chunk_step(S, tuple(a[i] for a in args))
+            outs.append(o)
+        o = jnp.stack(outs, axis=0)
+    else:
+        # remat the chunk body: the (c, c, hd) decay tensor is recomputed
+        # in the backward pass instead of being stacked for all chunks
+        S, o = jax.lax.scan(jax.checkpoint(chunk_step), state, args)
+    o = jnp.moveaxis(o, 0, 1).reshape(b, sq, h, hd)
+    return o, S
+
+
+def time_mix_apply(p: Params, s: RwkvSpec, x: jax.Array, dt: DtypePolicy,
+                   *, unroll: bool = False, hook=None) -> jax.Array:
+    b = x.shape[0]
+    hook = hook or (lambda t, _role: t)
+    r, k, v, g, lw = _rkvgw(p, s, x, jnp.zeros((b, s.d_model), x.dtype), dt)
+    rh, kh, vh, lwh = (hook(_heads(t, s), "q") for t in (r, k, v, lw))
+    o, _ = wkv_chunked(rh, kh, vh, lwh, p["u"], chunk=s.chunk, unroll=unroll,
+                       intra=s.intra, subchunk=s.subchunk)
+    o = hook(o, "q")
+    o = _group_norm(p, o, s).astype(dt.compute)
+    o = o * jax.nn.silu(g)
+    return o @ p["wo"].astype(dt.compute)
+
+
+def time_mix_decode(p: Params, s: RwkvSpec, x: jax.Array, cache, dt):
+    """x: (B, 1, d); cache = {"state": (B,H,hd,hd) f32, "xprev": (B,d)}."""
+    r, k, v, g, lw = _rkvgw(p, s, x, cache["xprev"], dt)
+    f32 = jnp.float32
+    rh, kh, vh = (_heads(t, s)[:, 0].astype(f32) for t in (r, k, v))
+    w = jnp.exp(_heads(lw, s)[:, 0])                       # (B,H,hd)
+    S = cache["state"]
+    kv = jnp.einsum("bhk,bhv->bhkv", kh, vh)
+    o = jnp.einsum("bhk,bhkv->bhv", rh, S) \
+        + jnp.einsum("bhk,hk,bhk->bh", rh, p["u"].astype(f32), kh)[..., None] * vh
+    S = w[..., None] * S + kv
+    o = _group_norm(p, o[:, None], s).astype(dt.compute)
+    o = o * jax.nn.silu(g[:, 0])[:, None, :].reshape(o.shape)
+    out = o @ p["wo"].astype(dt.compute)
+    new_cache = {"state": S, "xprev": x[:, 0].astype(cache["xprev"].dtype)}
+    return out, new_cache
+
+
+# --------------------------------------------------------------------------
+# channel mix
+# --------------------------------------------------------------------------
+
+def channel_mix_init(key, s: RwkvSpec) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    d, ff = s.d_model, s.d_ff
+    return {
+        "mu": 0.5 * jnp.ones((2, d), jnp.float32),
+        "wk": dense_init(k1, (d, ff)),
+        "wv": dense_init(k2, (ff, d)),
+        "wr": dense_init(k3, (d, d)),
+    }
+
+
+def channel_mix_apply(p: Params, s: RwkvSpec, x: jax.Array, dt: DtypePolicy,
+                      x_prev=None) -> jax.Array:
+    cdt = dt.compute
+    b = x.shape[0]
+    prev = x_prev if x_prev is not None \
+        else jnp.zeros((b, s.d_model), x.dtype)
+    xx = _token_shift(x, prev)
+    xk = x + (xx - x) * p["mu"][0].astype(x.dtype)
+    xr = x + (xx - x) * p["mu"][1].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(xk @ p["wk"].astype(cdt)))
+    return jax.nn.sigmoid(xr @ p["wr"].astype(cdt)) * (k @ p["wv"].astype(cdt))
+
+
+def rwkv_cache_init(b: int, s: RwkvSpec, dtype) -> Dict[str, jax.Array]:
+    return {
+        "state": jnp.zeros((b, s.n_heads, s.head_dim, s.head_dim),
+                           jnp.float32),
+        "xprev": jnp.zeros((b, s.d_model), dtype),
+        "cm_xprev": jnp.zeros((b, s.d_model), dtype),
+    }

@@ -1,0 +1,123 @@
+"""AdamW from scratch, with an int8-moment variant (type demotion §4.4).
+
+The int8 variant stores both Adam moments as block-scaled int8
+(``repro.core.memory.QuantizedBlock``): 1.03 bytes/param per moment instead
+of 4.  For the 1T-parameter kimi-k2 arch this is the difference between
+14 TB of optimizer+weight state (does not fit 512 x 16 GiB = 8 TiB) and
+~4.2 TB (fits) — see EXPERIMENTS.md §Dry-run.  The quantization error is
+re-absorbed every step because the moments are re-quantized from the
+freshly-updated f32 value (no error accumulation beyond one step's worth);
+tests bound the training-trajectory divergence vs f32 moments.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.memory import QuantizedBlock, dequantize_block, quantize_block
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    int8_moments: bool = False
+    moment_block: int = 128
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+class AdamWState(NamedTuple):
+    count: jax.Array
+    m: Params            # f32 tree, or QuantizedBlock tree
+    v: Params
+
+
+def _q(x: jax.Array, cfg: AdamWConfig):
+    return quantize_block(x, cfg.moment_block)
+
+
+def adamw_init(params: Params, cfg: AdamWConfig) -> AdamWState:
+    def zero_like(p):
+        z = jnp.zeros(p.shape, jnp.float32)
+        return _q(z, cfg) if cfg.int8_moments else z
+
+    zeros = jax.tree.map(zero_like, params)
+    m = zeros
+    v = jax.tree.map(zero_like, params)
+    return AdamWState(count=jnp.zeros((), jnp.int32), m=m, v=v)
+
+
+def lr_schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay to min_lr_ratio (all traced jnp)."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / max(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    scale = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos
+    return cfg.lr * warm * scale
+
+
+def global_norm(tree: Params) -> jax.Array:
+    return jnp.sqrt(sum(
+        jnp.sum(jnp.square(g.astype(jnp.float32)))
+        for g in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads: Params, max_norm: float
+                        ) -> Tuple[Params, jax.Array]:
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gnorm
+
+
+def _is_qb(x) -> bool:
+    return isinstance(x, QuantizedBlock)
+
+
+def adamw_update(grads: Params, state: AdamWState, params: Params,
+                 cfg: AdamWConfig) -> Tuple[Params, AdamWState, Dict]:
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    count = state.count + 1
+    lr = lr_schedule(cfg, count)
+    c1 = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        mf = dequantize_block(m) if _is_qb(m) else m
+        vf = dequantize_block(v) if _is_qb(v) else v
+        mf = cfg.b1 * mf + (1 - cfg.b1) * g
+        vf = cfg.b2 * vf + (1 - cfg.b2) * jnp.square(g)
+        mhat = mf / c1
+        vhat = vf / c2
+        step_ = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        # decoupled weight decay on the master weight
+        new_p = p.astype(jnp.float32) - lr * (step_ + cfg.weight_decay
+                                              * p.astype(jnp.float32))
+        new_m = _q(mf, cfg) if _is_qb(m) else mf
+        new_v = _q(vf, cfg) if _is_qb(v) else vf
+        return new_p.astype(p.dtype), new_m, new_v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.flatten(state.m, is_leaf=_is_qb)[0]
+    flat_v = jax.tree.flatten(state.v, is_leaf=_is_qb)[0]
+    out = [upd(p, g, m, v)
+           for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, AdamWState(count, new_m, new_v), metrics

@@ -1,0 +1,67 @@
+"""Error-feedback int8 gradient compression (type demotion §4.4 on the wire).
+
+Data-parallel gradient all-reduce is the dominant cross-pod collective (the
+only inter-pod traffic in the default layout).  Demoting the wire format to
+block-scaled int8 cuts that term ~3.9x at the cost of quantization noise;
+the classic error-feedback residual keeps SGD/Adam convergence (the
+quantization error of step t is added back into the gradient of step t+1,
+so bias does not accumulate).
+
+Usage: wrap gradients before the optimizer —
+    comp, residual = compress_gradients(grads, residual, cfg)
+Under `jax.jit` + sharding, the dequantized gradient is what crosses the
+`pod`/`data` axes (GSPMD reduces the int8-roundtripped f32 values); on a
+real deployment the quantized payload itself is what the wire carries — the
+dry-run's collective-bytes accounting for the compressed variant is
+adjusted accordingly in the §Perf hillclimb.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.memory import dequantize_block, quantize_block
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressorConfig:
+    block: int = 128
+    enabled: bool = True
+    min_size: int = 4096     # don't compress small leaves (norms, biases)
+
+
+def init_residual(params: Params) -> Params:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_gradients(grads: Params, residual: Params,
+                       cfg: CompressorConfig) -> Tuple[Params, Params]:
+    """Returns (decompressed-after-compression grads, new residual)."""
+    if not cfg.enabled:
+        return grads, residual
+
+    def one(g, r):
+        g = g.astype(jnp.float32)
+        if g.size < cfg.min_size:
+            return g, jnp.zeros_like(g)
+        corrected = g + r
+        qb = quantize_block(corrected, cfg.block)
+        deq = dequantize_block(qb)
+        return deq, corrected - deq
+
+    out = jax.tree.map(one, grads, residual)
+    comp = jax.tree.map(lambda t: t[0], out,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    new_res = jax.tree.map(lambda t: t[1], out,
+                           is_leaf=lambda x: isinstance(x, tuple))
+    return comp, new_res
+
+
+def compressed_wire_bytes(n_elems: int, block: int = 128) -> float:
+    """Bytes/elt on the wire: int8 payload + f32 scale per block."""
+    return n_elems * (1.0 + 4.0 / block)

@@ -1,0 +1,6 @@
+from .analysis import (  # noqa: F401
+    CollectiveStats,
+    analyze_compiled,
+    collective_stats,
+    parse_collectives,
+)

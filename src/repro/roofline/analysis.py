@@ -1,0 +1,182 @@
+"""Roofline term extraction from compiled dry-run artifacts.
+
+* FLOPs / HBM bytes: ``compiled.cost_analysis()`` — verified to be
+  per-partition numbers for SPMD modules, so totals are x chips.
+* collective bytes: NOT in cost_analysis — parsed from the optimized HLO
+  text.  For every all-gather / all-reduce / reduce-scatter / all-to-all /
+  collective-permute we record the per-partition operand bytes and the
+  replica-group size, and model per-chip ICI traffic with the standard ring
+  costs:
+
+      all-gather      (n-1)   * operand      (operand = local shard)
+      reduce-scatter  (n-1)/n * operand      (operand = full local buffer)
+      all-reduce    2*(n-1)/n * operand
+      all-to-all      (n-1)/n * operand
+      collective-permute        operand      (one hop)
+
+  ``collective_bytes`` (the EXPERIMENTS.md numerator) = per-chip traffic
+  summed over chips, so ``collective_bytes / (chips * link_bw)`` is the
+  mean per-chip serialized link time.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(?P<shape>\([^=]*?\)|\S+)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<start>-start)?\(",
+    re.M)
+
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_SRC_TGT_RE = re.compile(r"source_target_pairs=\{\{")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Bytes of one HLO shape string; tuples summed."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    op: str
+    operand_bytes: int        # per-partition
+    group_size: int
+    line: str
+
+    @property
+    def per_chip_traffic(self) -> float:
+        n = max(self.group_size, 1)
+        b = self.operand_bytes
+        if self.op == "all-gather":
+            # HLO prints the *result* (gathered) shape; operand = result/n.
+            return b / n * (n - 1)
+        if self.op == "reduce-scatter":
+            return b * (n - 1) / n
+        if self.op == "all-reduce":
+            return 2.0 * b * (n - 1) / n
+        if self.op == "all-to-all":
+            return b * (n - 1) / n
+        return float(b)       # collective-permute: one hop
+
+
+def parse_collectives(hlo_text: str) -> List[CollectiveOp]:
+    ops: List[CollectiveOp] = []
+    for m in _COLL_RE.finditer(hlo_text):
+        line_end = hlo_text.find("\n", m.start())
+        line = hlo_text[m.start(): line_end if line_end > 0 else None]
+        op = m.group("op")
+        shape = m.group("shape")
+        gs = 1
+        gi = _GROUPS_IOTA_RE.search(line)
+        if gi:
+            gs = int(gi.group(2))
+        else:
+            gl = _GROUPS_LIST_RE.search(line)
+            if gl:
+                gs = len([t for t in gl.group(1).split(",") if t.strip()])
+            elif op == "collective-permute":
+                gs = 2
+        nbytes = _shape_bytes(shape)
+        # shapes are printed for the RESULT; convert to operand bytes
+        if op == "reduce-scatter":
+            nbytes *= gs            # result is the scattered shard
+        ops.append(CollectiveOp(op, nbytes, gs, line.strip()[:200]))
+    return ops
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    per_chip_bytes: float                 # serialized ICI traffic per chip
+    by_op: Dict[str, float]
+    count: int
+    schedule: List[str]
+
+    @staticmethod
+    def empty() -> "CollectiveStats":
+        return CollectiveStats(0.0, {}, 0, [])
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    ops = parse_collectives(hlo_text)
+    by_op: Dict[str, float] = defaultdict(float)
+    total = 0.0
+    sched = []
+    for o in ops:
+        t = o.per_chip_traffic
+        by_op[o.op] += t
+        total += t
+        sched.append(f"{o.op} {o.operand_bytes/1e6:.2f}MB x{o.group_size}")
+    return CollectiveStats(total, dict(by_op), len(ops), sched)
+
+
+def analyze_compiled(compiled, chips: int) -> Dict[str, float]:
+    """Extract per-device cost terms + totals from a compiled executable."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    flops_dev = float(ca.get("flops", 0.0))
+    bytes_dev = float(ca.get("bytes accessed", 0.0))
+    stats = collective_stats(compiled.as_text())
+    ma = compiled.memory_analysis()
+    out = {
+        "flops_per_device": flops_dev,
+        "hbm_bytes_per_device": bytes_dev,
+        "collective_bytes_per_chip": stats.per_chip_bytes,
+        "collective_count": stats.count,
+        "collective_by_op": stats.by_op,
+        "hlo_flops_total": flops_dev * chips,
+        "hlo_bytes_total": bytes_dev * chips,
+        "collective_bytes_total": stats.per_chip_bytes * chips,
+    }
+    if ma is not None:
+        out.update({
+            "argument_bytes_per_device": int(ma.argument_size_in_bytes),
+            "output_bytes_per_device": int(ma.output_size_in_bytes),
+            "temp_bytes_per_device": int(ma.temp_size_in_bytes),
+            "alias_bytes_per_device": int(ma.alias_size_in_bytes),
+            "peak_bytes_per_device": int(ma.argument_size_in_bytes
+                                         + ma.output_size_in_bytes
+                                         - ma.alias_size_in_bytes
+                                         + ma.temp_size_in_bytes),
+        })
+    return out
+
+
+def combine_affine(base: Dict[str, float], per_kind: Dict[str, Dict[str, float]],
+                   kind_counts: Dict[str, int],
+                   keys: Tuple[str, ...] = (
+                       "flops_per_device", "hbm_bytes_per_device",
+                       "collective_bytes_per_chip")) -> Dict[str, float]:
+    """cost(full) = cost(0 layers) + sum_k count_k * (cost(1 layer of k) -
+    cost(0 layers)) — the affine extrapolation of DESIGN.md §6."""
+    out = {}
+    for key in keys:
+        total = base.get(key, 0.0)
+        for kind, counts in kind_counts.items():
+            delta = per_kind[kind].get(key, 0.0) - base.get(key, 0.0)
+            total += counts * delta
+        out[key] = total
+    return out

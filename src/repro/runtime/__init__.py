@@ -1,0 +1,1 @@
+from .sharding import MeshRules, make_rules  # noqa: F401

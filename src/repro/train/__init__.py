@@ -1,0 +1,1 @@
+from .steps import TrainStepConfig, make_train_step, make_serve_step  # noqa: F401

@@ -1,0 +1,134 @@
+"""Step functions: training (grad + AdamW) and serving (one-token decode).
+
+Pipelined loop fusion (§2.4): the forward, backward, gradient-clip and
+optimizer update all live in ONE jit — one XLA "pipeline" with a single
+fill/drain, no host round-trips between phases.  Microbatch gradient
+accumulation (when enabled) is a scan whose per-microbatch reduce-scatter
+overlaps the next microbatch's compute under GSPMD — the §3.3 streaming
+pattern at step granularity.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.transformer import Model
+from ..optim.adamw import AdamWConfig, AdamWState, adamw_init, adamw_update
+from ..optim.compress import CompressorConfig, compress_gradients
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainStepConfig:
+    opt: AdamWConfig = AdamWConfig()
+    microbatches: int = 1
+    compress: Optional[CompressorConfig] = None
+    # NamedSharding tree matching the param structure.  Constraining the
+    # gradients to the parameter (FSDP-striped §4.3) layout right after the
+    # backward pass lets GSPMD reduce-scatter per layer inside the scan
+    # instead of materializing the full-depth unsharded f32 gradient stack
+    # (which for a 67B model is ~270 GB/device).
+    grad_shardings: Optional[Any] = None
+
+
+def make_train_step(model: Model, cfg: TrainStepConfig = TrainStepConfig()
+                    ) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    (The optional error-feedback residual for gradient compression rides
+    inside opt_state as ``opt_state[1]`` when compression is on.)
+    """
+
+    def loss_fn(params, batch):
+        return model.loss_fn(params, batch)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if cfg.compress is not None:
+            opt_state, residual = opt_state
+        if cfg.microbatches > 1:
+            def split(x):
+                b = x.shape[0]
+                mb = cfg.microbatches
+                return x.reshape((mb, b // mb) + x.shape[1:])
+
+            mbatch = jax.tree.map(split, batch)
+
+            def acc_body(carry, mb):
+                g_acc, l_acc = carry
+                (loss, metrics), g = grad_fn(params, mb)
+                if cfg.grad_shardings is not None:
+                    g = jax.lax.with_sharding_constraint(
+                        g, cfg.grad_shardings)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (g_acc, l_acc + loss), metrics
+
+            # accumulate in the gradient's own dtype: f32-master archs get
+            # f32 accumulators; bf16-param archs (the 1T MoE) accumulate in
+            # bf16 — type demotion §4.4, without which the accumulator alone
+            # is 16 GiB/device.
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype), params)
+            if cfg.grad_shardings is not None:
+                g0 = jax.lax.with_sharding_constraint(g0,
+                                                      cfg.grad_shardings)
+            (grads, loss_sum), all_metrics = jax.lax.scan(
+                acc_body, (g0, jnp.zeros((), jnp.float32)), mbatch)
+            grads = jax.tree.map(lambda g: g / cfg.microbatches, grads)
+            metrics = jax.tree.map(lambda m: m[-1], all_metrics)
+            metrics["loss"] = loss_sum / cfg.microbatches
+        else:
+            (loss, metrics), grads = grad_fn(params, batch)
+
+        if cfg.grad_shardings is not None:
+            grads = jax.lax.with_sharding_constraint(grads,
+                                                     cfg.grad_shardings)
+        if cfg.compress is not None:
+            grads, residual = compress_gradients(grads, residual,
+                                                 cfg.compress)
+        new_params, new_opt, opt_metrics = adamw_update(
+            grads, opt_state, params, cfg.opt)
+        metrics = {**metrics, **opt_metrics}
+        if cfg.compress is not None:
+            new_opt = (new_opt, residual)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def init_train_state(model: Model, cfg: TrainStepConfig, rng: jax.Array
+                     ) -> Tuple[Any, Any]:
+    params = model.init(rng)
+    opt = adamw_init(params, cfg.opt)
+    if cfg.compress is not None:
+        from ..optim.compress import init_residual
+        opt = (opt, init_residual(params))
+    return params, opt
+
+
+def abstract_train_state(model: Model, cfg: TrainStepConfig):
+    """ShapeDtypeStructs for (params, opt_state) — dry-run currency."""
+    def build():
+        params = model.init(jax.random.key(0))
+        opt = adamw_init(params, cfg.opt)
+        if cfg.compress is not None:
+            from ..optim.compress import init_residual
+            opt = (opt, init_residual(params))
+        return params, opt
+
+    return jax.eval_shape(build)
+
+
+def make_serve_step(model: Model) -> Callable:
+    """serve_step(params, cache, batch, pos) -> (logits, new_cache).
+
+    One new token for every sequence in the batch against the resident
+    KV/state cache (delay buffers §2.2)."""
+
+    def serve_step(params, cache, batch, pos):
+        return model.decode_step(params, cache, batch, pos)
+
+    return serve_step

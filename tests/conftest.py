@@ -1,0 +1,7 @@
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+for p in (str(REPO / "src"), str(REPO / "tests")):
+    if p not in sys.path:
+        sys.path.insert(0, p)

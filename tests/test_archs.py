@@ -1,0 +1,173 @@
+"""Per-architecture smoke tests (assignment deliverable f): every assigned
+arch instantiates at a reduced same-family config and runs one train step
+and one decode step on CPU, asserting shapes + finiteness.  Plus the
+consistency checks the dry-run methodology relies on: scanned-vs-unrolled
+equivalence and blockwise-vs-naive attention equivalence."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, SHAPES, get_arch, input_specs, \
+    shape_applicable
+from repro.models.transformer import ExecOptions, Model, param_counts
+
+RNG = jax.random.key(0)
+
+
+def make_batch(cfg, b=2, s=32, seed=7):
+    batch = {"labels": jax.random.randint(jax.random.key(seed), (b, s), 0,
+                                          cfg.vocab_size)}
+    if cfg.input_mode == "embeddings":
+        batch["embeddings"] = jax.random.normal(RNG, (b, s, cfg.d_model),
+                                                jnp.bfloat16)
+    else:
+        batch["tokens"] = jax.random.randint(RNG, (b, s), 0, cfg.vocab_size)
+    if cfg.mrope_sections:
+        batch["positions"] = jnp.broadcast_to(
+            jnp.arange(s)[None, :, None],
+            (b, s, len(cfg.mrope_sections))).astype(jnp.int32)
+    return batch
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_arch_smoke_train_step(name):
+    cfg = ARCHS[name].smoke()
+    model = Model(cfg, opts=ExecOptions(mode="run", block_q=16, block_kv=16))
+    params = model.init(RNG)
+    batch = make_batch(cfg)
+    loss, metrics = jax.jit(model.loss_fn)(params, batch)
+    assert jnp.isfinite(loss), name
+    grads = jax.grad(lambda p: model.loss_fn(p, batch)[0])(params)
+    gnorm = sum(float(jnp.sum(jnp.abs(g.astype(jnp.float32))))
+                for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0, name
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_arch_smoke_decode_step(name):
+    cfg = ARCHS[name].smoke()
+    model = Model(cfg, opts=ExecOptions(mode="run"))
+    params = model.init(RNG)
+    B = 2
+    cache = model.init_cache(B, 64)
+    batch = make_batch(cfg, b=B, s=1)
+    batch.pop("labels")
+    logits, new_cache = jax.jit(model.decode_step)(params, cache, batch,
+                                                   jnp.int32(0))
+    assert logits.shape == (B, cfg.vocab_size), name
+    assert bool(jnp.all(jnp.isfinite(logits))), name
+    assert jax.tree_util.tree_structure(cache) \
+        == jax.tree_util.tree_structure(new_cache)
+
+
+@pytest.mark.parametrize("name", ["gemma3-4b", "recurrentgemma-9b",
+                                  "deepseek-67b", "rwkv6-7b"])
+def test_scan_equals_unrolled(name):
+    """mem-mode (scanned) and cost-mode (python-unrolled) produce the same
+    loss — the numerical backbone of the dry-run's affine cost method."""
+    cfg = ARCHS[name].smoke()
+    batch = make_batch(cfg)
+    losses = {}
+    for mode in ("mem", "cost"):
+        model = Model(cfg, opts=ExecOptions(mode=mode, block_q=16,
+                                            block_kv=16))
+        params = model.init(RNG)
+        losses[mode] = float(jax.jit(model.loss_fn)(params, batch)[0])
+    assert np.isclose(losses["mem"], losses["cost"], rtol=2e-3), losses
+
+
+def test_blockwise_attention_matches_naive():
+    cfg = get_arch("codeqwen1.5-7b").smoke()
+    batch = make_batch(cfg)
+    outs = {}
+    for impl in ("naive", "blockwise"):
+        model = Model(cfg, opts=ExecOptions(mode="run", attn_impl=impl,
+                                            block_q=16, block_kv=16,
+                                            remat=False))
+        params = model.init(RNG)
+        outs[impl] = model.forward(params, batch)
+    np.testing.assert_allclose(
+        np.asarray(outs["naive"], np.float32),
+        np.asarray(outs["blockwise"], np.float32), rtol=5e-2, atol=5e-2)
+
+
+@pytest.mark.parametrize("name", ["gemma-2b", "rwkv6-7b",
+                                  "recurrentgemma-9b", "gemma3-4b"])
+def test_decode_matches_forward(name):
+    """Token-by-token decode with caches reproduces the teacher-forced
+    forward logits — validates every cache layout (KV, rolling-window,
+    rwkv state, rglru state + conv delay buffer)."""
+    cfg = ARCHS[name].smoke()
+    model = Model(cfg, opts=ExecOptions(mode="run", block_q=8, block_kv=8,
+                                        remat=False))
+    params = model.init(RNG)
+    B, S = 1, 12
+    batch = make_batch(cfg, b=B, s=S)
+    full_logits = model.forward(params, batch)          # (B, S, V)
+
+    cache = model.init_cache(B, max_len=32)
+    step = jax.jit(model.decode_step)
+    got = []
+    for t in range(S):
+        db = {}
+        if cfg.input_mode == "embeddings":
+            db["embeddings"] = batch["embeddings"][:, t:t + 1]
+        else:
+            db["tokens"] = batch["tokens"][:, t:t + 1]
+        if cfg.mrope_sections:
+            db["positions"] = batch["positions"][:, t:t + 1]
+        logits, cache = step(params, cache, db, jnp.int32(t))
+        got.append(logits)
+    got = jnp.stack(got, axis=1)
+    # bf16 logits of magnitude ~20: a couple of ulps (0.25) of
+    # accumulation-order noise is expected; cache bugs produce O(1-10)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(full_logits, np.float32),
+                               rtol=0.1, atol=0.35)
+
+
+def test_param_counts_match_published():
+    expected = {
+        "kimi-k2-1t-a32b": (1.03e12, 0.05),
+        "deepseek-67b": (67e9, 0.02),
+        "qwen2-moe-a2.7b": (14.3e9, 0.05),
+        "rwkv6-7b": (7.5e9, 0.10),
+        "recurrentgemma-9b": (8.6e9, 0.15),
+        "gemma-2b": (2.5e9, 0.05),
+        "gemma3-4b": (3.9e9, 0.10),
+    }
+    for name, (want, tol) in expected.items():
+        got = param_counts(get_arch(name))["total"]
+        assert abs(got - want) / want < tol, (name, got, want)
+
+
+def test_moe_active_params():
+    pc = param_counts(get_arch("kimi-k2-1t-a32b"))
+    assert 30e9 < pc["n_active"] < 36e9      # "a32b"
+    pc = param_counts(get_arch("qwen2-moe-a2.7b"))
+    assert 2.0e9 < pc["n_active"] < 3.0e9    # "a2.7b"
+
+
+def test_shape_applicability_rules():
+    skips = [n for n, c in ARCHS.items()
+             if not shape_applicable(c, SHAPES["long_500k"])[0]]
+    assert set(skips) == {
+        "qwen2-moe-a2.7b", "kimi-k2-1t-a32b", "musicgen-large", "gemma-2b",
+        "deepseek-67b", "codeqwen1.5-7b", "qwen2-vl-2b"}
+    for c in ARCHS.values():
+        for shape in ("train_4k", "prefill_32k", "decode_32k"):
+            assert shape_applicable(c, SHAPES[shape])[0]
+
+
+def test_input_specs_cover_all_cells():
+    for cfg in ARCHS.values():
+        for shape in SHAPES.values():
+            specs = input_specs(cfg, shape)
+            assert all(hasattr(v, "shape") for v in specs.values())
+            if shape.kind == "train":
+                assert "labels" in specs
+            if cfg.input_mode == "embeddings":
+                assert "embeddings" in specs

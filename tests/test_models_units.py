@@ -1,0 +1,212 @@
+"""Unit tests for model components: RWKV chunked recurrence, RG-LRU scan,
+MoE routing/capacity, RoPE/M-RoPE, chunked xent."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.memory import BF16_POLICY, DtypePolicy, F32_POLICY
+from repro.models import griffin, layers, moe, rwkv
+
+KEY = jax.random.key(0)
+F32 = F32_POLICY
+
+
+# ------------------------------------------------------------------- rwkv
+def wkv_sequential(r, k, v, lw, u):
+    """Naive per-timestep oracle for the WKV recurrence."""
+    b, s, h, hd = r.shape
+    S = np.zeros((b, h, hd, hd), np.float64)
+    out = np.zeros((b, s, h, hd), np.float64)
+    r, k, v, lw, u = (np.asarray(t, np.float64) for t in (r, k, v, lw, u))
+    for t in range(s):
+        w = np.exp(lw[:, t])                       # (b, h, hd)
+        kv = np.einsum("bhk,bhv->bhkv", k[:, t], v[:, t])
+        bonus = np.einsum("bhk,hk,bhk->bh", r[:, t], u, k[:, t])
+        out[:, t] = np.einsum("bhk,bhkv->bhv", r[:, t], S) \
+            + bonus[..., None] * v[:, t]
+        S = w[..., None] * S + kv
+    return out
+
+
+@pytest.mark.parametrize("s,chunk", [(16, 4), (32, 8), (24, 8)])
+def test_wkv_chunked_matches_sequential(s, chunk):
+    b, h, hd = 2, 3, 8
+    ks = jax.random.split(KEY, 5)
+    r = jax.random.normal(ks[0], (b, s, h, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, h, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, h, hd), jnp.float32)
+    lw = -jnp.exp(jax.random.normal(ks[3], (b, s, h, hd)) - 2.0)
+    u = jax.random.normal(ks[4], (h, hd), jnp.float32)
+    got, _ = rwkv.wkv_chunked(r, k, v, lw, u, chunk=chunk)
+    want = wkv_sequential(r, k, v, lw, u)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_wkv_unroll_equals_scan():
+    b, s, h, hd = 1, 32, 2, 8
+    ks = jax.random.split(KEY, 5)
+    args = [jax.random.normal(ks[i], (b, s, h, hd)) for i in range(3)]
+    lw = -jnp.exp(jax.random.normal(ks[3], (b, s, h, hd)) - 2.0)
+    u = jax.random.normal(ks[4], (h, hd))
+    o1, s1 = rwkv.wkv_chunked(*args, lw, u, chunk=8, unroll=False)
+    o2, s2 = rwkv.wkv_chunked(*args, lw, u, chunk=8, unroll=True)
+    np.testing.assert_allclose(o1, o2, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(s1, s2, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("s,chunk,sub", [(64, 32, 8), (128, 64, 16)])
+def test_wkv_matmul_intra_matches_direct(s, chunk, sub):
+    """§Perf-1: the MXU-matmul intra-chunk form is numerically the direct
+    form (all decay exponents provably <= 0)."""
+    b, h, hd = 2, 2, 8
+    ks = jax.random.split(KEY, 5)
+    r = jax.random.normal(ks[0], (b, s, h, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, h, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, h, hd), jnp.float32)
+    lw = -jnp.exp(jax.random.normal(ks[3], (b, s, h, hd)) - 2.0)
+    u = jax.random.normal(ks[4], (h, hd), jnp.float32)
+    o1, s1 = rwkv.wkv_chunked(r, k, v, lw, u, chunk=chunk, intra="direct")
+    o2, s2 = rwkv.wkv_chunked(r, k, v, lw, u, chunk=chunk, intra="matmul",
+                              subchunk=sub)
+    np.testing.assert_allclose(o1, o2, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(s1, s2, rtol=1e-4, atol=1e-5)
+
+
+def test_wkv_strong_decay_is_stable():
+    """exp of large-negative log-decays must underflow to 0, not NaN."""
+    b, s, h, hd = 1, 64, 1, 4
+    r = jnp.ones((b, s, h, hd))
+    k = jnp.ones((b, s, h, hd))
+    v = jnp.ones((b, s, h, hd))
+    lw = jnp.full((b, s, h, hd), -50.0)
+    u = jnp.zeros((h, hd))
+    out, state = rwkv.wkv_chunked(r, k, v, lw, u, chunk=16)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    assert bool(jnp.all(jnp.isfinite(state)))
+
+
+# ----------------------------------------------------------------- rg-lru
+def test_rglru_scan_matches_sequential():
+    b, s, w = 2, 24, 8
+    a = jax.nn.sigmoid(jax.random.normal(KEY, (b, s, w)))
+    bb = jax.random.normal(jax.random.key(1), (b, s, w))
+    got = griffin.rglru_scan(a, bb)
+    h = np.zeros((b, w))
+    want = []
+    for t in range(s):
+        h = np.asarray(a[:, t]) * h + np.asarray(bb[:, t])
+        want.append(h.copy())
+    np.testing.assert_allclose(got, np.stack(want, 1), rtol=1e-4, atol=1e-5)
+
+
+def test_rglru_block_decode_matches_apply():
+    spec = griffin.GriffinSpec(d_model=16, lru_width=16, block_width=8)
+    p = griffin.rglru_block_init(KEY, spec)
+    b, s = 1, 6
+    x = 0.1 * jax.random.normal(jax.random.key(2), (b, s, 16), jnp.float32)
+    full = griffin.rglru_block_apply(p, spec, x, F32)
+    cache = griffin.griffin_cache_init(b, spec, jnp.float32)
+    outs = []
+    for t in range(s):
+        o, cache = griffin.rglru_block_decode(p, spec, x[:, t:t + 1],
+                                              cache, F32)
+        outs.append(o)
+    np.testing.assert_allclose(jnp.concatenate(outs, 1), full,
+                               rtol=2e-2, atol=2e-3)
+
+
+# -------------------------------------------------------------------- moe
+def test_moe_top1_equals_single_expert():
+    """With top_k=1 and ample capacity, MoE output == the gated single
+    expert's MLP output for every token."""
+    s = moe.MoESpec(d_model=8, n_experts=4, top_k=1, d_expert=16,
+                    capacity_factor=4.0, norm_topk=True)
+    p = moe.moe_init(KEY, s)
+    x = jax.random.normal(jax.random.key(1), (2, 6, 8), jnp.float32)
+    out, aux = moe.moe_apply(p, s, x, F32)
+    tokens = x.reshape(-1, 8)
+    logits = tokens @ p["router"]
+    eidx = jnp.argmax(logits, axis=-1)
+    want = []
+    for i, t in enumerate(np.asarray(tokens)):
+        e = int(eidx[i])
+        g = np.asarray(t) @ np.asarray(p["wg"][e])
+        u = np.asarray(t) @ np.asarray(p["wu"][e])
+        d = (g / (1 + np.exp(-g)) * u) @ np.asarray(p["wd"][e])
+        want.append(d)   # gate normalizes to 1 for top-1
+    np.testing.assert_allclose(out.reshape(-1, 8), np.stack(want),
+                               rtol=1e-3, atol=1e-4)
+    assert np.isfinite(float(aux))
+
+
+def test_moe_capacity_drops_tokens():
+    s = moe.MoESpec(d_model=4, n_experts=2, top_k=1, d_expert=8,
+                    capacity_factor=0.26, norm_topk=True)  # tiny capacity
+    p = moe.moe_init(KEY, s)
+    x = jax.random.normal(jax.random.key(1), (1, 64, 4), jnp.float32)
+    out, _ = moe.moe_apply(p, s, x, F32)
+    # dropped tokens produce exactly zero output rows
+    norms = jnp.linalg.norm(out.reshape(-1, 4), axis=-1)
+    assert int((norms == 0).sum()) > 0
+    assert int((norms > 0).sum()) > 0
+
+
+def test_moe_expert_padding_is_inert():
+    s1 = moe.MoESpec(d_model=8, n_experts=6, top_k=2, d_expert=16,
+                     capacity_factor=4.0, pad_to=1)
+    s2 = moe.MoESpec(d_model=8, n_experts=6, top_k=2, d_expert=16,
+                     capacity_factor=4.0, pad_to=4)   # pads to 8
+    p1 = moe.moe_init(KEY, s1)
+    # p2 = p1's experts + 2 zero-padded dummies
+    p2 = {k: (jnp.pad(v, [(0, 2)] + [(0, 0)] * (v.ndim - 1))
+              if k in ("wg", "wu", "wd") else v)
+          for k, v in p1.items()}
+    x = jax.random.normal(jax.random.key(1), (2, 5, 8), jnp.float32)
+    o1, _ = moe.moe_apply(p1, s1, x, F32)
+    o2, _ = moe.moe_apply(p2, s2, x, F32)
+    np.testing.assert_allclose(o1, o2, rtol=1e-4, atol=1e-5)
+
+
+# ----------------------------------------------------------- rope / m-rope
+def test_rope_preserves_norm_and_relative_phase():
+    b, s, h, hd = 1, 8, 2, 16
+    x = jax.random.normal(KEY, (b, s, h, hd))
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    out = layers.apply_rope(x, pos, theta=1e4)
+    np.testing.assert_allclose(jnp.linalg.norm(out, axis=-1),
+                               jnp.linalg.norm(x, axis=-1), rtol=1e-4)
+    # position 0 is the identity
+    np.testing.assert_allclose(out[:, 0], x[:, 0], rtol=1e-5, atol=1e-6)
+
+
+def test_mrope_sections_rotate_independently():
+    b, s, h, hd = 1, 4, 1, 16        # sections (2,3,3) over hd/2=8
+    x = jnp.ones((b, s, h, hd))
+    pos3 = jnp.zeros((b, s, 3), jnp.int32)
+    pos3 = pos3.at[..., 0].set(jnp.arange(s)[None])     # only temporal moves
+    out = layers.apply_rope(x, pos3, theta=1e4, mrope_sections=(2, 3, 3))
+    # frequency slots owned by the h/w sections (positions all 0) unchanged
+    np.testing.assert_allclose(out[0, :, 0, 2:8], x[0, :, 0, 2:8],
+                               rtol=1e-6)
+    np.testing.assert_allclose(out[0, :, 0, 10:16], x[0, :, 0, 10:16],
+                               rtol=1e-6)
+    # the temporal section rotates for t>0
+    assert not np.allclose(out[0, 1:, 0, :2], x[0, 1:, 0, :2])
+
+
+# ----------------------------------------------------------- chunked xent
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 8), st.sampled_from([1, 2, 4, 8]))
+def test_chunked_xent_matches_reference(seed, n_chunks):
+    b, s, d, v = 2, 16, 8, 32
+    ks = jax.random.split(jax.random.key(seed), 3)
+    x = jax.random.normal(ks[0], (b, s, d))
+    head = jax.random.normal(ks[1], (d, v))
+    labels = jax.random.randint(ks[2], (b, s), 0, v)
+    want = layers.softmax_xent((x @ head), labels)
+    for unroll in (False, True):
+        got = layers.chunked_xent(x, head, labels, n_chunks=n_chunks,
+                                  unroll=unroll)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)

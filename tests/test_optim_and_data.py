@@ -1,0 +1,176 @@
+"""Optimizer, gradient compression, data pipeline, checkpoint tests."""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint.checkpoint import CheckpointManager
+from repro.data.pipeline import DataConfig, SyntheticLM, make_pipeline
+from repro.optim.adamw import (AdamWConfig, adamw_init, adamw_update,
+                               clip_by_global_norm, lr_schedule)
+from repro.optim.compress import (CompressorConfig, compress_gradients,
+                                  init_residual)
+
+KEY = jax.random.key(0)
+
+
+# ------------------------------------------------------------------ adamw
+def _quadratic_params():
+    return {"w": jnp.asarray([2.0, -3.0, 1.5]), "b": jnp.asarray(4.0)}
+
+
+def test_adamw_decreases_quadratic():
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=1,
+                      total_steps=1000)
+    params = _quadratic_params()
+    state = adamw_init(params, cfg)
+
+    def loss(p):
+        return jnp.sum(jnp.square(p["w"])) + jnp.square(p["b"])
+
+    l0 = float(loss(params))
+    for _ in range(50):
+        grads = jax.grad(loss)(params)
+        params, state, _ = adamw_update(grads, state, params, cfg)
+    assert float(loss(params)) < 0.2 * l0
+
+
+def test_adamw_first_step_matches_closed_form():
+    cfg = AdamWConfig(lr=1e-2, b1=0.9, b2=0.999, eps=1e-8,
+                      weight_decay=0.0, grad_clip=1e9, warmup_steps=1,
+                      total_steps=10)
+    params = {"w": jnp.asarray([1.0, 2.0])}
+    state = adamw_init(params, cfg)
+    grads = {"w": jnp.asarray([0.1, -0.2])}
+    new_params, state, _ = adamw_update(grads, state, params, cfg)
+    # after bias correction, first Adam step = -lr * sign-ish g/|g|
+    step = np.asarray(new_params["w"] - params["w"])
+    want = -1e-2 * np.asarray(grads["w"]) / (np.abs(grads["w"]) + 1e-8)
+    np.testing.assert_allclose(step, want, rtol=1e-3)
+
+
+def test_int8_moments_track_f32_trajectory():
+    cfg32 = AdamWConfig(lr=0.05, weight_decay=0.0, warmup_steps=1,
+                        total_steps=100)
+    cfg8 = AdamWConfig(lr=0.05, weight_decay=0.0, warmup_steps=1,
+                       total_steps=100, int8_moments=True)
+    p32 = {"w": jnp.linspace(-1, 1, 256)}
+    p8 = {"w": jnp.linspace(-1, 1, 256)}
+    s32, s8 = adamw_init(p32, cfg32), adamw_init(p8, cfg8)
+
+    def loss(p):
+        return jnp.sum(jnp.square(p["w"] - 0.5))
+
+    for _ in range(30):
+        p32, s32, _ = adamw_update(jax.grad(loss)(p32), s32, p32, cfg32)
+        p8, s8, _ = adamw_update(jax.grad(loss)(p8), s8, p8, cfg8)
+    # trajectories stay close AND both converge toward 0.5
+    np.testing.assert_allclose(p8["w"], p32["w"], atol=5e-2)
+    assert float(jnp.abs(p8["w"] - 0.5).mean()) \
+        < 0.5 * float(jnp.abs(jnp.linspace(-1, 1, 256) - 0.5).mean())
+
+
+def test_grad_clip():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert abs(float(norm) - 20.0) < 1e-4
+    np.testing.assert_allclose(
+        jnp.linalg.norm(clipped["a"]), 1.0, rtol=1e-5)
+
+
+def test_lr_schedule_shape():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                      min_lr_ratio=0.1)
+    lrs = [float(lr_schedule(cfg, jnp.asarray(s))) for s in range(0, 101, 10)]
+    assert lrs[1] == pytest.approx(1.0, rel=1e-3)          # end of warmup
+    assert lrs[-1] == pytest.approx(0.1, rel=1e-2)         # floor
+    assert all(a >= b - 1e-6 for a, b in zip(lrs[1:], lrs[2:]))  # decay
+
+
+# ----------------------------------------------------------- compression
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_error_feedback_preserves_signal(seed):
+    """Over many steps, compressed-with-feedback gradients sum to (almost)
+    the true gradient sum — the residual never diverges."""
+    cfg = CompressorConfig(block=64, min_size=1)
+    g_true = jax.random.normal(jax.random.key(seed), (512,)) * 0.01
+    grads = {"w": g_true}
+    residual = init_residual(grads)
+    total = jnp.zeros_like(g_true)
+    for _ in range(20):
+        comp, residual = compress_gradients(grads, residual, cfg)
+        total = total + comp["w"]
+    np.testing.assert_allclose(total + residual["w"], 20 * g_true,
+                               rtol=1e-4, atol=1e-5)
+    assert float(jnp.abs(residual["w"]).max()) < 0.01  # bounded residual
+
+
+def test_small_leaves_bypass_compression():
+    cfg = CompressorConfig(min_size=1000)
+    grads = {"tiny": jnp.arange(8.0)}
+    res = init_residual(grads)
+    comp, _ = compress_gradients(grads, res, cfg)
+    np.testing.assert_array_equal(comp["tiny"], grads["tiny"])
+
+
+# ------------------------------------------------------------------- data
+def test_data_deterministic_and_shifted():
+    cfg = DataConfig(vocab_size=97, seq_len=16, global_batch=4)
+    src = SyntheticLM(cfg)
+    b1, b2 = src.batch_at(5), src.batch_at(5)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    b3 = src.batch_at(6)
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
+    np.testing.assert_array_equal(b1["tokens"][:, 1:], b1["labels"][:, :-1])
+
+
+def test_data_host_sharding_disjoint():
+    kw = dict(vocab_size=97, seq_len=8, global_batch=8, n_hosts=2)
+    a = SyntheticLM(DataConfig(host_id=0, **kw)).batch_at(0)
+    b = SyntheticLM(DataConfig(host_id=1, **kw)).batch_at(0)
+    assert a["tokens"].shape == (4, 8)
+    assert not np.array_equal(a["tokens"], b["tokens"])
+
+
+def test_pipeline_prefetches_in_background():
+    cfg = DataConfig(vocab_size=31, seq_len=4, global_batch=2, prefetch=3)
+    stop = threading.Event()
+    it = make_pipeline(cfg, stop_event=stop)
+    batches = [next(it) for _ in range(5)]
+    want = SyntheticLM(cfg).batch_at(2)
+    np.testing.assert_array_equal(batches[2]["tokens"], want["tokens"])
+    stop.set()
+
+
+# ------------------------------------------------------------- checkpoint
+def test_checkpoint_roundtrip_and_gc(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    state = {"w": jnp.arange(8.0), "opt": {"m": jnp.ones((3,))}}
+    for step in (10, 20, 30):
+        mgr.save(step, jax.tree.map(lambda a: a + step, state))
+    assert mgr.steps() == [20, 30]                 # keep=2 GC'd step 10
+    restored, step, _ = mgr.restore(state)
+    assert step == 30
+    np.testing.assert_array_equal(restored["w"], jnp.arange(8.0) + 30)
+
+
+def test_checkpoint_atomicity_ignores_torn_dirs(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(5, {"w": jnp.ones(4)})
+    torn = tmp_path / "step_00000009"
+    torn.mkdir()                                   # no manifest => torn
+    assert mgr.latest_step() == 5
+    restored, step, _ = mgr.restore({"w": jnp.zeros(4)})
+    assert step == 5
+
+
+def test_checkpoint_async(tmp_path):
+    mgr = CheckpointManager(tmp_path, async_save=True)
+    mgr.save(1, {"w": jnp.full((4,), 7.0)})
+    mgr.wait()
+    restored, step, _ = mgr.restore({"w": jnp.zeros(4)})
+    np.testing.assert_array_equal(restored["w"], jnp.full((4,), 7.0))

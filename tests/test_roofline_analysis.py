@@ -1,0 +1,131 @@
+"""Unit tests for the dry-run analysis machinery: HLO collective parsing,
+ring-cost model, affine extrapolation — plus a live end-to-end check that
+the parser finds the collectives XLA actually emits."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.roofline.analysis import (CollectiveOp, collective_stats,
+                                     combine_affine, parse_collectives)
+from helpers import run_multidevice
+
+FAKE_HLO = """
+HloModule jit_train_step
+
+ENTRY %main {
+  %ar = f32[2048,1024]{1,0} all-reduce(%x), replica_groups=[32,16]<=[512], to_apply=%add
+  %ag = bf16[16,4096]{1,0} all-gather(%y), replica_groups={{0,1,2,3}, {4,5,6,7}}, dimensions={1}
+  %rs = f32[128]{0} reduce-scatter(%z), replica_groups=[64,8]<=[512], to_apply=%add
+  %a2a = bf16[8,256]{1,0} all-to-all(%w), replica_groups=[32,16]<=[512]
+  %cp = f32[333]{0} collective-permute(%v), source_target_pairs={{0,1},{1,0}}
+  %ard = f32[64]{0} all-reduce-done(%ar2)
+  %fusion.1 = f32[10]{0} fusion(%a), kind=kLoop
+}
+"""
+
+
+def test_parse_collectives_finds_all_and_sizes():
+    ops = parse_collectives(FAKE_HLO)
+    kinds = sorted(o.op for o in ops)
+    assert kinds == ["all-gather", "all-reduce", "all-to-all",
+                     "collective-permute", "reduce-scatter"]
+    by = {o.op: o for o in ops}
+    assert by["all-reduce"].operand_bytes == 2048 * 1024 * 4
+    assert by["all-reduce"].group_size == 16
+    assert by["all-gather"].operand_bytes == 16 * 4096 * 2
+    assert by["all-gather"].group_size == 4
+    # reduce-scatter operand = result shard * group
+    assert by["reduce-scatter"].operand_bytes == 128 * 4 * 8
+    assert by["collective-permute"].operand_bytes == 333 * 4
+
+
+def test_ring_traffic_model():
+    ar = CollectiveOp("all-reduce", 1000, 10, "")
+    assert ar.per_chip_traffic == pytest.approx(2 * 1000 * 9 / 10)
+    ag = CollectiveOp("all-gather", 1000, 10, "")   # operand_bytes=result
+    assert ag.per_chip_traffic == pytest.approx(1000 / 10 * 9)
+    cp = CollectiveOp("collective-permute", 1000, 2, "")
+    assert cp.per_chip_traffic == 1000
+
+
+def test_collective_stats_aggregation():
+    st = collective_stats(FAKE_HLO)
+    assert st.count == 5
+    assert set(st.by_op) == {"all-reduce", "all-gather", "reduce-scatter",
+                             "all-to-all", "collective-permute"}
+    assert st.per_chip_bytes == pytest.approx(
+        sum(st.by_op.values()))
+
+
+def test_affine_combine():
+    base = {"flops_per_device": 10.0, "hbm_bytes_per_device": 5.0,
+            "collective_bytes_per_chip": 1.0}
+    kind = {"attn/mlp": {"flops_per_device": 14.0,
+                         "hbm_bytes_per_device": 7.0,
+                         "collective_bytes_per_chip": 1.5}}
+    tot = combine_affine(base, kind, {"attn/mlp": 10})
+    assert tot["flops_per_device"] == pytest.approx(10 + 10 * 4)
+    assert tot["hbm_bytes_per_device"] == pytest.approx(5 + 10 * 2)
+    assert tot["collective_bytes_per_chip"] == pytest.approx(1 + 10 * 0.5)
+
+
+def test_parser_on_real_xla_output():
+    out = run_multidevice("""
+        import jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.roofline.analysis import collective_stats
+        mesh = jax.make_mesh((8,), ("d",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        def f(x):
+            # force an all-reduce: row-sharded contraction
+            return x.T @ x
+        xs = jax.ShapeDtypeStruct((1024, 256), jnp.float32)
+        sh = NamedSharding(mesh, P("d", None))
+        c = jax.jit(f, in_shardings=(sh,)).lower(xs).compile()
+        st = collective_stats(c.as_text())
+        assert st.count >= 1, c.as_text()[:2000]
+        assert st.per_chip_bytes > 0
+        print("PARSER-LIVE-OK", st.by_op)
+    """)
+    assert "PARSER-LIVE-OK" in out
+
+
+def test_affine_method_against_full_unroll():
+    """The dry-run's core claim: cost(L layers) is affine in layer count.
+    Verified by compiling 0,1,2,5-layer variants of a real arch and
+    checking the 5-layer FLOPs against the affine prediction."""
+    out = run_multidevice("""
+        import jax, jax.numpy as jnp
+        from repro.configs import get_arch
+        from repro.models.transformer import Model, ExecOptions
+        import dataclasses
+
+        cfg0 = get_arch("gemma-2b").smoke()
+        kind = cfg0.layer_kinds()[0]
+
+        def flops(n_layers):
+            cfg = cfg0.with_layers((kind,) * n_layers)
+            m = Model(cfg, opts=ExecOptions(mode="cost", block_q=16,
+                                            block_kv=16))
+            def loss(p, b):
+                return m.loss_fn(p, b)[0]
+            params = jax.eval_shape(m.init, jax.random.key(0))
+            batch = {"tokens": jax.ShapeDtypeStruct((2, 32), jnp.int32),
+                     "labels": jax.ShapeDtypeStruct((2, 32), jnp.int32)}
+            c = jax.jit(jax.grad(loss)).lower(params, batch).compile()
+            ca = c.cost_analysis()
+            if isinstance(ca, list):
+                ca = ca[0]
+            return float(ca["flops"])
+
+        f0, f1, f5 = flops(0), flops(1), flops(5)
+        pred5 = f0 + 5 * (f1 - f0)
+        rel = abs(pred5 - f5) / f5
+        # at toy (smoke) scale, XLA fusion differences across depths add a
+        # few % of non-affinity on elementwise ops; matmul-dominated real
+        # configs are affine to <1% (layer cost is depth-independent)
+        assert rel < 0.08, (f0, f1, f5, pred5, rel)
+        print("AFFINE-OK", rel)
+    """, n_devices=1)
+    assert "AFFINE-OK" in out

@@ -1,0 +1,50 @@
+"""End-to-end system behaviour: real (tiny) training through the full
+production stack — sharded step, AdamW, deterministic data, checkpoints,
+supervised restart — asserting the loss actually falls and that failure
+injection does not change the trajectory."""
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import train as train_mod
+
+
+def _run(tmp_path, extra_args=()):
+    # codeqwen smoke: untied embeddings -> sane init loss scale
+    argv = ["--arch", "codeqwen1.5-7b", "--smoke", "--steps", "30",
+            "--batch", "4", "--seq", "32", "--lr", "3e-3",
+            "--save-every", "10", "--log-every", "1000",
+            "--ckpt-dir", str(tmp_path), *extra_args]
+    return train_mod.main(argv)
+
+
+def test_training_reduces_loss(tmp_path):
+    losses = _run(tmp_path / "a")
+    assert np.isfinite(losses).all()
+    assert np.mean(losses[-5:]) < 0.75 * np.mean(losses[:3]), \
+        (losses[:3], losses[-5:])
+
+
+def test_training_with_injected_failures_matches_clean_run(tmp_path):
+    clean = _run(tmp_path / "clean")
+    faulty = _run(tmp_path / "faulty", ("--inject-failures", "25"))
+    # after the injected failure at 25, training restores from step 20 and
+    # replays 20..24 deterministically: final losses identical
+    np.testing.assert_allclose(clean[-1], faulty[-1], rtol=1e-5)
+
+
+def test_training_with_compression_converges(tmp_path):
+    losses = _run(tmp_path / "comp", ("--compress-grads",))
+    assert np.mean(losses[-5:]) < 0.85 * np.mean(losses[:3])
+
+
+def test_serving_end_to_end():
+    from repro.launch import serve as serve_mod
+    done = serve_mod.main(["--arch", "gemma-2b", "--smoke", "--slots", "2",
+                           "--requests", "3", "--prompt-len", "4",
+                           "--max-new", "4", "--max-len", "32"])
+    assert len(done) == 3
+    assert all(len(r.out) == 4 for r in done)
