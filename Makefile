@@ -1,0 +1,13 @@
+.PHONY: smoke test tune bench
+
+smoke:        ## fast suite, skips multi-device subprocess tests
+	./scripts/ci.sh smoke
+
+test:         ## full tier-1 suite
+	./scripts/ci.sh full
+
+tune:         ## sweep the kernel design space, persist tuned plans
+	./scripts/ci.sh tune
+
+bench:        ## Fig. 7 staged-progression benchmark
+	PYTHONPATH=src python benchmarks/run.py

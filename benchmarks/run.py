@@ -15,10 +15,22 @@ structure on the TPU-adapted kernels:
   paper's FPGA numbers.
 
 Output: ``name,us_per_call,derived`` CSV rows (assignment contract).
+
+``--tune`` mode instead sweeps the repro.tune design space for all five
+Pallas kernels (two problem shapes each by default), persists the winners
+in the JSON plan cache (``results/tuned_plans.json``, or ``--tune-cache``),
+and emits ``kernel,shape,dtype,backend,heuristic_us,tuned_us,speedup,plan``
+CSV rows plus a full report at ``--tune-out`` (default
+``results/BENCH_tune.json``).  Because the heuristic plan is always
+candidate 0 of each sweep, tuned_us <= heuristic_us within a sweep's own
+measurements — the tuned column never regresses beyond timer noise.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
+from pathlib import Path
 from typing import Callable
 
 import jax
@@ -201,7 +213,34 @@ def bench_lm_train_step():
         emit(f"lm_train_step_{arch}-smoke", us, float("nan"))
 
 
-def main() -> None:
+def run_tune(args) -> None:
+    """--tune: sweep the transformation design space, persist best plans."""
+    from repro.tune import DEFAULT_SHAPES, Harness, PlanCache, tune
+
+    cache = PlanCache(args.tune_cache).load()
+    harness = Harness(reps=args.tune_reps, warmup=1)
+    results = []
+    print("kernel,shape,dtype,backend,heuristic_us,tuned_us,speedup,plan")
+    for kernel, shapes in DEFAULT_SHAPES.items():
+        for shape in shapes:
+            res = tune(kernel, shape, cache=cache, harness=harness)
+            results.append(res.to_dict())
+            shape_s = "x".join(map(str, shape))
+            plan_s = ";".join(f"{k}={v}" for k, v in sorted(
+                res.best.items()))
+            print(f"{kernel},{shape_s},{res.dtype},{res.backend},"
+                  f"{res.heuristic_us:.1f},{res.best_us:.1f},"
+                  f"{res.speedup:.2f},{plan_s}", flush=True)
+    path = cache.save()
+    out = Path(args.tune_out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(
+        {"cache": str(path), "results": results}, indent=2) + "\n")
+    print(f"# plan cache: {path} ({len(cache)} entries)")
+    print(f"# report: {out}")
+
+
+def run_progression() -> None:
     print("name,us_per_call,derived")
     bench_stencil()
     bench_matmul()
@@ -222,6 +261,25 @@ def main() -> None:
         prog = " | ".join(f"{n.split('_', 1)[1]}: {base / d:,.0f}x"
                           for n, d in stages)
         print(f"# {kern}: {prog}")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tune", action="store_true",
+                    help="sweep the repro.tune design space instead of the "
+                         "Fig. 7 progression")
+    ap.add_argument("--tune-cache", default=None,
+                    help="plan-cache JSON path (default: "
+                         "results/tuned_plans.json or $REPRO_TUNE_CACHE)")
+    ap.add_argument("--tune-out", default="results/BENCH_tune.json",
+                    help="tuned-vs-heuristic report JSON path")
+    ap.add_argument("--tune-reps", type=int, default=3,
+                    help="timing reps per candidate (median taken)")
+    args = ap.parse_args(argv)
+    if args.tune:
+        run_tune(args)
+    else:
+        run_progression()
 
 
 if __name__ == "__main__":

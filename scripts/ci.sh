@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# CI entry points.
+#   scripts/ci.sh smoke   — fast suite (-m "not slow"): well under a minute
+#   scripts/ci.sh full    — everything, incl. multi-device subprocess tests
+#   scripts/ci.sh tune    — design-space sweep; writes results/tuned_plans.json
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+case "${1:-smoke}" in
+  smoke) python -m pytest -q -m "not slow" ;;
+  full)  python -m pytest -q ;;
+  tune)  python benchmarks/run.py --tune ;;
+  *) echo "usage: $0 {smoke|full|tune}" >&2; exit 2 ;;
+esac

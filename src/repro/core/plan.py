@@ -18,7 +18,8 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Optional
+import itertools
+from typing import Iterator, Optional, Sequence
 
 from .memory import BF16_POLICY, DtypePolicy
 
@@ -54,6 +55,51 @@ class TransformConfig:
 
     def at_level(self, level: Level) -> "TransformConfig":
         return dataclasses.replace(self, level=level)
+
+
+# Default per-knob candidate sets for the autotuner (repro.tune).  These are
+# the paper's transformation parameters as *enumerable axes* rather than the
+# single point each kernel hard-codes: the sweep is what turns parameterized
+# kernels into peak-rate ones (FBLAS; Rong's programmatic-control argument).
+TUNE_LEVELS: Sequence[Level] = (
+    Level.T1_PIPELINED, Level.T2_VECTORIZED, Level.T3_REPLICATED)
+TUNE_VECTOR_WIDTHS: Sequence[int] = (128, 256, 512)
+TUNE_ACCUM_LANES: Sequence[int] = (4, 8, 16)
+TUNE_PREFETCH_DEPTHS: Sequence[int] = (1, 2)
+TUNE_VMEM_FRACTIONS: Sequence[float] = (0.5, 0.75, 0.9)
+
+
+def enumerate_configs(
+        base: Optional[TransformConfig] = None, *,
+        levels: Sequence[Level] = TUNE_LEVELS,
+        vector_widths: Sequence[int] = (None,),
+        accum_lanes: Sequence[int] = (None,),
+        prefetch_depths: Sequence[int] = (None,),
+        vmem_fractions: Sequence[float] = (None,),
+        max_configs: Optional[int] = None) -> Iterator[TransformConfig]:
+    """Cartesian sweep over the transformation knobs, anchored at ``base``.
+
+    ``None`` in a candidate list means "keep the base value", so callers
+    sweep only the axes they name.  Deterministic order (itertools.product
+    over the given sequences) so a seeded tuner re-visits candidates
+    identically run-to-run.
+    """
+    base = base or TransformConfig()
+    n = 0
+    for lvl, vw, al, pf, vf in itertools.product(
+            levels, vector_widths, accum_lanes, prefetch_depths,
+            vmem_fractions):
+        cfg = dataclasses.replace(
+            base,
+            level=lvl,
+            vector_width=base.vector_width if vw is None else vw,
+            accum_lanes=base.accum_lanes if al is None else al,
+            prefetch_depth=base.prefetch_depth if pf is None else pf,
+            vmem_fraction=base.vmem_fraction if vf is None else vf)
+        yield cfg
+        n += 1
+        if max_configs is not None and n >= max_configs:
+            return
 
 
 PAPER_STAGES = {

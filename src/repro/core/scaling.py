@@ -90,49 +90,76 @@ class TilePlanner:
         self.budget = int(hw.vmem_bytes * vmem_fraction)
         self.double_buffer = double_buffer
 
+    def plan_from_tiles(self, m: int, n: int, k: int,
+                        bm: int, bn: int, bk: int, *,
+                        in_bytes: int = 2, acc_bytes: int = 4) -> TilePlan:
+        """Materialize the TilePlan for explicit (bm, bn, bk) tiles, or raise
+        if the working set exceeds the VMEM budget.  This is the single
+        feasibility check shared by the heuristic solver, the autotuner's
+        space enumeration, and cache-deserialized plans."""
+        buf = 2 if self.double_buffer else 1
+        vmem = (bm * bk + bk * bn) * in_bytes * buf + bm * bn * acc_bytes
+        if vmem > self.budget:
+            raise ValueError(
+                f"tiles ({bm},{bn},{bk}) need {vmem} bytes of VMEM, "
+                f"budget is {self.budget}")
+        grid = (math.ceil(m / bm), math.ceil(n / bn), math.ceil(k / bk))
+        flops = 2.0 * bm * bn * bk
+        hbm = (bm * bk + bk * bn) * in_bytes
+        return TilePlan(bm, bn, bk, vmem, grid, flops, hbm)
+
+    def enumerate_matmul(self, m: int, n: int, k: int, *,
+                         in_bytes: int = 2, acc_bytes: int = 4,
+                         candidates: Optional[Sequence[int]] = None
+                         ) -> List[TilePlan]:
+        """All feasible MXU-aligned tilings within the VMEM budget — the
+        autotuner's matmul design space (§3.4 as an enumerable set rather
+        than a point solution).  Sorted best-first by the heuristic order
+        so `[0]`, when non-empty, is what ``plan_matmul`` returns."""
+        cands = list(candidates or (128, 256, 512, 1024, 2048))
+        mxu = self.hw.mxu_dim
+        plans: List[TilePlan] = []
+        for bm in cands:
+            # tiles must divide the (clamped) problem dim: matmul_pallas
+            # shrinks b to min(b, dim) and rejects ragged grids
+            if bm > round_up(m, mxu) or m % min(bm, m):
+                continue
+            for bn in cands:
+                if bn > round_up(n, mxu) or n % min(bn, n):
+                    continue
+                for bk in cands:
+                    if bk > round_up(k, mxu) or k % min(bk, k):
+                        continue
+                    try:
+                        plans.append(self.plan_from_tiles(
+                            m, n, k, bm, bn, bk,
+                            in_bytes=in_bytes, acc_bytes=acc_bytes))
+                    except ValueError:
+                        continue
+        plans.sort(key=_plan_order_key, reverse=True)
+        return plans
+
     def plan_matmul(self, m: int, n: int, k: int, *,
                     in_bytes: int = 2, acc_bytes: int = 4,
                     candidates: Optional[Sequence[int]] = None) -> TilePlan:
-        cands = list(candidates or (128, 256, 512, 1024, 2048))
-        best: Optional[TilePlan] = None
-        mxu = self.hw.mxu_dim
-        for bm in cands:
-            if bm > round_up(m, mxu):
-                continue
-            for bn in cands:
-                if bn > round_up(n, mxu):
-                    continue
-                for bk in cands:
-                    if bk > round_up(k, mxu):
-                        continue
-                    buf = 2 if self.double_buffer else 1
-                    vmem = (bm * bk + bk * bn) * in_bytes * buf \
-                        + bm * bn * acc_bytes
-                    if vmem > self.budget:
-                        continue
-                    grid = (math.ceil(m / bm), math.ceil(n / bn),
-                            math.ceil(k / bk))
-                    flops = 2.0 * bm * bn * bk
-                    hbm = (bm * bk + bk * bn) * in_bytes
-                    plan = TilePlan(bm, bn, bk, vmem, grid, flops, hbm)
-                    if best is None or _better(plan, best):
-                        best = plan
-        if best is None:
+        plans = self.enumerate_matmul(m, n, k, in_bytes=in_bytes,
+                                      acc_bytes=acc_bytes,
+                                      candidates=candidates)
+        if not plans:
             raise ValueError(
                 f"no MXU-aligned tiling of ({m},{n},{k}) fits "
                 f"{self.budget} bytes of VMEM")
-        return best
+        return plans[0]
 
-    def plan_stencil(self, rows: int, cols: int, halo: int = 1, *,
-                     dtype_bytes: int = 4,
-                     candidates: Optional[Sequence[int]] = None
-                     ) -> Tuple[int, int]:
-        """Block shape for a 2-D stencil: (brows+2*halo, bcols+2*halo) input
-        window + (brows, bcols) output, double-buffered.  The halo overlap is
-        the TPU form of the paper's delay buffer — each interior row is
-        DMA'd once per block instead of once per use."""
+    def enumerate_stencil(self, rows: int, cols: int, halo: int = 1, *,
+                          dtype_bytes: int = 4,
+                          candidates: Optional[Sequence[int]] = None
+                          ) -> List[Tuple[int, int]]:
+        """All feasible (brows, bcols) stencil blocks within the VMEM budget,
+        sorted best-first by halo waste (then larger blocks) — the
+        autotuner's stencil design space."""
         cands = list(candidates or (128, 256, 512, 1024, 2048, 4096))
-        best = None
+        feasible = []
         for br in cands:
             if br > round_up(rows, self.hw.sublane):
                 continue
@@ -144,19 +171,29 @@ class TilePlanner:
                 if vmem > self.budget:
                     continue
                 waste = ((br + 2 * halo) * (bc + 2 * halo)) / (br * bc)
-                key = (waste, -br * bc)
-                if best is None or key < best[0]:
-                    best = (key, (br, bc))
-        if best is None:
+                feasible.append(((waste, -br * bc), (br, bc)))
+        feasible.sort(key=lambda kv: kv[0])
+        return [blk for _, blk in feasible]
+
+    def plan_stencil(self, rows: int, cols: int, halo: int = 1, *,
+                     dtype_bytes: int = 4,
+                     candidates: Optional[Sequence[int]] = None
+                     ) -> Tuple[int, int]:
+        """Block shape for a 2-D stencil: (brows+2*halo, bcols+2*halo) input
+        window + (brows, bcols) output, double-buffered.  The halo overlap is
+        the TPU form of the paper's delay buffer — each interior row is
+        DMA'd once per block instead of once per use."""
+        blocks = self.enumerate_stencil(rows, cols, halo,
+                                        dtype_bytes=dtype_bytes,
+                                        candidates=candidates)
+        if not blocks:
             raise ValueError("no stencil tiling fits VMEM")
-        return best[1]
+        return blocks[0]
 
 
-def _better(a: TilePlan, b: TilePlan) -> bool:
-    """Prefer higher arithmetic intensity; tie-break on fewer grid steps."""
-    ka = (a.arithmetic_intensity, -math.prod(a.grid))
-    kb = (b.arithmetic_intensity, -math.prod(b.grid))
-    return ka > kb
+def _plan_order_key(p: TilePlan):
+    """Heuristic rank: higher arithmetic intensity, then fewer grid steps."""
+    return (p.arithmetic_intensity, -math.prod(p.grid))
 
 
 def replication_factor(reuse: int, unit_flops: float,

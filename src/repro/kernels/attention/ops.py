@@ -2,11 +2,12 @@
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import Optional, Union
 
 import jax
 
 from ...core.plan import Level
+from ...tune.cache import resolve_plan
 from ..common import interpret_default
 from . import ref
 from .flash import flash_attention_pallas
@@ -15,15 +16,10 @@ from .flash import flash_attention_pallas
 @functools.partial(jax.jit, static_argnames=("causal", "window", "level",
                                              "block_q", "block_kv",
                                              "interpret"))
-def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
-                    causal: bool = True, window: int = 0,
-                    level: Level = Level.T3_REPLICATED,
-                    block_q: int = 512, block_kv: int = 512,
-                    interpret: Optional[bool] = None) -> jax.Array:
-    """(B, H, S, hd) attention.  T0/T1 materialize (S, S); T2+ run the
-    online-softmax Pallas kernel."""
-    if interpret is None:
-        interpret = interpret_default()
+def _flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                     causal: bool, window: int, level: Level,
+                     block_q: int, block_kv: int,
+                     interpret: bool) -> jax.Array:
     if level in (Level.T0_NAIVE, Level.T1_PIPELINED):
         return ref.attention_ref(q, k, v, causal=causal, window=window)
     s = q.shape[2]
@@ -36,3 +32,28 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     return flash_attention_pallas(q, k, v, causal=causal, window=window,
                                   block_q=bq, block_kv=bkv,
                                   interpret=interpret)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    level: Level = Level.T3_REPLICATED,
+                    block_q: int = 512, block_kv: int = 512,
+                    plan: Union[str, dict, None] = "heuristic",
+                    interpret: Optional[bool] = None) -> jax.Array:
+    """(B, H, S, hd) attention.  T0/T1 materialize (S, S); T2+ run the
+    online-softmax Pallas kernel.
+
+    ``plan`` selects the tile geometry: ``"heuristic"`` (the ``block_q``/
+    ``block_kv`` arguments), ``"tuned"`` (autotuner cache, heuristic on a
+    miss), or a tuned kwargs dict (``block_q``/``block_kv``, optional
+    ``level``).
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    level, kw = resolve_plan("attention", q.shape, q.dtype, level, plan)
+    if kw:
+        block_q = kw.get("block_q", block_q)
+        block_kv = kw.get("block_kv", block_kv)
+    return _flash_attention(q, k, v, causal=causal, window=window,
+                            level=level, block_q=block_q, block_kv=block_kv,
+                            interpret=interpret)

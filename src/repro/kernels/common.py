@@ -2,6 +2,18 @@
 from __future__ import annotations
 
 import jax
+from jax.experimental.pallas import tpu as pltpu
+
+# JAX renamed TPUCompilerParams -> CompilerParams across 0.4 -> 0.5; support
+# both so the kernels run on whichever JAX the container ships.
+_COMPILER_PARAMS_CLS = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")
+
+
+def tpu_compiler_params(dimension_semantics):
+    """Version-tolerant ``pltpu.CompilerParams(dimension_semantics=...)``."""
+    return _COMPILER_PARAMS_CLS(
+        dimension_semantics=tuple(dimension_semantics))
 
 
 def on_cpu() -> bool:

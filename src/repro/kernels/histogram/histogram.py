@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..common import tpu_compiler_params
+
 
 def _hist_kernel(v_ref, o_ref, acc_ref, *, n_blocks: int, n_bins: int,
                  banks: int):
@@ -58,8 +60,7 @@ def histogram_pallas(values: jax.Array, n_bins: int = 256, *,
         out_specs=pl.BlockSpec((1, n_bins), lambda i: (0, 0)),
         out_shape=jax.ShapeDtypeStruct((1, n_bins), jnp.int32),
         scratch_shapes=[pltpu.VMEM((banks, n_bins), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("arbitrary",)),
+        compiler_params=tpu_compiler_params(("arbitrary",)),
         interpret=interpret,
     )(v2d)
     return out[0]

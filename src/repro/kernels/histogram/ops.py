@@ -2,12 +2,13 @@
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 
 from ...core.plan import Level
+from ...tune.cache import resolve_plan
 from ..common import interpret_default
 from . import ref
 from .histogram import histogram_pallas
@@ -15,11 +16,8 @@ from .histogram import histogram_pallas
 
 @functools.partial(jax.jit, static_argnames=("n_bins", "level", "block",
                                              "interpret"))
-def histogram(values: jax.Array, n_bins: int = 256, *,
-              level: Level = Level.T3_REPLICATED, block: int = 2048,
-              interpret: Optional[bool] = None) -> jax.Array:
-    if interpret is None:
-        interpret = interpret_default()
+def _histogram(values: jax.Array, n_bins: int, *, level: Level, block: int,
+               interpret: bool) -> jax.Array:
     if level in (Level.T0_NAIVE, Level.T1_PIPELINED):
         return ref.histogram_ref(values, n_bins)
     n = values.shape[0]
@@ -28,6 +26,26 @@ def histogram(values: jax.Array, n_bins: int = 256, *,
         block //= 2
     return histogram_pallas(values, n_bins, block=max(block, 8),
                             interpret=interpret)
+
+
+def histogram(values: jax.Array, n_bins: int = 256, *,
+              level: Level = Level.T3_REPLICATED, block: int = 2048,
+              plan: Union[str, dict, None] = "heuristic",
+              interpret: Optional[bool] = None) -> jax.Array:
+    """Histogram via one-hot MXU reduction (paper §2.3).
+
+    ``plan`` selects the value-block size: ``"heuristic"`` (the ``block``
+    argument), ``"tuned"`` (autotuner cache, heuristic on a miss), or a
+    tuned kwargs dict (``block``, optional ``level``).
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    level, kw = resolve_plan("histogram", (values.shape[0], n_bins),
+                             values.dtype, level, plan)
+    if kw:
+        block = kw.get("block", block)
+    return _histogram(values, n_bins, level=level, block=block,
+                      interpret=interpret)
 
 
 __all__ = ["histogram"]

@@ -2,21 +2,41 @@
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 
 from ...core.plan import Level
 from ...core.scaling import TilePlan, TilePlanner
+from ...tune.cache import resolve_plan
 from ..common import interpret_default
 from . import ref
 from .matmul import matmul_pallas
 
 
 @functools.partial(jax.jit, static_argnames=("level", "plan", "interpret"))
-def matmul(a: jax.Array, b: jax.Array, *, level: Level = Level.T3_REPLICATED,
-           plan: Optional[TilePlan] = None,
+def _matmul(a: jax.Array, b: jax.Array, *, level: Level,
+            plan: Optional[TilePlan], interpret: bool) -> jax.Array:
+    if level == Level.T0_NAIVE:
+        return ref.matmul_t0_naive(a, b)
+    if level == Level.T1_PIPELINED:
+        return ref.matmul_ref(a, b)
+    m, k = a.shape
+    _, n = b.shape
+    if plan is None:
+        if level == Level.T2_VECTORIZED:
+            plan = TilePlan(128, 128, 128, 0, (m // 128, n // 128, k // 128),
+                            0.0, 0.0)
+        else:
+            plan = TilePlanner().plan_matmul(
+                m, n, k, in_bytes=a.dtype.itemsize)
+    return matmul_pallas(a, b, plan, interpret=interpret)
+
+
+def matmul(a: jax.Array, b: jax.Array, *,
+           level: Level = Level.T3_REPLICATED,
+           plan: Union[str, dict, TilePlan, None] = "heuristic",
            interpret: Optional[bool] = None) -> jax.Array:
     """C = A @ B at a paper-§6.2 optimization stage.
 
@@ -26,20 +46,26 @@ def matmul(a: jax.Array, b: jax.Array, *, level: Level = Level.T3_REPLICATED,
     T2+: Pallas kernel; BlockSpecs from the TilePlanner (T2 uses minimal
         MXU-aligned 128 blocks = vectorization only; T3 uses the VMEM-
         budget-maximal plan = +replication/tiling).
+
+    ``plan`` selects the tile geometry: ``"heuristic"`` (TilePlanner),
+    ``"tuned"`` (autotuner cache, heuristic on a miss), an explicit
+    ``TilePlan``, or a tuned kwargs dict (``bm``/``bn``/``bk``, optional
+    ``prefetch_depth`` and ``level``).  Resolution happens outside jit so a
+    freshly tuned cache takes effect without retracing games.
     """
     if interpret is None:
         interpret = interpret_default()
-    if level == Level.T0_NAIVE:
-        return ref.matmul_t0_naive(a, b)
-    if level == Level.T1_PIPELINED:
-        return ref.matmul_ref(a, b)
-    n, k = a.shape
-    _, m = b.shape
-    if plan is None:
-        if level == Level.T2_VECTORIZED:
-            plan = TilePlan(128, 128, 128, 0, (n // 128, m // 128, k // 128),
-                            0.0, 0.0)
-        else:
-            plan = TilePlanner().plan_matmul(
-                n, m, k, in_bytes=a.dtype.itemsize)
-    return matmul_pallas(a, b, plan, interpret=interpret)
+    m, k = a.shape
+    _, n = b.shape
+    tile_plan: Optional[TilePlan] = None
+    if isinstance(plan, TilePlan):
+        tile_plan = plan
+    else:
+        level, kw = resolve_plan("matmul", (m, k, n), a.dtype, level, plan)
+        if kw:
+            planner = TilePlanner(
+                double_buffer=kw.get("prefetch_depth", 2) >= 2)
+            tile_plan = planner.plan_from_tiles(
+                m, n, k, kw["bm"], kw["bn"], kw["bk"],
+                in_bytes=a.dtype.itemsize)
+    return _matmul(a, b, level=level, plan=tile_plan, interpret=interpret)

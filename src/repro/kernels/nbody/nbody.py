@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..common import tpu_compiler_params
+
 from .ref import SOFTENING
 
 
@@ -71,7 +73,6 @@ def nbody_pallas(pos: jax.Array, mass: jax.Array, *, block_targets: int = 512,
         out_specs=pl.BlockSpec((3, bt), lambda i, j: (0, i)),
         out_shape=jax.ShapeDtypeStruct((3, n), jnp.float32),
         scratch_shapes=[pltpu.VMEM((3, bt), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "arbitrary")),
+        compiler_params=tpu_compiler_params(("parallel", "arbitrary")),
         interpret=interpret,
     )(pos, pos, mass2d)

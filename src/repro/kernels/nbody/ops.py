@@ -2,12 +2,13 @@
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 
 from ...core.plan import Level
+from ...tune.cache import resolve_plan
 from ..common import interpret_default
 from . import ref
 from .nbody import nbody_pallas
@@ -15,17 +16,9 @@ from .nbody import nbody_pallas
 
 @functools.partial(jax.jit, static_argnames=("level", "block_targets",
                                              "block_sources", "interpret"))
-def nbody_accel(pos: jax.Array, mass: jax.Array, *,
-                level: Level = Level.T3_REPLICATED,
-                block_targets: int = 512, block_sources: int = 512,
-                interpret: Optional[bool] = None) -> jax.Array:
-    """Gravitational accelerations, staged per paper §6.3.
-
-    T0/T1: jnp reference (materializes the full (N, N) interaction tensor —
-    the naive memory pattern).  T2+: Pallas kernel with VMEM-resident target
-    blocks and streamed source blocks (tiled accumulation interleaving)."""
-    if interpret is None:
-        interpret = interpret_default()
+def _nbody_accel(pos: jax.Array, mass: jax.Array, *, level: Level,
+                 block_targets: int, block_sources: int,
+                 interpret: bool) -> jax.Array:
     if level in (Level.T0_NAIVE, Level.T1_PIPELINED):
         return ref.nbody_accel_ref(pos, mass)
     n = pos.shape[1]
@@ -37,3 +30,30 @@ def nbody_accel(pos: jax.Array, mass: jax.Array, *,
         bs //= 2
     return nbody_pallas(pos, mass, block_targets=bt, block_sources=bs,
                         interpret=interpret)
+
+
+def nbody_accel(pos: jax.Array, mass: jax.Array, *,
+                level: Level = Level.T3_REPLICATED,
+                block_targets: int = 512, block_sources: int = 512,
+                plan: Union[str, dict, None] = "heuristic",
+                interpret: Optional[bool] = None) -> jax.Array:
+    """Gravitational accelerations, staged per paper §6.3.
+
+    T0/T1: jnp reference (materializes the full (N, N) interaction tensor —
+    the naive memory pattern).  T2+: Pallas kernel with VMEM-resident target
+    blocks and streamed source blocks (tiled accumulation interleaving).
+
+    ``plan`` selects the block geometry: ``"heuristic"`` (the
+    ``block_targets``/``block_sources`` arguments), ``"tuned"`` (autotuner
+    cache, heuristic on a miss), or a tuned kwargs dict (``block_targets``/
+    ``block_sources``, optional ``level``).
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    level, kw = resolve_plan("nbody", (pos.shape[1],), pos.dtype, level,
+                             plan)
+    if kw:
+        block_targets = kw.get("block_targets", block_targets)
+        block_sources = kw.get("block_sources", block_sources)
+    return _nbody_accel(pos, mass, level=level, block_targets=block_targets,
+                        block_sources=block_sources, interpret=interpret)

@@ -2,13 +2,14 @@
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 
 from ...core.plan import Level
 from ...core.scaling import TilePlanner
+from ...tune.cache import resolve_plan
 from ..common import interpret_default
 from . import ref
 from .stencil import jacobi4_pallas
@@ -17,19 +18,8 @@ from .stencil import jacobi4_pallas
 @functools.partial(jax.jit,
                    static_argnames=("steps", "level", "block_rows",
                                     "interpret"))
-def jacobi4(x: jax.Array, *, steps: int = 1,
-            level: Level = Level.T3_REPLICATED,
-            block_rows: Optional[int] = None,
-            interpret: Optional[bool] = None) -> jax.Array:
-    """`steps` sweeps of the 4-point Jacobi stencil.
-
-    T0/T1 run the jnp reference (XLA fuses the shifted adds); T2+ run the
-    Pallas delay-buffer kernel.  On real TPUs the iteration over `steps`
-    is the paper's §3.3 systolic time-replication: P consecutive sweeps
-    chained through VMEM-resident stripes.
-    """
-    if interpret is None:
-        interpret = interpret_default()
+def _jacobi4(x: jax.Array, *, steps: int, level: Level,
+             block_rows: Optional[int], interpret: bool) -> jax.Array:
     if level in (Level.T0_NAIVE, Level.T1_PIPELINED):
         return ref.jacobi4_iter_ref(x, steps)
     if block_rows is None:
@@ -44,3 +34,29 @@ def jacobi4(x: jax.Array, *, steps: int = 1,
         return jacobi4_pallas(x, block_rows=block_rows, interpret=interpret)
 
     return jax.lax.fori_loop(0, steps, body, x)
+
+
+def jacobi4(x: jax.Array, *, steps: int = 1,
+            level: Level = Level.T3_REPLICATED,
+            block_rows: Optional[int] = None,
+            plan: Union[str, dict, None] = "heuristic",
+            interpret: Optional[bool] = None) -> jax.Array:
+    """`steps` sweeps of the 4-point Jacobi stencil.
+
+    T0/T1 run the jnp reference (XLA fuses the shifted adds); T2+ run the
+    Pallas delay-buffer kernel.  On real TPUs the iteration over `steps`
+    is the paper's §3.3 systolic time-replication: P consecutive sweeps
+    chained through VMEM-resident stripes.
+
+    ``plan`` selects the block geometry: ``"heuristic"`` (TilePlanner),
+    ``"tuned"`` (autotuner cache, heuristic on a miss), or a tuned kwargs
+    dict (``block_rows``, optional ``level``).  An explicit ``block_rows``
+    argument wins over any plan.
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    level, kw = resolve_plan("stencil", x.shape, x.dtype, level, plan)
+    if block_rows is None and kw:
+        block_rows = kw.get("block_rows")
+    return _jacobi4(x, steps=steps, level=level, block_rows=block_rows,
+                    interpret=interpret)

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..common import tpu_compiler_params
+
 
 def _jacobi_kernel(north_ref, center_ref, south_ref, o_ref, *,
                    br: int, n_rows: int):
@@ -69,7 +71,6 @@ def jacobi4_pallas(x: jax.Array, *, block_rows: int = 256,
         ],
         out_specs=pl.BlockSpec((br, cols), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((rows, cols), x.dtype),
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("arbitrary",)),
+        compiler_params=tpu_compiler_params(("arbitrary",)),
         interpret=interpret,
     )(x, x, x)

@@ -28,6 +28,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..common import tpu_compiler_params
+
 
 def _wkv_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, o_ref, s_ref, *,
                 n_chunks: int, c: int, sc: int, hd: int):
@@ -124,7 +126,6 @@ def wkv_pallas(r, k, v, lw, u, *, chunk: int = 64, subchunk: int = 16,
         out_specs=pl.BlockSpec((1, c, hd), lambda b, j: (b, j, 0)),
         out_shape=jax.ShapeDtypeStruct((bh, s, hd), jnp.float32),
         scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "arbitrary")),
+        compiler_params=tpu_compiler_params(("parallel", "arbitrary")),
         interpret=interpret,
     )(r, k, v, lw, u)

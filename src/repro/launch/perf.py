@@ -85,6 +85,8 @@ def apply_variant(cfg, shape, v: Variant, rules):
 
 
 def run_variant(arch: str, shape_name: str, v: Variant, log=print):
+    from ..tune.cache import preload as preload_tuned
+    preload_tuned(log=log)
     cfg0 = get_arch(arch)
     shape = SHAPES[shape_name]
     mesh = make_production_mesh()

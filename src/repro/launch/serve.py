@@ -106,6 +106,8 @@ def main(argv=None):
     ap.add_argument("--max-len", type=int, default=128)
     args = ap.parse_args(argv)
 
+    from ..tune.cache import preload as preload_tuned
+    preload_tuned(log=print)
     cfg = get_arch(args.arch)
     if args.smoke:
         cfg = cfg.smoke()

@@ -57,6 +57,8 @@ def main(argv=None):
                     help="override width (with --smoke)")
     args = ap.parse_args(argv)
 
+    from ..tune.cache import preload as preload_tuned
+    preload_tuned(log=print)
     cfg = get_arch(args.arch)
     if args.smoke:
         cfg = cfg.smoke()

@@ -36,6 +36,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from ..core.memory import DtypePolicy
 from .layers import mlp_apply
 from .moe import MoESpec, _act
+from ..runtime.compat import shard_map
 
 Params = Dict[str, jax.Array]
 
@@ -155,7 +156,7 @@ def moe_apply_sharded(p: Params, s: MoESpec, x: jax.Array, dt: DtypePolicy,
         combined = jnp.zeros((bl * sl, d), cdt).at[st].add(per_assign)
         return combined.reshape(bl, sl, d), aux
 
-    body_sm = jax.shard_map(
+    body_sm = shard_map(
         body, mesh=mesh,
         in_specs=(x_spec, P(None, None), wgu_spec, wgu_spec, wd_spec),
         out_specs=(x_spec, P()),

@@ -1,0 +1,23 @@
+"""JAX-version compat shims (see ROADMAP.md "JAX-version compat policy").
+
+Leaf module: imports only jax, so both ``runtime`` and ``models`` can use it
+without cycles.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` across the 0.4 -> 0.5+ API move.
+
+    Newer JAX exposes it at the top level with a ``check_vma`` kwarg; 0.4.x
+    has ``jax.experimental.shard_map.shard_map`` with the same semantics
+    under ``check_rep``.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=check_vma)

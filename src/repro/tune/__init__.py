@@ -1,0 +1,30 @@
+"""Autotuning over the paper's transformation design space (repro.tune).
+
+The paper's thesis is that HLS transformations form a *parameterized design
+space* a performance engineer sweeps against hardware budgets.  This package
+makes that sweep executable for the Pallas kernels:
+
+  space.py   — per-kernel candidate enumeration, VMEM-feasibility-pruned
+               through the same TilePlanner arithmetic the heuristics use
+  measure.py — the shared timing harness (median-of-reps, injectable clock)
+  tuner.py   — the sweep driver; winners beat-or-match the heuristic by
+               construction (the heuristic is always candidate 0)
+  cache.py   — JSON persistence keyed by (kernel, shape, dtype, backend);
+               ``ops.py`` wrappers consult it for ``plan="tuned"`` and fall
+               back to TilePlanner heuristics on a miss
+
+Entry points: ``benchmarks/run.py --tune`` (sweep + CSV/JSON report) and
+``kernels.<k>(..., plan="tuned")`` (serve/train-time consumption after
+``cache.preload``).
+"""
+from .cache import (PlanCache, default_cache, default_cache_path, make_key,
+                    preload, resolve_plan)
+from .measure import Harness, Measurement
+from .space import SPACES
+from .tuner import DEFAULT_SHAPES, KERNELS, TuneResult, tune, tune_all
+
+__all__ = [
+    "PlanCache", "default_cache", "default_cache_path", "make_key",
+    "preload", "resolve_plan", "Harness", "Measurement", "SPACES",
+    "DEFAULT_SHAPES", "KERNELS", "TuneResult", "tune", "tune_all",
+]

@@ -1,0 +1,166 @@
+"""Persisted tuned-plan cache: JSON keyed by (kernel, shape, dtype, backend).
+
+File format (``results/tuned_plans.json`` by default, override with the
+``REPRO_TUNE_CACHE`` env var)::
+
+    {
+      "version": 1,
+      "entries": {
+        "matmul|256x256x256|float32|cpu": {
+          "plan": {"level": 3, "bm": 256, "bn": 256, "bk": 128},
+          "us": 812.4,              # best measured wall time
+          "heuristic_us": 1034.9,   # the TilePlanner/default plan's time
+          "candidates": 8           # sweep size that produced this entry
+        },
+        ...
+      }
+    }
+
+``plan`` is a flat dict of the kernel's tunable kwargs; ``level`` (the paper's
+T1→T3 stage, stored as an int) is optional and overrides the caller's level
+when present.  The cache answers exact-key lookups only — no interpolation
+across shapes — so a miss silently falls back to the ``TilePlanner``
+heuristics (``resolve_plan`` below).
+
+This module is intentionally import-light (no dependency on the tuner or the
+kernels) because the ``kernels/*/ops.py`` wrappers import ``resolve_plan``
+from here: keeping it leaf-level avoids an import cycle with
+``repro.tune.tuner``, which calls into the kernels.
+"""
+from __future__ import annotations
+
+import json
+import os
+from pathlib import Path
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+CACHE_VERSION = 1
+_REPO_ROOT = Path(__file__).resolve().parents[3]
+
+
+def default_cache_path() -> Path:
+    env = os.environ.get("REPRO_TUNE_CACHE")
+    if env:
+        return Path(env)
+    return _REPO_ROOT / "results" / "tuned_plans.json"
+
+
+def _dtype_name(dtype: Any) -> str:
+    return np.dtype(dtype).name
+
+
+def _backend_name(backend: Optional[str] = None) -> str:
+    if backend is not None:
+        return backend
+    import jax
+    return jax.default_backend()
+
+
+def make_key(kernel: str, shape: Sequence[int], dtype: Any,
+             backend: Optional[str] = None) -> str:
+    shape_s = "x".join(str(int(d)) for d in shape)
+    return f"{kernel}|{shape_s}|{_dtype_name(dtype)}|{_backend_name(backend)}"
+
+
+class PlanCache:
+    """In-memory dict of tuned plans with JSON load/save."""
+
+    def __init__(self, path: Union[str, Path, None] = None):
+        self.path = Path(path) if path is not None else default_cache_path()
+        self.entries: Dict[str, dict] = {}
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    def load(self) -> "PlanCache":
+        if self.path.exists():
+            try:
+                data = json.loads(self.path.read_text())
+            except (json.JSONDecodeError, OSError):
+                data = {}
+            if isinstance(data, dict) \
+                    and data.get("version") == CACHE_VERSION:
+                self.entries = dict(data.get("entries", {}))
+        return self
+
+    def save(self) -> Path:
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        payload = {"version": CACHE_VERSION, "entries": self.entries}
+        tmp = self.path.with_suffix(".tmp")
+        tmp.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+        tmp.replace(self.path)
+        return self.path
+
+    def get(self, kernel: str, shape: Sequence[int], dtype: Any,
+            backend: Optional[str] = None) -> Optional[dict]:
+        return self.entries.get(make_key(kernel, shape, dtype, backend))
+
+    def put(self, kernel: str, shape: Sequence[int], dtype: Any,
+            plan: Dict[str, Any], *, backend: Optional[str] = None,
+            **stats: Any) -> str:
+        key = make_key(kernel, shape, dtype, backend)
+        self.entries[key] = {"plan": dict(plan), **stats}
+        return key
+
+
+# ------------------------------------------------------------- default cache
+_default: Optional[PlanCache] = None
+
+
+def default_cache(*, reload: bool = False) -> PlanCache:
+    """Process-wide cache the ops wrappers consult for ``plan="tuned"``.
+
+    Loaded lazily from ``default_cache_path()`` on first use; call with
+    ``reload=True`` (or ``preload``) after tuning or after pointing
+    ``REPRO_TUNE_CACHE`` somewhere else.
+    """
+    global _default
+    if _default is None or reload \
+            or _default.path != default_cache_path():
+        _default = PlanCache().load()
+    return _default
+
+
+def preload(*, log=None) -> int:
+    """Serve/train/perf startup hook: (re)load the tuned-plan cache so the
+    first request/step already runs tuned kernels.  Returns the entry count.
+    """
+    cache = default_cache(reload=True)
+    if log is not None:
+        log(f"[tune] loaded {len(cache)} tuned plan(s) from {cache.path}")
+    return len(cache)
+
+
+def resolve_plan(kernel: str, shape: Sequence[int], dtype: Any,
+                 level, plan) -> Tuple[Any, Optional[Dict[str, Any]]]:
+    """Resolve an ops wrapper's ``plan=`` argument to (level, kwargs).
+
+    ``plan`` may be:
+      * ``None`` or ``"heuristic"`` — keep the wrapper's built-in heuristics,
+      * ``"tuned"`` — consult the default PlanCache; on a miss fall back to
+        the heuristics (never an error: tuning is an optimization),
+      * a dict of tuned kwargs (possibly with ``"level"``) — use verbatim.
+
+    Concrete plan objects (e.g. a TilePlan) are the wrapper's own business
+    and should not be passed here.  Returns the possibly-overridden level
+    and a kwargs dict or ``None``.
+    """
+    from ..core.plan import Level
+
+    if plan is None or plan == "heuristic":
+        return level, None
+    if plan == "tuned":
+        entry = default_cache().get(kernel, shape, dtype)
+        if entry is None:
+            return level, None
+        plan = entry.get("plan", {})
+    if isinstance(plan, dict):
+        kwargs = dict(plan)
+        if "level" in kwargs:
+            level = Level(kwargs.pop("level"))
+        return level, kwargs
+    raise ValueError(
+        f"plan must be 'tuned', 'heuristic', None, or a kwargs dict; "
+        f"got {plan!r}")

@@ -1,0 +1,51 @@
+"""Shared measurement harness for the autotuner.
+
+One code path times every candidate of every kernel so numbers are
+comparable within a sweep: warmup calls (compile/trace amortized), per-rep
+wall times, median-of-reps (robust to scheduler noise), failures captured
+rather than raised — an infeasible candidate simply loses the sweep.
+
+The clock is injectable so tests can drive the tuner with a deterministic
+stub and assert the search itself (ordering, tie-breaks, cache writes) is
+reproducible.
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from typing import Callable
+
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class Measurement:
+    us: float                # median wall microseconds per call (inf if !ok)
+    reps: int
+    ok: bool = True
+    error: str = ""
+
+
+class Harness:
+    """Times zero-arg callables returning jax arrays (or pytrees)."""
+
+    def __init__(self, *, reps: int = 3, warmup: int = 1,
+                 clock: Callable[[], float] = time.perf_counter):
+        self.reps = max(1, reps)
+        self.warmup = max(0, warmup)
+        self.clock = clock
+
+    def measure(self, fn: Callable[[], object]) -> Measurement:
+        try:
+            for _ in range(self.warmup):
+                jax.block_until_ready(fn())
+            times = []
+            for _ in range(self.reps):
+                t0 = self.clock()
+                jax.block_until_ready(fn())
+                times.append((self.clock() - t0) * 1e6)
+            return Measurement(us=statistics.median(times), reps=self.reps)
+        except Exception as e:  # candidate failed: it loses, tuning goes on
+            return Measurement(us=float("inf"), reps=0, ok=False,
+                               error=f"{type(e).__name__}: {e}")

@@ -1,0 +1,176 @@
+"""Per-kernel candidate enumeration — the paper's design space, pruned.
+
+Each function returns a list of candidate plan dicts for one kernel at one
+problem shape.  A plan dict holds the kernel's tunable call kwargs plus an
+optional ``"level"`` (paper stage T1→T3, as an int for JSON friendliness).
+The paper's transformation parameters map onto the kernels' knobs as:
+
+  tile geometry (§3.4)    -> bm/bn/bk (matmul), block_rows (stencil)
+  vector width (§3.1)     -> lane-dim block sizes: block_kv, block (histogram),
+                             block_sources (nbody)
+  accumulator lanes (§2.1)-> row-dim accumulator tiles: block_q,
+                             block_targets
+  prefetch depth (§4.2)   -> double-buffering (TilePlanner double_buffer)
+  level (T1→T3)           -> reference lowering vs Pallas kernel
+
+Every candidate is feasibility-pruned against the VMEM budget through the
+same ``TilePlanner`` working-set arithmetic the heuristics use, so the
+tuner never times (or caches) a plan the hardware could not hold.  The
+first candidate of every space is the exact heuristic the kernel would
+pick on its own — the sweep can therefore only match or beat the default,
+which is what makes tuned-vs-heuristic rows meaningful.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Sequence
+
+from ..core.model import TPU_V5E, HardwareSpec
+from ..core.plan import Level, TUNE_PREFETCH_DEPTHS
+from ..core.scaling import TilePlanner
+
+PlanDict = Dict[str, Any]
+
+# modest default: sweeps stay tens-of-candidates even on big shapes
+MAX_CANDIDATES = 8
+
+
+def _dedup(cands: List[PlanDict], cap: int) -> List[PlanDict]:
+    seen, out = set(), []
+    for c in cands:
+        key = tuple(sorted(c.items()))
+        if key not in seen:
+            seen.add(key)
+            out.append(c)
+        if len(out) >= cap:
+            break
+    return out
+
+
+def _divisors(n: int, cands: Sequence[int]) -> List[int]:
+    return [c for c in cands if c <= n and n % c == 0]
+
+
+def matmul_space(shape: Sequence[int], dtype_bytes: int = 4, *,
+                 hw: HardwareSpec = TPU_V5E,
+                 max_candidates: int = MAX_CANDIDATES) -> List[PlanDict]:
+    """shape = (m, k, n) for C[m,n] = A[m,k] @ B[k,n]."""
+    m, k, n = shape
+    heur = TilePlanner(hw).plan_matmul(m, n, k, in_bytes=dtype_bytes)
+    # knob sweep of the heuristic tiles goes BEFORE the tile enumeration so
+    # the max_candidates cap can never silently drop a whole axis: prefetch
+    # depth 1 (§4.2 off) halves the A/B working set, so it is feasible
+    # whenever the double-buffered plan is
+    cands: List[PlanDict] = [
+        {"level": int(Level.T3_REPLICATED), "bm": heur.bm, "bn": heur.bn,
+         "bk": heur.bk, "prefetch_depth": pf}
+        for pf in sorted(TUNE_PREFETCH_DEPTHS, reverse=True)
+    ]
+    cands.append({"level": int(Level.T1_PIPELINED)})
+    for plan in TilePlanner(hw).enumerate_matmul(m, n, k,
+                                                 in_bytes=dtype_bytes):
+        cands.append({"level": int(Level.T3_REPLICATED), "bm": plan.bm,
+                      "bn": plan.bn, "bk": plan.bk, "prefetch_depth": 2})
+    return _dedup(cands, max_candidates)
+
+
+def stencil_space(shape: Sequence[int], dtype_bytes: int = 4, *,
+                  hw: HardwareSpec = TPU_V5E,
+                  max_candidates: int = MAX_CANDIDATES) -> List[PlanDict]:
+    """shape = (rows, cols)."""
+    rows, cols = shape
+    planner = TilePlanner(hw)
+    feasible = [br for br, _ in planner.enumerate_stencil(
+        rows, cols, dtype_bytes=dtype_bytes,
+        candidates=_divisors(rows, (8, 16, 32, 64, 128, 256, 512, 1024)))]
+    try:
+        br_heur, _ = planner.plan_stencil(rows, cols,
+                                          dtype_bytes=dtype_bytes)
+        br_heur = min(br_heur, rows)
+        while rows % br_heur:
+            br_heur //= 2
+    except ValueError:
+        # rows too small for the planner's default candidate grid: the
+        # "heuristic" becomes the best divisor-aligned feasible block
+        br_heur = feasible[0] if feasible else None
+    cands: List[PlanDict] = []
+    if br_heur is not None:
+        cands.append({"level": int(Level.T3_REPLICATED),
+                      "block_rows": br_heur})
+    cands.append({"level": int(Level.T1_PIPELINED)})
+    for br in sorted(set(feasible), reverse=True):
+        cands.append({"level": int(Level.T3_REPLICATED), "block_rows": br})
+    return _dedup(cands, max_candidates)
+
+
+def attention_space(shape: Sequence[int], dtype_bytes: int = 2, *,
+                    hw: HardwareSpec = TPU_V5E,
+                    max_candidates: int = MAX_CANDIDATES) -> List[PlanDict]:
+    """shape = (batch, heads, seq, head_dim)."""
+    _, _, s, hd = shape
+    budget = TilePlanner(hw).budget
+    cands: List[PlanDict] = [
+        {"level": int(Level.T3_REPLICATED), "block_q": min(512, s),
+         "block_kv": min(512, s)},
+        {"level": int(Level.T1_PIPELINED)},
+    ]
+    for bq in _divisors(s, (512, 256, 128, 64, 32)):
+        for bkv in _divisors(s, (512, 256, 128, 64, 32)):
+            # working set: Q tile + K/V tiles + logits tile + O/m/l carry,
+            # double-buffered KV streams (§4.2)
+            vmem = (bq * hd + 2 * 2 * bkv * hd + bq * bkv
+                    + 2 * bq * hd) * dtype_bytes
+            if vmem <= budget:
+                cands.append({"level": int(Level.T3_REPLICATED),
+                              "block_q": bq, "block_kv": bkv})
+    return _dedup(cands, max_candidates)
+
+
+def histogram_space(shape: Sequence[int], dtype_bytes: int = 4, *,
+                    hw: HardwareSpec = TPU_V5E,
+                    max_candidates: int = MAX_CANDIDATES) -> List[PlanDict]:
+    """shape = (n_values, n_bins)."""
+    n, n_bins = shape
+    budget = TilePlanner(hw).budget
+    cands: List[PlanDict] = [
+        {"level": int(Level.T3_REPLICATED), "block": min(2048, n)},
+        {"level": int(Level.T1_PIPELINED)},
+    ]
+    for block in _divisors(n, (8192, 4096, 2048, 1024, 512, 256)):
+        if block % 8:
+            continue
+        # one-hot tile (block, n_bins) + value block + bin accumulator
+        vmem = (block * n_bins + block) * dtype_bytes + n_bins * 4
+        if vmem <= budget:
+            cands.append({"level": int(Level.T3_REPLICATED), "block": block})
+    return _dedup(cands, max_candidates)
+
+
+def nbody_space(shape: Sequence[int], dtype_bytes: int = 4, *,
+                hw: HardwareSpec = TPU_V5E,
+                max_candidates: int = MAX_CANDIDATES) -> List[PlanDict]:
+    """shape = (n_bodies,)."""
+    (n,) = shape
+    budget = TilePlanner(hw).budget
+    cands: List[PlanDict] = [
+        {"level": int(Level.T3_REPLICATED), "block_targets": min(512, n),
+         "block_sources": min(512, n)},
+        {"level": int(Level.T1_PIPELINED)},
+    ]
+    for bt in _divisors(n, (512, 256, 128, 64, 32)):
+        for bs in _divisors(n, (512, 256, 128, 64, 32)):
+            # resident targets (pos+acc) + streamed source block (pos+mass,
+            # double-buffered) + (bt, bs) pairwise distance tile
+            vmem = (4 * bt + 2 * 4 * bs + bt * bs) * dtype_bytes
+            if vmem <= budget:
+                cands.append({"level": int(Level.T3_REPLICATED),
+                              "block_targets": bt, "block_sources": bs})
+    return _dedup(cands, max_candidates)
+
+
+SPACES = {
+    "matmul": matmul_space,
+    "stencil": stencil_space,
+    "attention": attention_space,
+    "histogram": histogram_space,
+    "nbody": nbody_space,
+}

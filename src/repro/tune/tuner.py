@@ -1,0 +1,199 @@
+"""Benchmark-driven sweep over the per-kernel design spaces.
+
+``tune()`` runs one (kernel, shape, dtype) cell: enumerate the pruned
+candidate plans (``space.py``), time each through the shared harness
+(``measure.py``), pick the fastest, and persist it in the ``PlanCache`` so
+the ``ops.py`` wrappers pick it up via ``plan="tuned"``.
+
+The candidate list always starts with the exact heuristic plan the kernel
+would use on its own, so ``best_us <= heuristic_us`` holds *within the same
+sweep's measurements* by construction — the tuned plan is never slower than
+the heuristic beyond re-measurement noise.
+
+Kernels are imported lazily inside the input/call builders: ``ops.py``
+imports ``tune.cache`` at module level, and keeping this module free of
+top-level kernel imports breaks the cycle.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .cache import PlanCache, make_key
+from .measure import Harness, Measurement
+from .space import SPACES, PlanDict
+
+# Default problem shapes per kernel for `benchmarks/run.py --tune` (kept
+# interpret-mode-small; on a real TPU pass production shapes instead).
+DEFAULT_SHAPES: Dict[str, List[Tuple[int, ...]]] = {
+    "matmul": [(256, 256, 256), (384, 128, 512)],
+    "stencil": [(128, 256), (256, 512)],
+    "attention": [(1, 2, 128, 64), (1, 4, 256, 64)],
+    "histogram": [(1 << 14, 256), (1 << 16, 256)],
+    "nbody": [(256,), (512,)],
+}
+
+
+def _matmul_inputs(shape, dtype):
+    m, k, n = shape
+    a = jax.random.normal(jax.random.key(0), (m, k), dtype)
+    b = jax.random.normal(jax.random.key(1), (k, n), dtype)
+    return (a, b)
+
+
+def _stencil_inputs(shape, dtype):
+    return (jax.random.normal(jax.random.key(0), shape, dtype),)
+
+
+def _attention_inputs(shape, dtype):
+    ks = jax.random.split(jax.random.key(0), 3)
+    return tuple(jax.random.normal(kk, shape, dtype) for kk in ks)
+
+
+def _histogram_inputs(shape, dtype):
+    n, n_bins = shape
+    return (jax.random.randint(jax.random.key(0), (n,), 0, n_bins, dtype),
+            n_bins)
+
+
+def _nbody_inputs(shape, dtype):
+    (n,) = shape
+    pos = jax.random.normal(jax.random.key(0), (3, n), dtype)
+    mass = jax.random.uniform(jax.random.key(1), (n,), dtype) + 0.1
+    return (pos, mass)
+
+
+def _call_matmul(args, plan):
+    from ..kernels.matmul import matmul
+    return matmul(*args, plan=plan)
+
+
+def _call_stencil(args, plan):
+    from ..kernels.stencil import jacobi4
+    return jacobi4(*args, steps=1, plan=plan)
+
+
+def _call_attention(args, plan):
+    from ..kernels.attention import flash_attention
+    return flash_attention(*args, plan=plan)
+
+
+def _call_histogram(args, plan):
+    from ..kernels.histogram import histogram
+    return histogram(*args, plan=plan)
+
+
+def _call_nbody(args, plan):
+    from ..kernels.nbody import nbody_accel
+    return nbody_accel(*args, plan=plan)
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelTuneSpec:
+    name: str
+    make_inputs: Callable[[Sequence[int], Any], tuple]
+    call: Callable[[tuple, PlanDict], jax.Array]
+    default_dtype: Any
+
+
+KERNELS: Dict[str, KernelTuneSpec] = {
+    "matmul": KernelTuneSpec("matmul", _matmul_inputs, _call_matmul,
+                             jnp.float32),
+    "stencil": KernelTuneSpec("stencil", _stencil_inputs, _call_stencil,
+                              jnp.float32),
+    "attention": KernelTuneSpec("attention", _attention_inputs,
+                                _call_attention, jnp.bfloat16),
+    "histogram": KernelTuneSpec("histogram", _histogram_inputs,
+                                _call_histogram, jnp.int32),
+    "nbody": KernelTuneSpec("nbody", _nbody_inputs, _call_nbody,
+                            jnp.float32),
+}
+
+
+@dataclasses.dataclass
+class TuneResult:
+    kernel: str
+    shape: Tuple[int, ...]
+    dtype: str
+    backend: str
+    best: PlanDict
+    best_us: float
+    heuristic_us: float
+    rows: List[dict]             # [{"plan": ..., "us": ..., "ok": ...}]
+
+    @property
+    def speedup(self) -> float:
+        return self.heuristic_us / max(self.best_us, 1e-9)
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["shape"] = list(self.shape)
+        d["speedup"] = self.speedup
+        d["key"] = make_key(self.kernel, self.shape, self.dtype,
+                            self.backend)
+        return d
+
+
+def tune(kernel: str, shape: Sequence[int], *, dtype: Any = None,
+         cache: Optional[PlanCache] = None,
+         harness: Optional[Harness] = None,
+         max_candidates: Optional[int] = None,
+         log: Optional[Callable[[str], None]] = None) -> TuneResult:
+    """Sweep one (kernel, shape) cell; returns and (optionally) caches the
+    winner.  ``harness`` is injectable for deterministic tests."""
+    spec = KERNELS[kernel]
+    dtype = dtype or spec.default_dtype
+    harness = harness or Harness()
+    dtype_bytes = jnp.dtype(dtype).itemsize
+    space_kw = {} if max_candidates is None \
+        else {"max_candidates": max_candidates}
+    candidates = SPACES[kernel](tuple(shape), dtype_bytes, **space_kw)
+    args = spec.make_inputs(tuple(shape), dtype)
+
+    rows: List[dict] = []
+    best_i, best_m = None, None
+    for i, cand in enumerate(candidates):
+        fn = functools.partial(spec.call, args, cand)
+        m: Measurement = harness.measure(fn)
+        rows.append({"plan": cand, "us": m.us, "ok": m.ok,
+                     **({"error": m.error} if not m.ok else {})})
+        if log:
+            log(f"  [{kernel} {shape}] {cand} -> "
+                f"{m.us:.1f}us{'' if m.ok else ' (FAILED: ' + m.error + ')'}")
+        if m.ok and (best_m is None or m.us < best_m.us):
+            best_i, best_m = i, m
+    if best_m is None:
+        raise RuntimeError(
+            f"every candidate failed for {kernel} {shape}: {rows}")
+
+    heuristic_us = rows[0]["us"]      # candidate 0 is always the heuristic
+    backend = jax.default_backend()
+    result = TuneResult(kernel=kernel, shape=tuple(shape),
+                        dtype=jnp.dtype(dtype).name, backend=backend,
+                        best=candidates[best_i], best_us=best_m.us,
+                        heuristic_us=heuristic_us, rows=rows)
+    if cache is not None:
+        cache.put(kernel, shape, dtype, result.best,
+                  us=round(result.best_us, 3),
+                  heuristic_us=round(heuristic_us, 3),
+                  candidates=len(candidates))
+    return result
+
+
+def tune_all(shapes: Optional[Dict[str, List[Tuple[int, ...]]]] = None, *,
+             cache: Optional[PlanCache] = None,
+             harness: Optional[Harness] = None,
+             max_candidates: Optional[int] = None,
+             log: Optional[Callable[[str], None]] = None) -> List[TuneResult]:
+    """Sweep every kernel over its shape list (default: DEFAULT_SHAPES)."""
+    shapes = shapes or DEFAULT_SHAPES
+    results = []
+    for kernel, shape_list in shapes.items():
+        for shape in shape_list:
+            results.append(tune(kernel, shape, cache=cache, harness=harness,
+                                max_candidates=max_candidates, log=log))
+    return results

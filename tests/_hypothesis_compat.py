@@ -1,0 +1,99 @@
+"""Offline fallback for the ``hypothesis`` property-testing API.
+
+The container this repo is developed in has no network access, so
+``hypothesis`` may not be installable.  This module re-exports the real
+package when it is present (identical semantics) and otherwise provides a
+minimal drop-in implementing the subset the test-suite uses:
+
+  * ``strategies.integers(lo, hi)``
+  * ``strategies.floats(lo, hi)``
+  * ``strategies.sampled_from(seq)``
+  * ``strategies.lists(elem, min_size=, max_size=)``
+  * ``@given(*strategies)`` — draws ``max_examples`` example tuples from a
+    seeded PRNG (deterministic across runs) and calls the test once per
+    example, re-raising the first failure with the offending example shown.
+  * ``@settings(max_examples=, deadline=)`` — honoured in either decorator
+    order; ``deadline`` is accepted and ignored.
+
+Tests import from here instead of ``hypothesis`` directly::
+
+    from _hypothesis_compat import given, settings, strategies as st
+"""
+from __future__ import annotations
+
+try:                                       # real hypothesis wins when present
+    from hypothesis import given, settings, strategies  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import random
+
+    _SEED = 0xC0FFEE          # fixed: failures reproduce run-to-run
+    _DEFAULT_MAX_EXAMPLES = 100
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng: random.Random):
+            return self._draw(rng)
+
+    class strategies:  # noqa: N801 - mimics the `hypothesis.strategies` module
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _Strategy:
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value: float, max_value: float) -> _Strategy:
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements) -> _Strategy:
+            elements = list(elements)
+            return _Strategy(lambda rng: rng.choice(elements))
+
+        @staticmethod
+        def lists(elements: _Strategy, *, min_size: int = 0,
+                  max_size: int = 10) -> _Strategy:
+            def draw(rng):
+                n = rng.randint(min_size, max_size)
+                return [elements.example(rng) for _ in range(n)]
+            return _Strategy(draw)
+
+    def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES,
+                 deadline=None, **_ignored):
+        def deco(fn):
+            fn._hc_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strats: _Strategy):
+        def deco(fn):
+            # NB: not functools.wraps — copying __wrapped__ would make pytest
+            # unwrap to fn's signature and demand fixtures for drawn args.
+            def wrapper(*args, **kwargs):
+                max_examples = getattr(
+                    wrapper, "_hc_max_examples",
+                    getattr(fn, "_hc_max_examples", _DEFAULT_MAX_EXAMPLES))
+                rng = random.Random(_SEED)
+                for i in range(max_examples):
+                    example = tuple(s.example(rng) for s in strats)
+                    try:
+                        fn(*args, *example, **kwargs)
+                    except Exception as e:
+                        raise AssertionError(
+                            f"falsifying example #{i + 1} "
+                            f"for {fn.__name__}: {example!r}") from e
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = getattr(fn, "__qualname__", fn.__name__)
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            if hasattr(fn, "_hc_max_examples"):
+                wrapper._hc_max_examples = fn._hc_max_examples
+            return wrapper
+        return deco
+
+st = strategies
+
+__all__ = ["given", "settings", "strategies", "st", "HAVE_HYPOTHESIS"]

@@ -32,6 +32,7 @@ def make_batch(cfg, b=2, s=32, seed=7):
     return batch
 
 
+@pytest.mark.slow   # one full train step per arch: minutes in total
 @pytest.mark.parametrize("name", sorted(ARCHS))
 def test_arch_smoke_train_step(name):
     cfg = ARCHS[name].smoke()

@@ -4,6 +4,8 @@ import pytest
 
 from helpers import run_multidevice
 
+pytestmark = pytest.mark.slow   # multi-device subprocess tests
+
 
 def test_sharded_train_step_matches_single_device():
     out = run_multidevice("""
@@ -34,8 +36,8 @@ def test_sharded_train_step_matches_single_device():
         _, _, met_ref = step(params, opt, batch)
 
         # sharded on a (4,2) mesh with SP/TP/FSDP constraints
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((4, 2), ("data", "model"))
         rules = make_rules(mesh)
         from jax.sharding import NamedSharding, PartitionSpec as P
         def con(x):
@@ -70,8 +72,8 @@ def test_moe_sharded_matches_global():
         from repro.models import moe
         from repro.models.moe_sharded import moe_apply_sharded
 
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((2, 4), ("data", "model"))
         # ample capacity so neither path drops tokens
         s = moe.MoESpec(d_model=16, n_experts=8, top_k=2, d_expert=32,
                         capacity_factor=8.0, norm_topk=True, pad_to=4)
@@ -104,8 +106,8 @@ def test_pipeline_parallel_matches_sequential():
         from repro.runtime.pipeline_parallel import (bubble_fraction,
                                                      pipeline_apply)
 
-        mesh = jax.make_mesh((4,), ("pod",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((4,), ("pod",))
         S, M, mb, d = 4, 8, 2, 16
         ks = jax.random.split(jax.random.key(0), S)
         stage_params = {"w": jnp.stack([

@@ -10,6 +10,8 @@ from repro.runtime.fault_tolerance import (FailureInjector, InjectedFailure,
                                            StragglerWatch, Supervisor)
 from helpers import run_multidevice
 
+pytestmark = pytest.mark.slow   # multi-device subprocess tests
+
 
 def _step_factory():
     """A deterministic toy 'training': state = (w, step_count)."""
@@ -72,8 +74,8 @@ def test_elastic_reshard_8_to_4_devices():
         from jax.sharding import Mesh
 
         devs = jax.devices()
-        mesh8 = jax.make_mesh((4, 2), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import make_mesh
+        mesh8 = make_mesh((4, 2), ("data", "model"))
         mesh4 = Mesh(np.asarray(devs[:4]).reshape(2, 2), ("data", "model"))
 
         state = {"layer.mlp.wg": jnp.arange(64.0).reshape(8, 8),

@@ -70,13 +70,14 @@ def test_affine_combine():
     assert tot["collective_bytes_per_chip"] == pytest.approx(1 + 10 * 0.5)
 
 
+@pytest.mark.slow   # multi-device subprocess compile
 def test_parser_on_real_xla_output():
     out = run_multidevice("""
         import jax, jax.numpy as jnp
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.roofline.analysis import collective_stats
-        mesh = jax.make_mesh((8,), ("d",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((8,), ("d",))
         def f(x):
             # force an all-reduce: row-sharded contraction
             return x.T @ x
@@ -91,6 +92,7 @@ def test_parser_on_real_xla_output():
     assert "PARSER-LIVE-OK" in out
 
 
+@pytest.mark.slow   # multi-device subprocess compile
 def test_affine_method_against_full_unroll():
     """The dry-run's core claim: cost(L layers) is affine in layer count.
     Verified by compiling 0,1,2,5-layer variants of a real arch and

@@ -11,6 +11,8 @@ import pytest
 
 from repro.launch import train as train_mod
 
+pytestmark = pytest.mark.slow   # multi-device subprocess tests
+
 
 def _run(tmp_path, extra_args=()):
     # codeqwen smoke: untied embeddings -> sane init loss scale
