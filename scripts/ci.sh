@@ -1,6 +1,9 @@
 #!/usr/bin/env bash
 # CI entry points.
-#   scripts/ci.sh smoke   — fast suite (-m "not slow"): well under a minute
+#   scripts/ci.sh smoke   — fast suite (-m "not slow"), incl. the kernel
+#                           dispatch differential tests
+#                           (tests/test_dispatch_differential.py, capped
+#                           shapes: ~30s of the budget); stays ≲3 min
 #   scripts/ci.sh full    — everything, incl. multi-device subprocess tests
 #   scripts/ci.sh tune    — design-space sweep; writes results/tuned_plans.json
 set -euo pipefail

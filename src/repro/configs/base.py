@@ -52,6 +52,10 @@ class ArchConfig:
     conv_width: int = 4
     # long-context capability (sub-quadratic): gates long_500k
     subquadratic: bool = False
+    # kernel routing for every hot matmul/attention (repro.kernels.dispatch):
+    # "kernels" forces the Pallas path, "reference" forces the einsum
+    # lowering (tests / dry-runs force either), "auto" picks per backend
+    dispatch: str = "auto"
     notes: str = ""
 
     # ------------------------------------------------------------------

@@ -1,0 +1,416 @@
+"""Kernel dispatch: the single entry point models use for hot contractions.
+
+The paper's transformations only pay off when the *whole* dataflow graph
+runs through the transformed kernels (FBLAS's module-routing argument): a
+tuned Pallas matmul buys nothing while the surrounding projections still
+lower through raw einsums.  This module is the routing layer that closes
+that gap — ``dispatch.matmul`` / ``dispatch.attention`` /
+``dispatch.grouped_matmul`` consult the tuned-plan cache (exact key first,
+then nearest-shape, see ``repro.tune.cache``) and route each call to the
+Pallas kernel or to the pure-jnp reference lowering based on policy and
+shape/dtype/backend eligibility.
+
+Policy (the ``DispatchPolicy`` knob threaded through ``configs/base.py``):
+
+  "kernels"   — force the Pallas path whenever structurally possible
+                (interpret mode on CPU); used by the differential tests
+  "reference" — force the einsum reference lowering; bitwise-identical to
+                the pre-dispatch model code
+  "auto"      — kernels on TPU when eligible, reference otherwise (CPU HLO
+                interpretation of a Pallas kernel is never a win); the
+                ``REPRO_DISPATCH`` env var can override "auto" globally
+
+Eligibility is decided at trace time (shapes are static), so the decision
+costs nothing at run time.  Kernel paths carry a ``jax.custom_vjp`` whose
+backward is the reference contraction — training can route its forward
+through the kernels today; fused Pallas backwards are future work (see
+ROADMAP).  Per-route counters (``stats()``) let regression tests prove the
+serve/train graphs actually flow through dispatch.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import functools
+import math
+import os
+from collections import Counter
+from typing import Any, Dict, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from ..core.scaling import TilePlanner
+
+MODES = ("kernels", "reference", "auto")
+
+
+@dataclasses.dataclass(frozen=True)
+class DispatchPolicy:
+    """Routing policy: "kernels" | "reference" | "auto"."""
+
+    mode: str = "auto"
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise ValueError(
+                f"dispatch mode must be one of {MODES}, got {self.mode!r}")
+
+
+PolicyLike = Union[DispatchPolicy, str, None]
+
+# module default consulted when a call site passes policy=None/"auto";
+# seeded from the environment so launchers can force a path globally.
+_default_mode: Optional[str] = None
+
+
+def default_mode() -> str:
+    global _default_mode
+    if _default_mode is None:
+        env = os.environ.get("REPRO_DISPATCH", "auto")
+        _default_mode = env if env in MODES else "auto"
+    return _default_mode
+
+
+def set_default_mode(mode: str) -> None:
+    DispatchPolicy(mode)          # validate
+    global _default_mode
+    _default_mode = mode
+
+
+@contextlib.contextmanager
+def policy_scope(mode: str):
+    """Temporarily force the module-default mode (tests, dry-runs)."""
+    prev = default_mode()
+    set_default_mode(mode)
+    try:
+        yield
+    finally:
+        set_default_mode(prev)
+
+
+def resolve_mode(policy: PolicyLike) -> str:
+    """Collapse a call-site policy to "kernels" | "reference" | "auto"."""
+    if policy is None:
+        mode = "auto"
+    elif isinstance(policy, DispatchPolicy):
+        mode = policy.mode
+    else:
+        mode = str(policy)
+        DispatchPolicy(mode)      # validate
+    if mode == "auto":
+        mode = default_mode()
+    return mode
+
+
+def _kernels_by_default() -> bool:
+    """auto-mode backend gate: compiled Pallas on TPU is a win; HLO
+    interpretation of the same kernel on CPU/GPU is never one."""
+    return jax.default_backend() == "tpu"
+
+
+# ------------------------------------------------------------------- stats
+# (op, route) counters, incremented at trace time.  Regression tests reset
+# them, run a serve/train step, and assert the kernel routes were taken —
+# so a refactor cannot silently drop the models back to raw einsums.
+_stats: Counter = Counter()
+
+
+def reset_stats() -> None:
+    _stats.clear()
+
+
+def stats() -> Dict[Tuple[str, str], int]:
+    return dict(_stats)
+
+
+def _count(op: str, route: str) -> None:
+    _stats[(op, route)] += 1
+
+
+# ------------------------------------------------------------------ matmul
+def _matmul_eligible(x: jax.Array, w: jax.Array) -> bool:
+    if x.ndim < 2 or w.ndim < 2:
+        return False
+    if x.shape[-1] != w.shape[0]:
+        return False
+    if not (jnp.issubdtype(x.dtype, jnp.floating)
+            and jnp.issubdtype(w.dtype, jnp.floating)):
+        return False
+    m = math.prod(x.shape[:-1])
+    k = x.shape[-1]
+    n = math.prod(w.shape[1:])
+    if min(m, k, n) < 1:
+        return False
+    try:          # same heuristic solver the ops wrapper falls back to
+        TilePlanner().plan_matmul(m, n, k, in_bytes=x.dtype.itemsize)
+    except ValueError:
+        return False
+    return True
+
+
+@jax.custom_vjp
+def _matmul_kernel(a: jax.Array, b: jax.Array) -> jax.Array:
+    """2-D Pallas matmul with tuned-plan lookup; f32 output."""
+    from .matmul.ops import matmul as matmul_op
+    return matmul_op(a, b, plan="tuned")
+
+
+def _matmul_kernel_fwd(a, b):
+    return _matmul_kernel(a, b), (a, b)
+
+
+def _matmul_kernel_bwd(res, g):
+    a, b = res
+    da = jnp.einsum("mn,kn->mk", g, b).astype(a.dtype)
+    db = jnp.einsum("mk,mn->kn", a, g).astype(b.dtype)
+    return da, db
+
+
+_matmul_kernel.defvjp(_matmul_kernel_fwd, _matmul_kernel_bwd)
+
+
+def matmul(x: jax.Array, w: jax.Array, *,
+           policy: PolicyLike = None) -> jax.Array:
+    """Contract the last axis of ``x`` with the first axis of ``w``.
+
+    x: (..., K); w: (K, N1[, N2, ...]).  Returns x.shape[:-1] + w.shape[1:]
+    in the promoted input dtype — the generalized form of every projection
+    / dense / head matmul in the models (``bsd,dhk->bshk`` is exactly this
+    with w pre-reshaped, so the reference lowering is bit-identical to the
+    einsums it replaces).
+    """
+    out_shape = x.shape[:-1] + w.shape[1:]
+    out_dtype = jnp.result_type(x, w)
+    mode = resolve_mode(policy)
+    # backend gate first: skip the tile enumeration on reference-bound paths
+    use_kernel = (mode != "reference"
+                  and (mode == "kernels" or _kernels_by_default())
+                  and _matmul_eligible(x, w))
+    _count("matmul", "kernel" if use_kernel else "reference")
+    k = x.shape[-1]
+    x2 = x.reshape(-1, k)
+    w2 = w.reshape(k, -1)
+    if use_kernel:
+        out = _matmul_kernel(x2, w2).astype(out_dtype)
+    else:
+        out = jnp.einsum("mk,kn->mn", x2, w2)
+    return out.reshape(out_shape)
+
+
+def grouped_matmul(x: jax.Array, w: jax.Array, *,
+                   policy: PolicyLike = None) -> jax.Array:
+    """Per-group matmul: x (G, C, K) x w (G, K, N) -> (G, C, N).
+
+    The MoE expert contraction.  The kernel route unrolls the (static)
+    group axis into per-expert Pallas matmuls; the reference route is the
+    batched einsum the MoE layer always used.
+    """
+    g, c, k = x.shape
+    _, _, n = w.shape
+    mode = resolve_mode(policy)
+    use_kernel = (mode != "reference"
+                  and (mode == "kernels" or _kernels_by_default())
+                  and _matmul_eligible(x[0], w[0]))
+    _count("grouped_matmul", "kernel" if use_kernel else "reference")
+    if use_kernel:
+        out_dtype = jnp.result_type(x, w)
+        outs = [_matmul_kernel(x[e], w[e]).astype(out_dtype)
+                for e in range(g)]
+        return jnp.stack(outs, axis=0)
+    return jnp.einsum("gck,gkn->gcn", x, w)
+
+
+# --------------------------------------------------------------- attention
+def causal_mask(qpos: jax.Array, kpos: jax.Array, window: int,
+                causal: bool = True) -> jax.Array:
+    """Branch-free causal (+ sliding window) mask — condition flattening
+    (paper §2.7).  qpos (Sq,), kpos (Skv,) -> bool (Sq, Skv)."""
+    if causal:
+        m = kpos[None, :] <= qpos[:, None]
+    else:
+        m = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if window > 0:
+        m &= kpos[None, :] > (qpos[:, None] - window)
+    return m
+
+
+def _attention_reference(q, k, v, *, causal, window, softcap, mask,
+                         accum_dtype, out_dtype):
+    """Naive reference: materializes the (Sq, Skv) score tensor.
+
+    This is THE dispatch reference path for attention — the einsum
+    contractions the models used inline now live here (and in the
+    blockwise variant below), so ``models/layers.py`` holds no attention
+    contraction of its own.
+    """
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    scores = jnp.einsum("bqhk,bshk->bhqs", q, k).astype(accum_dtype) * scale
+    if softcap > 0:
+        scores = jnp.tanh(scores / softcap) * softcap
+    if mask is None:
+        mask = causal_mask(jnp.arange(q.shape[1]), jnp.arange(k.shape[1]),
+                           window, causal)[None, None]
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(out_dtype)
+    return jnp.einsum("bhqs,bshk->bqhk", probs, v)
+
+
+def _attention_blockwise_reference(q, k, v, *, causal, window, softcap,
+                                   accum_dtype, out_dtype, block_kv,
+                                   q_splits, unroll):
+    """Blockwise (flash-style) reference in pure XLA — tiled accumulation
+    interleaving (§2.1.2) on the softmax reduction; never materializes
+    (S, S).  Ported verbatim from the pre-dispatch model layer: q stays
+    un-blocked (its sharding passes through), only K/V are tiled and
+    scanned, and causality is exploited with ``q_splits`` *static*
+    sequence quarters so GSPMD never sees a dynamic q loop.
+    ``unroll=True`` (dry-run cost compiles) python-unrolls the KV scans so
+    ``cost_analysis`` counts every tile with identical math/FLOPs."""
+    b, sq, h, hd = q.shape
+    block_kv = min(block_kv, sq)
+    while block_kv > 1 and sq % block_kv:
+        block_kv //= 2
+    nkv = sq // block_kv
+    scale = 1.0 / math.sqrt(hd)
+
+    kb = jnp.moveaxis(k.reshape(b, nkv, block_kv, h, hd), 1, 0)
+    vb = jnp.moveaxis(v.reshape(b, nkv, block_kv, h, hd), 1, 0)
+
+    while q_splits > 1 and sq % q_splits != 0:
+        q_splits //= 2
+    qlen = sq // q_splits
+
+    def kv_step(carry, kj, q_slice, qpos):
+        m, l, acc = carry
+        kpos = kj * block_kv + jnp.arange(block_kv)
+        sc = jnp.einsum("bqhk,bshk->bhqs", q_slice,
+                        jax.lax.dynamic_index_in_dim(kb, kj, 0, False)) \
+            .astype(accum_dtype) * scale
+        if softcap > 0:
+            sc = jnp.tanh(sc / softcap) * softcap
+        msk = causal_mask(qpos, kpos, window, causal)[None, None]
+        sc = jnp.where(msk, sc, -1e30)
+        m_new = jnp.maximum(m, sc.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        pexp = jnp.exp(sc - m_new[..., None])
+        l_new = l * alpha + pexp.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhqs,bshk->bhqk", pexp.astype(out_dtype),
+            jax.lax.dynamic_index_in_dim(vb, kj, 0, False)) \
+            .astype(accum_dtype)
+        return (m_new, l_new, acc_new)
+
+    outs = []
+    for qi in range(q_splits):
+        q_lo, q_hi = qi * qlen, (qi + 1) * qlen - 1
+        q_slice = jax.lax.slice_in_dim(q, q_lo, q_hi + 1, axis=1)
+        qpos = jnp.arange(q_lo, q_hi + 1)
+        # static KV range this quarter can see (causal upper bound,
+        # window lower bound) — condition flattening at compile time
+        kj_hi = min(nkv - 1, q_hi // block_kv) if causal else nkv - 1
+        kj_lo = 0
+        if window > 0:
+            kj_lo = max(0, (q_lo - window + 1) // block_kv)
+        m0 = jnp.full((b, h, qlen), -1e30, accum_dtype)
+        l0 = jnp.zeros((b, h, qlen), accum_dtype)
+        a0 = jnp.zeros((b, h, qlen, hd), accum_dtype)
+        if unroll:
+            carry = (m0, l0, a0)
+            for kj in range(kj_lo, kj_hi + 1):
+                carry = kv_step(carry, kj, q_slice, qpos)
+            m, l, acc = carry
+        else:
+            def body(c, kj, _q=q_slice, _p=qpos):
+                return kv_step(c, kj, _q, _p), None
+            (m, l, acc), _ = jax.lax.scan(
+                body, (m0, l0, a0), jnp.arange(kj_lo, kj_hi + 1))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        outs.append(out.astype(out_dtype))       # (b, h, qlen, hd)
+
+    out = jnp.concatenate(outs, axis=2) if len(outs) > 1 else outs[0]
+    return jnp.moveaxis(out, 1, 2)               # (b, sq, h, hd)
+
+
+def _attention_eligible(q, k, v, *, softcap, mask) -> bool:
+    if mask is not None or softcap > 0:
+        return False
+    if q.shape != k.shape or k.shape != v.shape:
+        return False          # decode / cross-length: no self-attn kernel
+    if q.shape[1] < 2:
+        return False
+    return all(jnp.issubdtype(t.dtype, jnp.floating) for t in (q, k, v))
+
+
+def _flash_ref(q, k, v, causal, window):
+    from .attention.ref import attention_ref
+    return attention_ref(q, k, v, causal=causal, window=window)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _attn_kernel(causal, window, q, k, v):
+    """(B, H, S, hd) flash attention with tuned-plan lookup; f32 output.
+
+    Backward = vjp of the naive reference (materializes (S, S) — a fused
+    Pallas backward is ROADMAP future work); forward residuals are just
+    (q, k, v), so remat policies see the same tensors either route."""
+    from .attention.ops import flash_attention
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           plan="tuned")
+
+
+def _attn_kernel_fwd(causal, window, q, k, v):
+    return _attn_kernel(causal, window, q, k, v), (q, k, v)
+
+
+def _attn_kernel_bwd(causal, window, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: _flash_ref(q_, k_, v_, causal, window), q, k, v)
+    return vjp(g)
+
+
+_attn_kernel.defvjp(_attn_kernel_fwd, _attn_kernel_bwd)
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, window: int = 0, softcap: float = 0.0,
+              mask: Optional[jax.Array] = None,
+              accum_dtype: Any = jnp.float32,
+              out_dtype: Any = None,
+              impl: str = "blockwise",
+              block_kv: int = 512, q_splits: int = 4, unroll: bool = False,
+              policy: PolicyLike = None) -> jax.Array:
+    """Scaled-dot-product attention over model-layout tensors.
+
+    q: (B, Sq, H, hd); k, v: (B, Skv, H, hd), already GQA-expanded.
+    Returns (B, Sq, H, hd) in ``out_dtype`` (default: q's dtype).
+
+    ``mask`` (broadcastable to (B, H, Sq, Skv)) overrides the causal/window
+    mask — used by the decode path's rolling-cache validity mask, and
+    always routed to the reference (the kernel bakes in causal/window
+    only).  ``impl`` picks the reference lowering on the reference route:
+    "naive" materializes (Sq, Skv); "blockwise" is the tiled XLA
+    formulation (with ``block_kv`` / ``q_splits`` / ``unroll``).
+    """
+    out_dtype = q.dtype if out_dtype is None else out_dtype
+    mode = resolve_mode(policy)
+    use_kernel = (mode != "reference"
+                  and (mode == "kernels" or _kernels_by_default())
+                  and _attention_eligible(q, k, v, softcap=softcap,
+                                          mask=mask))
+    _count("attention", "kernel" if use_kernel else "reference")
+    if use_kernel:
+        qt, kt, vt = (t.transpose(0, 2, 1, 3) for t in (q, k, v))
+        out = _attn_kernel(bool(causal), int(window), qt, kt, vt)
+        return out.transpose(0, 2, 1, 3).astype(out_dtype)
+    # the blockwise lowering tiles a single self-attention length; any
+    # cross-length (decode) call falls back to the naive lowering
+    if impl == "naive" or mask is not None or q.shape[1] != k.shape[1]:
+        return _attention_reference(
+            q, k, v, causal=causal, window=window, softcap=softcap,
+            mask=mask, accum_dtype=accum_dtype, out_dtype=out_dtype)
+    return _attention_blockwise_reference(
+        q, k, v, causal=causal, window=window, softcap=softcap,
+        accum_dtype=accum_dtype, out_dtype=out_dtype, block_kv=block_kv,
+        q_splits=q_splits, unroll=unroll)

@@ -65,7 +65,10 @@ def matmul(a: jax.Array, b: jax.Array, *,
         if kw:
             planner = TilePlanner(
                 double_buffer=kw.get("prefetch_depth", 2) >= 2)
+            # clamp tiles to the problem dims: a nearest-shape plan may
+            # have been tuned on a larger problem (feasibility was checked
+            # against the clamped tiles, matching matmul_pallas)
             tile_plan = planner.plan_from_tiles(
-                m, n, k, kw["bm"], kw["bn"], kw["bk"],
-                in_bytes=a.dtype.itemsize)
+                m, n, k, min(kw["bm"], m), min(kw["bn"], n),
+                min(kw["bk"], k), in_bytes=a.dtype.itemsize)
     return _matmul(a, b, level=level, plan=tile_plan, interpret=interpret)

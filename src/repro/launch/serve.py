@@ -13,6 +13,7 @@ next queued request (continuous batching).
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
@@ -104,6 +105,10 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--dispatch", default="auto",
+                    choices=("auto", "kernels", "reference"),
+                    help="kernel routing for every hot matmul/attention "
+                         "(repro.kernels.dispatch)")
     args = ap.parse_args(argv)
 
     from ..tune.cache import preload as preload_tuned
@@ -111,6 +116,8 @@ def main(argv=None):
     cfg = get_arch(args.arch)
     if args.smoke:
         cfg = cfg.smoke()
+    cfg = dataclasses.replace(cfg, dispatch=args.dispatch)
+    print(f"[dispatch] policy={args.dispatch}")
     if cfg.input_mode == "embeddings":
         raise SystemExit("serving demo drives token-mode archs")
     model = Model(cfg, dt=DtypePolicy(param=jnp.bfloat16),

@@ -55,6 +55,10 @@ def main(argv=None):
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--d-model", type=int, default=0,
                     help="override width (with --smoke)")
+    ap.add_argument("--dispatch", default="auto",
+                    choices=("auto", "kernels", "reference"),
+                    help="kernel routing for every hot matmul/attention "
+                         "(repro.kernels.dispatch)")
     args = ap.parse_args(argv)
 
     from ..tune.cache import preload as preload_tuned
@@ -65,6 +69,8 @@ def main(argv=None):
         if args.d_model:
             cfg = dataclasses.replace(
                 cfg, d_model=args.d_model, d_ff=4 * args.d_model)
+    cfg = dataclasses.replace(cfg, dispatch=args.dispatch)
+    print(f"[dispatch] policy={args.dispatch}")
     mesh = make_host_mesh()
     rules = make_rules(mesh, fsdp=True)
     print(f"mesh: {dict(mesh.shape)}  arch: {cfg.name} "

@@ -7,10 +7,16 @@ Paper tie-ins (DESIGN.md §2):
 * sliding windows = delay buffering (§2.2);
 * all masks are branch-free `where` predication = condition flattening (§2.7);
 * dtype policy application = type demotion (§4.4).
+
+Every matmul/attention contraction in this module routes through
+``repro.kernels.dispatch`` (the reference lowerings live there too), so
+tuned Pallas plans reach the models end-to-end; ``AttnSpec.dispatch`` /
+the ``policy`` arguments carry the ``ArchConfig.dispatch`` knob.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Dict, Optional, Tuple
 
@@ -18,6 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core.memory import DtypePolicy
+from ..kernels import dispatch
 
 Params = Dict[str, jax.Array]
 
@@ -112,6 +119,9 @@ class AttnSpec:
     mrope_sections: Tuple[int, ...] = ()
     qkv_bias: bool = False
     softcap: float = 0.0
+    # kernel-routing policy ("kernels" | "reference" | "auto"), copied from
+    # ArchConfig.dispatch by the model builder
+    dispatch: str = "auto"
 
 
 def attention_init(key, s: AttnSpec) -> Params:
@@ -133,9 +143,11 @@ def attention_init(key, s: AttnSpec) -> Params:
 def _qkv(p: Params, s: AttnSpec, x: jax.Array, positions: jax.Array,
          dt: DtypePolicy):
     cdt = dt.compute
-    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cdt))
-    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(cdt))
-    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(cdt))
+    # (b,s,d) x (d,h,k) -> (b,s,h,k): dispatch contracts last-vs-first, so
+    # the weight tensors pass through un-reshaped
+    q = dispatch.matmul(x, p["wq"].astype(cdt), policy=s.dispatch)
+    k = dispatch.matmul(x, p["wk"].astype(cdt), policy=s.dispatch)
+    v = dispatch.matmul(x, p["wv"].astype(cdt), policy=s.dispatch)
     if s.qkv_bias:
         q = q + p["bq"].astype(cdt)
         k = k + p["bk"].astype(cdt)
@@ -157,23 +169,15 @@ def _expand_kv(k: jax.Array, n_heads: int) -> jax.Array:
         .reshape(b, sq, n_heads, hd)
 
 
-def _mask(qpos: jax.Array, kpos: jax.Array, window: int) -> jax.Array:
-    """Branch-free causal (+ sliding window) mask — condition flattening."""
-    m = kpos[None, :] <= qpos[:, None]
-    if window > 0:
-        m &= kpos[None, :] > (qpos[:, None] - window)
-    return m
-
-
-def _attend_block(q, k, v, qpos, kpos, s: AttnSpec, accum_dtype):
-    """Scores + masked softmax statistics for one (q-tile, kv-tile) pair."""
-    scale = 1.0 / math.sqrt(s.head_dim)
-    scores = jnp.einsum("bqhk,bshk->bhqs", q, k).astype(accum_dtype) * scale
-    if s.softcap > 0:
-        scores = jnp.tanh(scores / s.softcap) * s.softcap
-    mask = _mask(qpos, kpos, s.window)
-    scores = jnp.where(mask[None, None, :, :], scores, -1e30)
-    return scores
+def _out_proj(p: Params, s: AttnSpec, out: jax.Array,
+              dt: DtypePolicy) -> jax.Array:
+    """(B, S, H, hd) -> (B, S, d) via wo (H, hd, d)."""
+    b, sq = out.shape[:2]
+    wo = p["wo"].astype(dt.compute)
+    return dispatch.matmul(
+        out.reshape(b, sq, s.n_heads * s.head_dim),
+        wo.reshape(s.n_heads * s.head_dim, s.d_model),
+        policy=s.dispatch)
 
 
 def attention_naive(p: Params, s: AttnSpec, x: jax.Array,
@@ -182,12 +186,11 @@ def attention_naive(p: Params, s: AttnSpec, x: jax.Array,
     q, k, v = _qkv(p, s, x, positions, dt)
     k = _expand_kv(k, s.n_heads)
     v = _expand_kv(v, s.n_heads)
-    sq = x.shape[1]
-    pos = jnp.arange(sq)
-    scores = _attend_block(q, k, v, pos, pos, s, dt.accum)
-    probs = jax.nn.softmax(scores, axis=-1).astype(dt.compute)
-    out = jnp.einsum("bhqs,bshk->bqhk", probs, v)
-    return jnp.einsum("bqhk,hkd->bqd", out, p["wo"].astype(dt.compute))
+    out = dispatch.attention(
+        q, k, v, causal=True, window=s.window, softcap=s.softcap,
+        accum_dtype=dt.accum, out_dtype=dt.compute, impl="naive",
+        policy=s.dispatch)
+    return _out_proj(p, s, out, dt)
 
 
 def attention_blockwise(p: Params, s: AttnSpec, x: jax.Array,
@@ -195,24 +198,18 @@ def attention_blockwise(p: Params, s: AttnSpec, x: jax.Array,
                         block_q: int = 512, block_kv: int = 512,
                         unroll: bool = False, q_splits: int = 4,
                         hook=None) -> jax.Array:
-    """Blockwise (flash-style) attention in pure XLA.
+    """Blockwise (flash-style) attention.
 
-    Tiled accumulation interleaving (§2.1.2) on the softmax reduction: the
-    running (m, l, acc) statistics are the accumulation buffer, revisited
-    once per KV tile — never materializing (S, S).
-
-    Structure chosen for SPMD sanity: q stays un-blocked (its sharding —
-    heads for TP archs, sequence for MQA archs — passes through the whole
-    computation; the ``hook(t, role)`` lets the runtime constrain q/k/v),
-    and only K/V are tiled and scanned.  Causality is exploited with
-    ``q_splits`` *static* sequence quarters, each scanning only the KV
-    range its rows can see — recovering most of the causal/window FLOP
-    savings without a dynamic q loop that GSPMD would try to partition.
+    The tiled XLA formulation itself (accumulation interleaving §2.1.2 on
+    the softmax reduction, q un-blocked for SPMD sanity, ``q_splits``
+    static causal quarters) lives in ``dispatch`` as the blockwise
+    reference lowering; on the kernel route the same tiling runs as the
+    Pallas flash kernel with tuned block geometry.  The ``hook(t, role)``
+    lets the runtime constrain q/k/v shardings on either route.
     ``unroll=True`` (dry-run cost compiles) python-unrolls the KV scans so
     ``cost_analysis`` counts every tile with identical math/FLOPs.
     """
     del block_q  # q is not blocked in this formulation
-    b, sq, _ = x.shape
     hook = hook or (lambda t, _role: t)
     q, k, v = _qkv(p, s, x, positions, dt)
     q = hook(q, "q")
@@ -220,70 +217,12 @@ def attention_blockwise(p: Params, s: AttnSpec, x: jax.Array,
     v = hook(v, "kv")
     k = _expand_kv(k, s.n_heads)
     v = _expand_kv(v, s.n_heads)
-
-    block_kv = min(block_kv, sq)
-    while block_kv > 1 and sq % block_kv:
-        block_kv //= 2
-    nkv = sq // block_kv
-    h, hd = s.n_heads, s.head_dim
-    scale = 1.0 / math.sqrt(hd)
-
-    kb = jnp.moveaxis(k.reshape(b, nkv, block_kv, h, hd), 1, 0)
-    vb = jnp.moveaxis(v.reshape(b, nkv, block_kv, h, hd), 1, 0)
-
-    while q_splits > 1 and sq % q_splits != 0:
-        q_splits //= 2
-    qlen = sq // q_splits
-
-    def kv_step(carry, kj, q_slice, qpos):
-        m, l, acc = carry
-        kpos = kj * block_kv + jnp.arange(block_kv)
-        sc = jnp.einsum("bqhk,bshk->bhqs", q_slice,
-                        jax.lax.dynamic_index_in_dim(kb, kj, 0, False)) \
-            .astype(dt.accum) * scale
-        if s.softcap > 0:
-            sc = jnp.tanh(sc / s.softcap) * s.softcap
-        msk = _mask(qpos, kpos, s.window)[None, None]
-        sc = jnp.where(msk, sc, -1e30)
-        m_new = jnp.maximum(m, sc.max(axis=-1))
-        alpha = jnp.exp(m - m_new)
-        pexp = jnp.exp(sc - m_new[..., None])
-        l_new = l * alpha + pexp.sum(axis=-1)
-        acc_new = acc * alpha[..., None] + jnp.einsum(
-            "bhqs,bshk->bhqk", pexp.astype(dt.compute),
-            jax.lax.dynamic_index_in_dim(vb, kj, 0, False)).astype(dt.accum)
-        return (m_new, l_new, acc_new)
-
-    outs = []
-    for qi in range(q_splits):
-        q_lo, q_hi = qi * qlen, (qi + 1) * qlen - 1
-        q_slice = jax.lax.slice_in_dim(q, q_lo, q_hi + 1, axis=1)
-        qpos = jnp.arange(q_lo, q_hi + 1)
-        # static KV range this quarter can see (causal upper bound,
-        # window lower bound) — condition flattening at compile time
-        kj_hi = min(nkv - 1, q_hi // block_kv)
-        kj_lo = 0
-        if s.window > 0:
-            kj_lo = max(0, (q_lo - s.window + 1) // block_kv)
-        m0 = jnp.full((b, h, qlen), -1e30, dt.accum)
-        l0 = jnp.zeros((b, h, qlen), dt.accum)
-        a0 = jnp.zeros((b, h, qlen, hd), dt.accum)
-        if unroll:
-            carry = (m0, l0, a0)
-            for kj in range(kj_lo, kj_hi + 1):
-                carry = kv_step(carry, kj, q_slice, qpos)
-            m, l, acc = carry
-        else:
-            def body(c, kj, _q=q_slice, _p=qpos):
-                return kv_step(c, kj, _q, _p), None
-            (m, l, acc), _ = jax.lax.scan(
-                body, (m0, l0, a0), jnp.arange(kj_lo, kj_hi + 1))
-        out = acc / jnp.maximum(l, 1e-30)[..., None]
-        outs.append(out.astype(dt.compute))      # (b, h, qlen, hd)
-
-    out = jnp.concatenate(outs, axis=2) if len(outs) > 1 else outs[0]
-    out = jnp.moveaxis(out, 1, 2)                # (b, sq, h, hd)
-    return jnp.einsum("bqhk,hkd->bqd", out, p["wo"].astype(dt.compute))
+    out = dispatch.attention(
+        q, k, v, causal=True, window=s.window, softcap=s.softcap,
+        accum_dtype=dt.accum, out_dtype=dt.compute, impl="blockwise",
+        block_kv=block_kv, q_splits=q_splits, unroll=unroll,
+        policy=s.dispatch)
+    return _out_proj(p, s, out, dt)
 
 
 def attention_decode(p: Params, s: AttnSpec, x: jax.Array, pos: jax.Array,
@@ -311,10 +250,6 @@ def attention_decode(p: Params, s: AttnSpec, x: jax.Array, pos: jax.Array,
 
     kk = _expand_kv(k_cache.astype(dt.compute), s.n_heads)
     vv = _expand_kv(v_cache.astype(dt.compute), s.n_heads)
-    scale = 1.0 / math.sqrt(s.head_dim)
-    sc = jnp.einsum("bqhk,bshk->bhqs", q, kk).astype(dt.accum) * scale
-    if s.softcap > 0:
-        sc = jnp.tanh(sc / s.softcap) * s.softcap
     idx = jnp.arange(cap)
     if s.window > 0:
         # rolling buffer: slot i holds absolute position
@@ -323,10 +258,13 @@ def attention_decode(p: Params, s: AttnSpec, x: jax.Array, pos: jax.Array,
         valid = (age >= 0) & (pos - age >= 0) & (age < s.window)
     else:
         valid = idx <= pos
-    sc = jnp.where(valid[None, None, None, :], sc, -1e30)
-    probs = jax.nn.softmax(sc, axis=-1).astype(dt.compute)
-    out = jnp.einsum("bhqs,bshk->bqhk", probs, vv)
-    out = jnp.einsum("bqhk,hkd->bqd", out, p["wo"].astype(dt.compute))
+    # the rolling-cache validity mask replaces causal/window, so this
+    # always takes the dispatch reference route (no ragged-decode kernel)
+    out = dispatch.attention(
+        q, kk, vv, softcap=s.softcap, mask=valid[None, None, None, :],
+        accum_dtype=dt.accum, out_dtype=dt.compute, impl="naive",
+        policy=s.dispatch)
+    out = _out_proj(p, s, out, dt)
     return out, k_cache, v_cache
 
 
@@ -344,18 +282,19 @@ def mlp_init(key, d: int, ff: int, activation: str) -> Params:
 
 
 def mlp_apply(p: Params, x: jax.Array, activation: str,
-              dt: DtypePolicy) -> jax.Array:
+              dt: DtypePolicy, *, policy: str = "auto") -> jax.Array:
     cdt = dt.compute
+    mm = functools.partial(dispatch.matmul, policy=policy)
     if activation in ("swiglu", "geglu"):
-        g = x @ p["wg"].astype(cdt)
-        u = x @ p["wu"].astype(cdt)
+        g = mm(x, p["wg"].astype(cdt))
+        u = mm(x, p["wu"].astype(cdt))
         act = jax.nn.silu(g) if activation == "swiglu" \
             else jax.nn.gelu(g, approximate=True)
-        return (act * u) @ p["wd"].astype(cdt)
-    h = x @ p["wi"].astype(cdt)
+        return mm(act * u, p["wd"].astype(cdt))
+    h = mm(x, p["wi"].astype(cdt))
     h = jax.nn.relu(h) if activation == "relu" \
         else jax.nn.gelu(h, approximate=True)
-    return h @ p["wd"].astype(cdt)
+    return mm(h, p["wd"].astype(cdt))
 
 
 # --------------------------------------------------------------------------
@@ -379,8 +318,8 @@ def softmax_xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
 
 
 def chunked_xent(x: jax.Array, head: jax.Array, labels: jax.Array, *,
-                 n_chunks: int, unroll: bool, remat: bool = True
-                 ) -> jax.Array:
+                 n_chunks: int, unroll: bool, remat: bool = True,
+                 policy: str = "auto") -> jax.Array:
     """Head matmul + cross entropy, tiled over the sequence (§3.4 tiling).
 
     The (B, S, V) logits tensor of a 256k-vocab model is the largest
@@ -397,7 +336,8 @@ def chunked_xent(x: jax.Array, head: jax.Array, labels: jax.Array, *,
     lc = jnp.moveaxis(labels.reshape(b, n_chunks, c), 1, 0)
 
     def chunk(x_c, l_c):
-        logits = (x_c @ head).astype(jnp.float32)
+        logits = dispatch.matmul(x_c, head, policy=policy) \
+            .astype(jnp.float32)
         m = jax.lax.stop_gradient(logits.max(axis=-1, keepdims=True))
         shifted = logits - m
         lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1))

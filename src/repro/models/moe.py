@@ -16,6 +16,7 @@ dry-run's HLO FLOPs stay honest for the MoE archs (qwen2-moe, kimi-k2).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Dict, Tuple
 
@@ -24,6 +25,7 @@ import jax.numpy as jnp
 
 from .layers import dense_init, mlp_init, mlp_apply
 from ..core.memory import DtypePolicy
+from ..kernels import dispatch as kdispatch
 
 Params = Dict[str, jax.Array]
 
@@ -43,6 +45,9 @@ class MoESpec:
     # experts padded to a multiple of the EP axis (dummies never routed;
     # set by the runtime to the mesh's model-axis size)
     pad_to: int = 1
+    # kernel-routing policy ("kernels" | "reference" | "auto"), copied
+    # from ArchConfig.dispatch by the model builder
+    dispatch: str = "auto"
 
     @property
     def e_pad(self) -> int:
@@ -91,7 +96,9 @@ def moe_apply(p: Params, s: MoESpec, x: jax.Array, dt: DtypePolicy,
     tokens = x.reshape(n_tok, d)
 
     # ---- routing (f32 for a stable softmax) ----
-    logits = tokens.astype(jnp.float32) @ p["router"].astype(jnp.float32)
+    logits = kdispatch.matmul(tokens.astype(jnp.float32),
+                              p["router"].astype(jnp.float32),
+                              policy=s.dispatch)
     probs = jax.nn.softmax(logits, axis=-1)                   # (T, E)
     gate, eidx = jax.lax.top_k(probs, s.top_k)                # (T, K)
     if s.norm_topk:
@@ -124,14 +131,14 @@ def moe_apply(p: Params, s: MoESpec, x: jax.Array, dt: DtypePolicy,
     dispatch = hook(dispatch, "dispatch")
 
     # ---- expert FFN: (E, C, d) x (E, d, f) ----
-    g = jnp.einsum("ecd,edf->ecf", dispatch, p["wg"].astype(cdt))
+    gmm = functools.partial(kdispatch.grouped_matmul, policy=s.dispatch)
+    g = gmm(dispatch, p["wg"].astype(cdt))
     if s.activation in ("swiglu", "geglu"):
-        u = jnp.einsum("ecd,edf->ecf", dispatch, p["wu"].astype(cdt))
+        u = gmm(dispatch, p["wu"].astype(cdt))
         h = _act(g, s.activation) * u
     else:
         h = _act(g, s.activation)
-    expert_out = hook(
-        jnp.einsum("ecf,efd->ecd", h, p["wd"].astype(cdt)), "expert_out")
+    expert_out = hook(gmm(h, p["wd"].astype(cdt)), "expert_out")
 
     # ---- combine: gather back, weight by gate, scatter-add per token ----
     back = expert_out[se, safe_rank]                          # (T*K, d)
@@ -141,7 +148,7 @@ def moe_apply(p: Params, s: MoESpec, x: jax.Array, dt: DtypePolicy,
 
     if s.n_shared_experts:
         out = out + mlp_apply(p["shared"], tokens.astype(cdt),
-                              s.activation, dt)
+                              s.activation, dt, policy=s.dispatch)
     return out.reshape(b, sq, d), aux
 
 

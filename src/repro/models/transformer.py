@@ -95,7 +95,7 @@ def _attn_spec(cfg: ArchConfig, mixer: str) -> layers.AttnSpec:
         n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
         window=cfg.window if mixer == "swa" else 0,
         rope_theta=cfg.rope_theta, mrope_sections=cfg.mrope_sections,
-        qkv_bias=cfg.qkv_bias)
+        qkv_bias=cfg.qkv_bias, dispatch=cfg.dispatch)
 
 
 def _moe_spec(cfg: ArchConfig, pad_to: int = 1) -> moe.MoESpec:
@@ -104,7 +104,7 @@ def _moe_spec(cfg: ArchConfig, pad_to: int = 1) -> moe.MoESpec:
         d_expert=cfg.d_expert, n_shared_experts=cfg.n_shared_experts,
         shared_d_expert=cfg.shared_d_expert,
         capacity_factor=cfg.capacity_factor, activation=cfg.activation,
-        pad_to=pad_to)
+        pad_to=pad_to, dispatch=cfg.dispatch)
 
 
 def _rwkv_spec(cfg: ArchConfig) -> rwkv.RwkvSpec:
@@ -177,7 +177,8 @@ def layer_apply(p: Params, cfg: ArchConfig, kind: LayerKind, x: jax.Array,
     x = x + con(h)
     h = layers.rmsnorm(p["ln2"], x)
     if ffn == "mlp":
-        h = layers.mlp_apply(p["mlp"], h, cfg.activation, dt)
+        h = layers.mlp_apply(p["mlp"], h, cfg.activation, dt,
+                             policy=cfg.dispatch)
     elif ffn == "moe":
         spec = _moe_spec(cfg, opts.expert_pad)
         if opts.moe_mesh is not None:
@@ -236,7 +237,8 @@ def layer_decode(p: Params, cfg: ArchConfig, kind: LayerKind, x: jax.Array,
     x = x + h
     h = layers.rmsnorm(p["ln2"], x)
     if ffn == "mlp":
-        h = layers.mlp_apply(p["mlp"], h, cfg.activation, dt)
+        h = layers.mlp_apply(p["mlp"], h, cfg.activation, dt,
+                             policy=cfg.dispatch)
     elif ffn == "moe":
         spec = _moe_spec(cfg, opts.expert_pad if opts else 1)
         if opts is not None and opts.moe_mesh is not None:
@@ -333,10 +335,12 @@ class Model:
                                 (b, s)).astype(jnp.int32)
 
     def _logits(self, params: Params, x: jax.Array) -> jax.Array:
+        from ..kernels import dispatch
         x = layers.rmsnorm(params["final_norm"], x)
         head = params["embed"].T if self.cfg.tie_embeddings \
             else params["head"]
-        return x @ head.astype(self.dt.compute)
+        return dispatch.matmul(x, head.astype(self.dt.compute),
+                               policy=self.cfg.dispatch)
 
     def _run_stack(self, params: Params, x: jax.Array,
                    positions: jax.Array) -> Tuple[jax.Array, jax.Array]:
@@ -400,7 +404,7 @@ class Model:
         xent = layers.chunked_xent(
             x, self._head(params), batch["labels"],
             n_chunks=min(self.opts.xent_chunks, s),
-            unroll=self.opts.unroll_inner)
+            unroll=self.opts.unroll_inner, policy=self.cfg.dispatch)
         loss = xent + aux
         return loss, {"loss": loss, "xent": xent, "aux": aux}
 

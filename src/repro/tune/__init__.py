@@ -17,14 +17,17 @@ Entry points: ``benchmarks/run.py --tune`` (sweep + CSV/JSON report) and
 ``kernels.<k>(..., plan="tuned")`` (serve/train-time consumption after
 ``cache.preload``).
 """
-from .cache import (PlanCache, default_cache, default_cache_path, make_key,
-                    preload, resolve_plan)
+from .cache import (PlanCache, default_cache, default_cache_path,
+                    lookup_stats, make_key, parse_key, preload,
+                    reset_lookup_stats, resolve_plan, shape_distance)
 from .measure import Harness, Measurement
-from .space import SPACES
+from .space import SPACES, plan_feasible
 from .tuner import DEFAULT_SHAPES, KERNELS, TuneResult, tune, tune_all
 
 __all__ = [
-    "PlanCache", "default_cache", "default_cache_path", "make_key",
-    "preload", "resolve_plan", "Harness", "Measurement", "SPACES",
-    "DEFAULT_SHAPES", "KERNELS", "TuneResult", "tune", "tune_all",
+    "PlanCache", "default_cache", "default_cache_path", "lookup_stats",
+    "make_key", "parse_key", "preload", "reset_lookup_stats",
+    "resolve_plan", "shape_distance", "Harness", "Measurement", "SPACES",
+    "plan_feasible", "DEFAULT_SHAPES", "KERNELS", "TuneResult", "tune",
+    "tune_all",
 ]

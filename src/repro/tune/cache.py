@@ -18,9 +18,13 @@ File format (``results/tuned_plans.json`` by default, override with the
 
 ``plan`` is a flat dict of the kernel's tunable kwargs; ``level`` (the paper's
 T1→T3 stage, stored as an int) is optional and overrides the caller's level
-when present.  The cache answers exact-key lookups only — no interpolation
-across shapes — so a miss silently falls back to the ``TilePlanner``
-heuristics (``resolve_plan`` below).
+when present.  Lookups are exact-key first; on a miss, ``get_nearest`` falls
+back to the geometrically closest tuned shape (same kernel/dtype/backend/
+rank) whose plan is VMEM-feasible for the query shape per the TilePlanner
+working-set arithmetic (``repro.tune.space.plan_feasible``), and only then
+to the ``TilePlanner`` heuristics (``resolve_plan`` below).  Per-route
+lookup counters (``lookup_stats``) let end-to-end tests prove the cache was
+consulted.
 
 This module is intentionally import-light (no dependency on the tuner or the
 kernels) because the ``kernels/*/ops.py`` wrappers import ``resolve_plan``
@@ -30,6 +34,7 @@ from here: keeping it leaf-level avoids an import cycle with
 from __future__ import annotations
 
 import json
+import math
 import os
 from pathlib import Path
 from typing import Any, Dict, Optional, Sequence, Tuple, Union
@@ -64,6 +69,19 @@ def make_key(kernel: str, shape: Sequence[int], dtype: Any,
     return f"{kernel}|{shape_s}|{_dtype_name(dtype)}|{_backend_name(backend)}"
 
 
+def parse_key(key: str) -> Tuple[str, Tuple[int, ...], str, str]:
+    kernel, shape_s, dtype, backend = key.split("|")
+    return kernel, tuple(int(d) for d in shape_s.split("x")), dtype, backend
+
+
+def shape_distance(a: Sequence[int], b: Sequence[int]) -> float:
+    """Geometric closeness: sum of squared log dim ratios.  Symmetric,
+    zero iff equal, and scale-aware — (256,256,256) is nearer to
+    (512,512,512) than (256,256,4096) is, which is what plan transplanting
+    wants (tile geometry tracks dim magnitudes, not absolute deltas)."""
+    return sum((math.log(x / y)) ** 2 for x, y in zip(a, b))
+
+
 class PlanCache:
     """In-memory dict of tuned plans with JSON load/save."""
 
@@ -96,6 +114,49 @@ class PlanCache:
     def get(self, kernel: str, shape: Sequence[int], dtype: Any,
             backend: Optional[str] = None) -> Optional[dict]:
         return self.entries.get(make_key(kernel, shape, dtype, backend))
+
+    def get_nearest(self, kernel: str, shape: Sequence[int], dtype: Any,
+                    backend: Optional[str] = None) -> Optional[dict]:
+        """Nearest-shape fallback for an exact-key miss.
+
+        Among entries with the same kernel/dtype/backend and rank, return
+        the one whose tuned shape is geometrically closest to the query
+        (``shape_distance``) AND whose plan is VMEM-feasible for the query
+        shape (``repro.tune.space.plan_feasible``) — an infeasible nearest
+        neighbour is skipped, never "clamped into" feasibility.  Iteration
+        is over sorted keys with (distance, key) tie-breaking, so the
+        result is deterministic under dict-ordering shuffles.  Returns the
+        entry dict or None (-> heuristic fallback).
+        """
+        from .space import plan_feasible   # lazy: keeps this module leaf-y
+        qshape = tuple(int(d) for d in shape)
+        if any(d <= 0 for d in qshape):
+            return None
+        dname = _dtype_name(dtype)
+        bname = _backend_name(backend)
+        dtype_bytes = np.dtype(dtype).itemsize
+        best: Optional[Tuple[float, str, dict]] = None
+        for key in sorted(self.entries):
+            try:
+                ker, eshape, edt, eb = parse_key(key)
+            except ValueError:
+                continue
+            if (ker, edt, eb) != (kernel, dname, bname) \
+                    or len(eshape) != len(qshape) \
+                    or any(d <= 0 for d in eshape):
+                continue
+            plan = self.entries[key].get("plan", {})
+            try:
+                feasible = plan_feasible(kernel, qshape, plan,
+                                         dtype_bytes=dtype_bytes)
+            except (KeyError, TypeError, ValueError):
+                feasible = False
+            if not feasible:
+                continue
+            cand = (shape_distance(qshape, eshape), key, self.entries[key])
+            if best is None or cand[:2] < best[:2]:
+                best = cand
+        return best[2] if best is not None else None
 
     def put(self, kernel: str, shape: Sequence[int], dtype: Any,
             plan: Dict[str, Any], *, backend: Optional[str] = None,
@@ -133,14 +194,30 @@ def preload(*, log=None) -> int:
     return len(cache)
 
 
+# (route, count) counters for "tuned" lookups, incremented at trace time.
+# End-to-end tests reset these, run a serve/train step, and assert the
+# cache was consulted — exact hit, nearest-shape hit, or honest miss.
+_lookups: Dict[str, int] = {"exact": 0, "nearest": 0, "miss": 0}
+
+
+def reset_lookup_stats() -> None:
+    for k in _lookups:
+        _lookups[k] = 0
+
+
+def lookup_stats() -> Dict[str, int]:
+    return dict(_lookups)
+
+
 def resolve_plan(kernel: str, shape: Sequence[int], dtype: Any,
                  level, plan) -> Tuple[Any, Optional[Dict[str, Any]]]:
     """Resolve an ops wrapper's ``plan=`` argument to (level, kwargs).
 
     ``plan`` may be:
       * ``None`` or ``"heuristic"`` — keep the wrapper's built-in heuristics,
-      * ``"tuned"`` — consult the default PlanCache; on a miss fall back to
-        the heuristics (never an error: tuning is an optimization),
+      * ``"tuned"`` — consult the default PlanCache: exact key, then
+        nearest-shape (``PlanCache.get_nearest``), then heuristics on a
+        full miss (never an error: tuning is an optimization),
       * a dict of tuned kwargs (possibly with ``"level"``) — use verbatim.
 
     Concrete plan objects (e.g. a TilePlan) are the wrapper's own business
@@ -152,7 +229,13 @@ def resolve_plan(kernel: str, shape: Sequence[int], dtype: Any,
     if plan is None or plan == "heuristic":
         return level, None
     if plan == "tuned":
-        entry = default_cache().get(kernel, shape, dtype)
+        cache = default_cache()
+        entry = cache.get(kernel, shape, dtype)
+        if entry is not None:
+            _lookups["exact"] += 1
+        else:
+            entry = cache.get_nearest(kernel, shape, dtype)
+            _lookups["nearest" if entry is not None else "miss"] += 1
         if entry is None:
             return level, None
         plan = entry.get("plan", {})

@@ -174,3 +174,68 @@ SPACES = {
     "histogram": histogram_space,
     "nbody": nbody_space,
 }
+
+
+# ------------------------------------------------------------- feasibility
+def plan_feasible(kernel: str, shape: Sequence[int], plan: PlanDict, *,
+                  dtype_bytes: int = 4, hw: HardwareSpec = TPU_V5E) -> bool:
+    """Is a tuned plan dict VMEM-feasible for ``shape``?
+
+    The single feasibility oracle behind the cache's nearest-shape lookup:
+    a plan tuned on shape A may only be transplanted onto query shape B if
+    its working set — computed through the same TilePlanner arithmetic the
+    heuristics and the space enumerations use — fits the VMEM budget at B
+    (and, where a kernel demands it, its tiles divide B's dims).  Non-T3
+    plans (reference lowerings) claim no VMEM and are always feasible.
+    """
+    level = plan.get("level")
+    if level is not None and level != int(Level.T3_REPLICATED):
+        return True
+    budget = TilePlanner(hw).budget
+    if kernel == "matmul":
+        m, k, n = shape
+        bm = min(plan["bm"], m)
+        bn = min(plan["bn"], n)
+        bk = min(plan["bk"], k)
+        if m % bm or n % bn or k % bk:
+            return False      # matmul_pallas rejects ragged grids
+        planner = TilePlanner(
+            hw, double_buffer=plan.get("prefetch_depth", 2) >= 2)
+        try:
+            planner.plan_from_tiles(m, n, k, bm, bn, bk,
+                                    in_bytes=dtype_bytes)
+        except ValueError:
+            return False
+        return True
+    if kernel == "attention":
+        _, _, s, hd = shape
+        bq = min(plan["block_q"], s)
+        bkv = min(plan["block_kv"], s)
+        vmem = (bq * hd + 2 * 2 * bkv * hd + bq * bkv
+                + 2 * bq * hd) * dtype_bytes
+        return vmem <= budget
+    if kernel == "stencil":
+        rows, cols = shape
+        br = min(plan["block_rows"], rows)
+        if rows % br:
+            return False
+        halo = 1
+        vmem = ((br + 2 * halo) * (cols + 2 * halo) + br * cols) \
+            * dtype_bytes * 2
+        return vmem <= budget
+    if kernel == "histogram":
+        n, n_bins = shape
+        block = min(plan["block"], n)
+        if n % block:
+            return False
+        vmem = (block * n_bins + block) * dtype_bytes + n_bins * 4
+        return vmem <= budget
+    if kernel == "nbody":
+        (n,) = shape
+        bt = min(plan["block_targets"], n)
+        bs = min(plan["block_sources"], n)
+        if n % bt or n % bs:
+            return False
+        vmem = (4 * bt + 2 * 4 * bs + bt * bs) * dtype_bytes
+        return vmem <= budget
+    return False                  # unknown kernel: never transplant

@@ -1,18 +1,22 @@
 """Autotuner (repro.tune): cache round-trip through the ops wrappers,
-deterministic search under a stubbed measurement harness, and VMEM-budget
-pruning of every enumerated candidate."""
+deterministic search under a stubbed measurement harness, VMEM-budget
+pruning of every enumerated candidate, and the nearest-shape lookup the
+dispatch layer relies on."""
 import json
+import random
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.plan import Level, TransformConfig, enumerate_configs
 from repro.core.scaling import TilePlanner
 from repro.tune import (DEFAULT_SHAPES, Harness, PlanCache, SPACES,
-                        make_key, tune)
-from repro.tune.cache import resolve_plan
+                        lookup_stats, make_key, plan_feasible,
+                        reset_lookup_stats, tune)
+from repro.tune.cache import resolve_plan, shape_distance
 from repro.tune.measure import Measurement
 
 
@@ -191,6 +195,148 @@ def test_tuned_plan_level_overrides_caller(tmp_path, monkeypatch):
     np.testing.assert_allclose(jacobi4(x, plan="tuned"),
                                jacobi4(x, level=Level.T1_PIPELINED),
                                rtol=1e-6, atol=1e-6)
+
+
+# ------------------------------------------------------- nearest-shape
+def _cache_with(entries):
+    cache = PlanCache("/tmp/unused-nearest-cache.json")
+    for (kernel, shape, plan) in entries:
+        cache.put(kernel, shape, jnp.float32, plan, backend="cpu", us=1.0)
+    return cache
+
+
+_T3 = int(Level.T3_REPLICATED)
+
+
+def test_nearest_exact_hit_beats_nearest(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(tmp_path / "plans.json"))
+    exact_plan = {"level": _T3, "bm": 128, "bn": 128, "bk": 128,
+                  "prefetch_depth": 2}
+    near_plan = {"level": _T3, "bm": 256, "bn": 256, "bk": 256,
+                 "prefetch_depth": 2}
+    cache = PlanCache(tmp_path / "plans.json")
+    cache.put("matmul", (256, 256, 256), jnp.float32, exact_plan, us=1.0)
+    cache.put("matmul", (512, 512, 512), jnp.float32, near_plan, us=1.0)
+    cache.save()
+    reset_lookup_stats()
+    _, kw = resolve_plan("matmul", (256, 256, 256), jnp.float32,
+                         Level.T3_REPLICATED, "tuned")
+    assert {k: kw[k] for k in ("bm", "bn", "bk")} == \
+        {"bm": 128, "bn": 128, "bk": 128}
+    assert lookup_stats()["exact"] == 1 and lookup_stats()["nearest"] == 0
+    # and a miss on a third shape picks the geometrically closest entry
+    _, kw = resolve_plan("matmul", (512, 512, 1024), jnp.float32,
+                         Level.T3_REPLICATED, "tuned")
+    assert {k: kw[k] for k in ("bm", "bn", "bk")} == \
+        {"bm": 256, "bn": 256, "bk": 256}       # 512 entry is closer
+    assert lookup_stats()["nearest"] == 1
+
+
+def test_nearest_skips_infeasible_plans():
+    """The distance-closest entry whose plan cannot run at the query shape
+    (ragged tiles / VMEM blowout) is skipped for a farther feasible one."""
+    cache = _cache_with([
+        # closest by distance, but bm=384 does not divide m=512
+        ("matmul", (640, 512, 512),
+         {"level": _T3, "bm": 384, "bn": 128, "bk": 128}),
+        # farther, feasible
+        ("matmul", (2048, 2048, 2048),
+         {"level": _T3, "bm": 256, "bn": 256, "bk": 256,
+          "prefetch_depth": 2}),
+    ])
+    entry = cache.get_nearest("matmul", (512, 512, 512), jnp.float32,
+                              backend="cpu")
+    assert entry is not None and entry["plan"]["bm"] == 256
+    assert not plan_feasible("matmul", (512, 512, 512),
+                             {"level": _T3, "bm": 384, "bn": 128,
+                              "bk": 128}, dtype_bytes=4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.sampled_from([128, 192, 256, 384, 512, 768, 1024]),
+       st.sampled_from([128, 256, 512]),
+       st.sampled_from([128, 256, 512, 2048]))
+def test_nearest_never_returns_infeasible(m, k, n):
+    """Property: whatever get_nearest returns is VMEM-feasible for the
+    query shape per the TilePlanner working-set arithmetic."""
+    cache = _cache_with([
+        ("matmul", (256, 256, 256),
+         {"level": _T3, "bm": 256, "bn": 256, "bk": 128}),
+        ("matmul", (512, 512, 512),
+         {"level": _T3, "bm": 384, "bn": 384, "bk": 384}),   # often ragged
+        ("matmul", (4096, 4096, 4096),
+         {"level": _T3, "bm": 2048, "bn": 2048, "bk": 2048}),  # VMEM blowout
+        ("matmul", (1024, 1024, 1024), {"level": int(Level.T1_PIPELINED)}),
+    ])
+    entry = cache.get_nearest("matmul", (m, k, n), jnp.float32,
+                              backend="cpu")
+    assert entry is not None    # the T1 entry is always feasible
+    assert plan_feasible("matmul", (m, k, n), entry["plan"], dtype_bytes=4)
+
+
+def test_nearest_empty_cache_falls_back_to_heuristic(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(tmp_path / "none.json"))
+    reset_lookup_stats()
+    level, kw = resolve_plan("matmul", (96, 96, 96), jnp.float32,
+                             Level.T3_REPLICATED, "tuned")
+    assert level == Level.T3_REPLICATED and kw is None
+    assert lookup_stats() == {"exact": 0, "nearest": 0, "miss": 1}
+
+
+def test_nearest_deterministic_under_dict_order_shuffles():
+    entries = [
+        ("matmul", (256, 256, 256),
+         {"level": _T3, "bm": 128, "bn": 128, "bk": 128,
+          "prefetch_depth": 2}),
+        ("matmul", (256, 256, 512),
+         {"level": _T3, "bm": 128, "bn": 128, "bk": 128,
+          "prefetch_depth": 1}),
+        ("matmul", (512, 256, 256),
+         {"level": _T3, "bm": 128, "bn": 128, "bk": 128,
+          "prefetch_depth": 2}),
+        ("matmul", (512, 512, 512),
+         {"level": _T3, "bm": 256, "bn": 256, "bk": 256,
+          "prefetch_depth": 2}),
+    ]
+    # (384,256,384) is exactly equidistant from (256,256,512) and
+    # (512,256,256) (distinct plans): the sorted-key tie-break must pick
+    # the same entry for any insertion order
+    queries = [(384, 256, 384), (768, 256, 768), (512, 384, 512)]
+    results = []
+    rng = random.Random(0)
+    for _ in range(6):
+        shuffled = entries[:]
+        rng.shuffle(shuffled)
+        cache = _cache_with(shuffled)
+        results.append([cache.get_nearest("matmul", q, jnp.float32,
+                                          backend="cpu")["plan"]
+                        for q in queries])
+    assert all(r == results[0] for r in results)
+
+
+def test_nearest_plan_reaches_the_kernel(tmp_path, monkeypatch):
+    """End to end: a plan tuned at (256,256,256) is transplanted (clamped)
+    onto a (128,128) matmul via the nearest-shape fallback and produces
+    correct numerics."""
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(tmp_path / "plans.json"))
+    cache = PlanCache(tmp_path / "plans.json")
+    cache.put("matmul", (256, 256, 256), jnp.float32,
+              {"level": _T3, "bm": 256, "bn": 256, "bk": 128,
+               "prefetch_depth": 2}, us=1.0)
+    cache.save()
+    reset_lookup_stats()
+    a = jax.random.normal(jax.random.key(0), (128, 128), jnp.float32)
+    b = jax.random.normal(jax.random.key(1), (128, 128), jnp.float32)
+    from repro.kernels.matmul import matmul
+    got = matmul(a, b, plan="tuned")
+    np.testing.assert_allclose(got, a @ b, rtol=1e-4, atol=1e-3)
+    assert lookup_stats()["nearest"] == 1
+
+
+def test_shape_distance_is_geometric():
+    assert shape_distance((256, 256, 256), (256, 256, 256)) == 0.0
+    assert shape_distance((256, 256, 256), (512, 512, 512)) < \
+        shape_distance((256, 256, 256), (256, 256, 4096))
 
 
 def test_real_measurement_smoke():
