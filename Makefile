@@ -1,4 +1,4 @@
-.PHONY: smoke test tune bench
+.PHONY: smoke test tune serve bench
 
 smoke:        ## fast suite, skips multi-device subprocess tests
 	./scripts/ci.sh smoke
@@ -8,6 +8,9 @@ test:         ## full tier-1 suite
 
 tune:         ## sweep the kernel design space, persist tuned plans
 	./scripts/ci.sh tune
+
+serve:        ## paged-serving smoke + BENCH_serve.json throughput rows
+	./scripts/ci.sh serve
 
 bench:        ## Fig. 7 staged-progression benchmark
 	PYTHONPATH=src python benchmarks/run.py

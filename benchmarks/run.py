@@ -28,6 +28,7 @@ measurements — the tuned column never regresses beyond timer noise.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import time
 from pathlib import Path
@@ -240,6 +241,111 @@ def run_tune(args) -> None:
     print(f"# report: {out}")
 
 
+def run_serve(args) -> None:
+    """--serve: decode-throughput rows for the serving runtime.
+
+    Times a small smoke-config workload on this host for both cache
+    layouts: ``paged`` separates the prefill phase (chunked, one page per
+    forward) from the decode phase (batched ragged steps through
+    ``dispatch.decode_attention``); ``dense`` teacher-forces prompts
+    through the decode step, so its tok/s column absorbs the prompt
+    replay — the comparison the paged refactor exists to win.  Absolute
+    numbers are CPU-interpret numbers; the row structure is what carries
+    to TPU.
+    """
+    import numpy as np
+
+    from repro.configs import get_arch
+    from repro.core.memory import DtypePolicy
+    from repro.kernels import dispatch
+    from repro.launch.serve import PagedScheduler, Request, Server
+    from repro.models.transformer import ExecOptions, Model
+    from repro.tune.cache import preload as preload_tuned
+
+    preload_tuned()
+    cfg = get_arch(args.serve_arch).smoke()
+    cfg = dataclasses.replace(cfg, dispatch=args.serve_dispatch)
+    model = Model(cfg, dt=DtypePolicy(param=jnp.bfloat16),
+                  opts=ExecOptions(mode="run"))
+    params = model.init(jax.random.key(0))
+    slots, prompt_len, max_new, max_len = 2, 12, 8, 64
+
+    def requests():
+        rng = np.random.default_rng(0)
+        return [Request(i, rng.integers(0, cfg.vocab_size, prompt_len),
+                        max_new) for i in range(slots)]
+
+    def warmup_request():
+        rng = np.random.default_rng(99)
+        return Request(-1, rng.integers(0, cfg.vocab_size, 4), 2)
+
+    rows = []
+    print("arch,cache,dispatch,slots,page_size,"
+          "prefill_tok_s,decode_tok_s,decode_route")
+    for kind in ("paged", "dense"):
+        dispatch.reset_stats()
+        if kind == "paged":
+            sched = PagedScheduler(model, params, slots=slots,
+                                   max_len=max_len,
+                                   page_size=args.serve_page_size)
+            # warmup: compile prefill_step_paged + decode_step on this
+            # scheduler instance outside the timed regions
+            sched.run([warmup_request()])
+            sched.prefill_tokens = sched.decode_tokens = 0
+            sched.decode_steps = 0
+            reqs = requests()
+            t0 = time.perf_counter()
+            for i, r in enumerate(reqs):
+                if not sched.try_admit(r, i):
+                    raise RuntimeError(f"admission failed for request {i}")
+            t_prefill = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            done = sched.run([])
+            t_decode = time.perf_counter() - t0
+            page = sched.page
+            prefill_tok_s = sched.prefill_tokens / max(t_prefill, 1e-9)
+            decode_tok_s = sched.decode_tokens / max(t_decode, 1e-9)
+        else:
+            server = Server(model, params, slots=slots, max_len=max_len)
+            server.run([warmup_request()])     # compile decode_step
+            reqs = requests()
+            t0 = time.perf_counter()
+            done = server.run(reqs)
+            t_total = time.perf_counter() - t0
+            page = 0
+            prefill_tok_s = None           # prompts replay through decode
+            decode_tok_s = sum(len(r.out) for r in done) \
+                / max(t_total, 1e-9)
+        if len(done) != slots:
+            raise RuntimeError(
+                f"{kind} serve finished {len(done)}/{slots} requests")
+        routes = dispatch.stats()
+        # dense never calls dispatch.decode_attention at all — report n/a
+        # rather than conflating "not exercised" with "reference taken"
+        if kind == "dense":
+            decode_route = "n/a"
+        else:
+            decode_route = ("kernel" if routes.get(("decode_attention",
+                                                    "kernel"), 0) else
+                            "reference")
+        row = {"arch": cfg.name, "cache": kind,
+               "dispatch": args.serve_dispatch, "slots": slots,
+               "page_size": page,
+               "prefill_tok_s": None if prefill_tok_s is None
+               else round(prefill_tok_s, 2),
+               "decode_tok_s": round(decode_tok_s, 2),
+               "decode_route": decode_route,
+               "backend": jax.default_backend()}
+        rows.append(row)
+        pf = "" if prefill_tok_s is None else f"{prefill_tok_s:.2f}"
+        print(f"{cfg.name},{kind},{args.serve_dispatch},{slots},{page},"
+              f"{pf},{decode_tok_s:.2f},{decode_route}", flush=True)
+    out = Path(args.serve_out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps({"rows": rows}, indent=2) + "\n")
+    print(f"# report: {out}")
+
+
 def run_progression() -> None:
     print("name,us_per_call,derived")
     bench_stencil()
@@ -275,9 +381,22 @@ def main(argv=None) -> None:
                     help="tuned-vs-heuristic report JSON path")
     ap.add_argument("--tune-reps", type=int, default=3,
                     help="timing reps per candidate (median taken)")
+    ap.add_argument("--serve", action="store_true",
+                    help="serving-runtime decode-throughput rows "
+                         "(paged vs dense cache)")
+    ap.add_argument("--serve-arch", default="gemma-2b")
+    ap.add_argument("--serve-dispatch", default="auto",
+                    choices=("auto", "kernels", "reference"))
+    ap.add_argument("--serve-page-size", type=int, default=8,
+                    help="paged layout page size for the smoke workload "
+                         "(0 = tuned-plan pick)")
+    ap.add_argument("--serve-out", default="results/BENCH_serve.json",
+                    help="serve-throughput report JSON path")
     args = ap.parse_args(argv)
     if args.tune:
         run_tune(args)
+    elif args.serve:
+        run_serve(args)
     else:
         run_progression()
 

@@ -2,10 +2,13 @@
 # CI entry points.
 #   scripts/ci.sh smoke   — fast suite (-m "not slow"), incl. the kernel
 #                           dispatch differential tests
-#                           (tests/test_dispatch_differential.py, capped
-#                           shapes: ~30s of the budget); stays ≲3 min
+#                           (tests/test_dispatch_differential.py +
+#                           tests/test_paged_decode.py, capped shapes)
 #   scripts/ci.sh full    — everything, incl. multi-device subprocess tests
 #   scripts/ci.sh tune    — design-space sweep; writes results/tuned_plans.json
+#   scripts/ci.sh serve   — paged-serving smoke: interpret-mode ragged
+#                           decode through dispatch.decode_attention for a
+#                           few steps, plus BENCH_serve.json throughput rows
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -14,5 +17,11 @@ case "${1:-smoke}" in
   smoke) python -m pytest -q -m "not slow" ;;
   full)  python -m pytest -q ;;
   tune)  python benchmarks/run.py --tune ;;
-  *) echo "usage: $0 {smoke|full|tune}" >&2; exit 2 ;;
+  serve)
+    python -m repro.launch.serve --arch gemma-2b --smoke --cache paged \
+      --dispatch kernels --slots 2 --requests 3 --prompt-len 6 \
+      --max-new 4 --max-len 32 --page-size 8
+    python benchmarks/run.py --serve --serve-dispatch kernels
+    ;;
+  *) echo "usage: $0 {smoke|full|tune|serve}" >&2; exit 2 ;;
 esac

@@ -56,6 +56,14 @@ class ArchConfig:
     # "kernels" forces the Pallas path, "reference" forces the einsum
     # lowering (tests / dry-runs force either), "auto" picks per backend
     dispatch: str = "auto"
+    # serving KV-cache layout: "dense" = rectangular (slots, max_len)
+    # rolling caches; "paged" = fixed-size pages + per-slot page tables
+    # (--cache on launch/serve.py; decode routes through
+    # dispatch.decode_attention)
+    kv_cache: str = "dense"
+    # page size for the paged layout; 0 = pick from tuned decode plans
+    # (falls back to 64 when no tuned entry matches)
+    kv_page_size: int = 0
     notes: str = ""
 
     # ------------------------------------------------------------------

@@ -1,1 +1,1 @@
-from .ops import flash_attention  # noqa: F401
+from .ops import decode_attention, flash_attention  # noqa: F401

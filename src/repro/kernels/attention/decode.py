@@ -1,0 +1,155 @@
+"""Pallas ragged decode attention over a paged KV cache.
+
+The serving hot path: one query token per slot against that slot's
+variable-length KV history, stored as fixed-size pages scattered through a
+shared pool.  This is the paper's memory stack applied to a cache:
+
+* memory access extraction (§4.1) — the page table turns address
+  computation into data: the scalar-prefetched ``table`` is resolved in the
+  BlockSpec index maps, so the compute kernel only ever sees dense tiles;
+* on-chip buffering + oversubscription (§4.2) — each page stream is a
+  separately pipelined operand (``pages_per_tile`` of them), so page
+  fetches for tile j+1 overlap the online-softmax update for tile j;
+* memory banking (§4.3) — the pool's page axis is the bank axis: slots
+  grow by grabbing any free page, never by reshaping a rectangle;
+* tiled accumulation interleaving (§2.1.2) — the (grp, hd) accumulator in
+  VMEM is revisited once per page tile with the usual exp(m_old - m_new)
+  correction, exactly the flash recurrence;
+* condition flattening (§2.7) — ragged tails are branch-free ``where``
+  masks on key positions; dead tiles (beyond a slot's length, or older
+  than its window) are skipped with ``pl.when`` before any MXU work.
+
+Layout: q (B, H, hd) — one token per slot, GQA-grouped to (B, Hkv, grp,
+hd); k_pages / v_pages (P, page, Hkv, hd); table (B, n_pages) int32 page
+ids (row j is the slot's j-th logical page); lengths (B,) int32 valid
+tokens per slot (0 = inactive slot -> zero output, no NaNs).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..common import tpu_compiler_params
+
+
+def heuristic_pages_per_tile(n_pages: int, page_size: int) -> int:
+    """Default KV-tile geometry: aim for the flash kernel's 512-row KV
+    tile, capped at 8 page streams so the spec count stays small."""
+    return max(1, min(n_pages, 512 // max(page_size, 1), 8))
+
+
+def _decode_kernel(lengths_ref, table_ref, q_ref, *refs, n_tiles: int,
+                   page: int, ppt: int, window: int, scale: float):
+    k_refs = refs[:ppt]
+    v_refs = refs[ppt:2 * ppt]
+    o_ref = refs[2 * ppt]
+    m_ref, l_ref, acc_ref = refs[2 * ppt + 1:]
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = lengths_ref[b]
+    # structural tile skip (§2.7): tile j covers kpos [k_lo, k_hi]
+    k_lo = j * ppt * page
+    live = k_lo < length
+    if window > 0:
+        k_hi = k_lo + ppt * page - 1
+        live = jnp.logical_and(live, k_hi >= length - window)
+
+    @pl.when(live)
+    def _step():
+        q = q_ref[0, 0]                                   # (grp, hd)
+        k = jnp.concatenate([r[0, :, 0] for r in k_refs], axis=0)
+        v = jnp.concatenate([r[0, :, 0] for r in v_refs], axis=0)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = kpos < length                              # ragged tail
+        if window > 0:
+            mask = jnp.logical_and(mask, kpos >= length - window)
+        s = jnp.where(mask, s, -1e30)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == n_tiles - 1)
+    def _flush():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(q: jax.Array, k_pages: jax.Array,
+                            v_pages: jax.Array, table: jax.Array,
+                            lengths: jax.Array, *, window: int = 0,
+                            pages_per_tile: int = 1,
+                            interpret: bool = False) -> jax.Array:
+    """q (B, H, hd); k/v_pages (P, page, Hkv, hd); table (B, n_pages);
+    lengths (B,).  Returns (B, H, hd) f32."""
+    b, h, hd = q.shape
+    _, page, hkv, _ = k_pages.shape
+    n_pages = table.shape[1]
+    assert h % hkv == 0, (h, hkv)
+    grp = h // hkv
+    ppt = max(1, min(pages_per_tile, n_pages))
+    if n_pages % ppt:
+        # pad the logical page axis with page 0; the padded positions are
+        # kpos >= lengths and therefore always masked
+        pad = ppt - n_pages % ppt
+        table = jnp.pad(table, ((0, 0), (0, pad)))
+        n_pages += pad
+    n_tiles = n_pages // ppt
+    qg = q.reshape(b, hkv, grp, hd)
+
+    kernel = functools.partial(
+        _decode_kernel, n_tiles=n_tiles, page=page, ppt=ppt,
+        window=window, scale=1.0 / math.sqrt(hd))
+
+    def page_spec(i):
+        # the i-th page stream of a KV tile: tile j holds logical pages
+        # [j*ppt, (j+1)*ppt); the scalar-prefetched table resolves the
+        # logical -> physical page id inside the index map (§4.1)
+        return pl.BlockSpec(
+            (1, page, 1, hd),
+            lambda bb, hh, jj, lens, tab, i=i: (tab[bb, jj * ppt + i],
+                                                0, hh, 0))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv, n_tiles),
+        in_specs=[
+            pl.BlockSpec((1, 1, grp, hd),
+                         lambda bb, hh, jj, lens, tab: (bb, hh, 0, 0)),
+            *[page_spec(i) for i in range(ppt)],
+            *[page_spec(i) for i in range(ppt)],
+        ],
+        out_specs=pl.BlockSpec((1, 1, grp, hd),
+                               lambda bb, hh, jj, lens, tab: (bb, hh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((grp, 1), jnp.float32),     # running max
+            pltpu.VMEM((grp, 1), jnp.float32),     # running denom
+            pltpu.VMEM((grp, hd), jnp.float32),    # weighted-V acc
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, grp, hd), jnp.float32),
+        compiler_params=tpu_compiler_params(
+            ("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(lengths, table, qg, *([k_pages] * ppt), *([v_pages] * ppt))
+    return out.reshape(b, h, hd)

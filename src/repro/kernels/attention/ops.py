@@ -1,4 +1,4 @@
-"""jit'd wrapper for flash attention."""
+"""jit'd wrappers for flash attention and paged decode attention."""
 from __future__ import annotations
 
 import functools
@@ -10,6 +10,7 @@ from ...core.plan import Level
 from ...tune.cache import resolve_plan
 from ..common import interpret_default
 from . import ref
+from .decode import decode_attention_pallas, heuristic_pages_per_tile
 from .flash import flash_attention_pallas
 
 
@@ -57,3 +58,56 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     return _flash_attention(q, k, v, causal=causal, window=window,
                             level=level, block_q=block_q, block_kv=block_kv,
                             interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "level",
+                                             "pages_per_tile", "interpret"))
+def _decode_attention(q, k_pages, v_pages, table, lengths, *, window: int,
+                      level: Level, pages_per_tile: int,
+                      interpret: bool) -> jax.Array:
+    if level in (Level.T0_NAIVE, Level.T1_PIPELINED):
+        return ref.decode_attention_ref(q, k_pages, v_pages, table, lengths,
+                                        window=window)
+    return decode_attention_pallas(q, k_pages, v_pages, table, lengths,
+                                   window=window,
+                                   pages_per_tile=pages_per_tile,
+                                   interpret=interpret)
+
+
+def decode_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                     table: jax.Array, lengths: jax.Array, *,
+                     window: int = 0,
+                     level: Level = Level.T3_REPLICATED,
+                     pages_per_tile: Optional[int] = None,
+                     plan: Union[str, dict, None] = "heuristic",
+                     interpret: Optional[bool] = None) -> jax.Array:
+    """Ragged decode attention over a paged KV cache.
+
+    q (B, H, hd) — one query token per slot; k_pages / v_pages (P, page,
+    Hkv, hd) shared page pools; table (B, n_pages) int32 logical->physical
+    page ids; lengths (B,) int32 valid tokens per slot (0 = inactive slot,
+    output 0).  Returns (B, H, hd) f32.  T0/T1 gather pages to a dense
+    masked reference; T2+ run the scalar-prefetch Pallas kernel.
+
+    ``plan`` selects the KV-tile geometry: ``"heuristic"`` (the
+    ``pages_per_tile`` argument, default ~512-row tiles), ``"tuned"``
+    (autotuner cache keyed on (B, H, n_pages, page, hd); heuristic on a
+    miss), or a tuned kwargs dict (``pages_per_tile``, optional ``level``;
+    ``page_size`` / ``prefetch_depth`` entries are layout / feasibility
+    knobs and are ignored at call time).
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    b, h, hd = q.shape
+    _, page, _, _ = k_pages.shape
+    n_pages = table.shape[1]
+    shape = (b, h, n_pages, page, hd)
+    level, kw = resolve_plan("decode_attention", shape, q.dtype, level, plan)
+    if kw:
+        pages_per_tile = kw.get("pages_per_tile", pages_per_tile)
+    if pages_per_tile is None:
+        pages_per_tile = heuristic_pages_per_tile(n_pages, page)
+    return _decode_attention(q, k_pages, v_pages, table, lengths,
+                             window=window, level=level,
+                             pages_per_tile=int(pages_per_tile),
+                             interpret=interpret)

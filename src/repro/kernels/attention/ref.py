@@ -7,6 +7,37 @@ import jax
 import jax.numpy as jnp
 
 
+def decode_attention_ref(q: jax.Array, k_pages: jax.Array,
+                         v_pages: jax.Array, table: jax.Array,
+                         lengths: jax.Array, *,
+                         window: int = 0) -> jax.Array:
+    """Oracle for paged ragged decode: gather pages to a dense (B, S, Hkv,
+    hd) view, mask key positions past each slot's length (and older than
+    its window), f32 softmax.  q (B, H, hd) -> (B, H, hd) f32."""
+    b, h, hd = q.shape
+    _, page, hkv, _ = k_pages.shape
+    grp = h // hkv
+    k = k_pages[table].reshape(b, -1, hkv, hd)       # (B, n_pages*page, ...)
+    v = v_pages[table].reshape(b, -1, hkv, hd)
+    if grp > 1:                                      # GQA group broadcast
+        k = jnp.broadcast_to(k[:, :, :, None, :],
+                             k.shape[:3] + (grp, hd)).reshape(b, -1, h, hd)
+        v = jnp.broadcast_to(v[:, :, :, None, :],
+                             v.shape[:3] + (grp, hd)).reshape(b, -1, h, hd)
+    scores = jnp.einsum("bhd,bshd->bhs", q, k).astype(jnp.float32) \
+        / math.sqrt(hd)
+    kpos = jnp.arange(k.shape[1])[None, :]
+    mask = kpos < lengths[:, None]
+    if window > 0:
+        mask &= kpos >= lengths[:, None] - window
+    scores = jnp.where(mask[:, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhs,bshd->bhd", probs.astype(v.dtype), v)
+    # fully-masked rows (inactive slots, lengths == 0) -> exact zeros
+    return jnp.where((lengths > 0)[:, None, None],
+                     out.astype(jnp.float32), 0.0)
+
+
 def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
                   causal: bool = True, window: int = 0) -> jax.Array:
     """q,k,v: (B, H, S, hd).  f32 softmax; returns (B, H, S, hd) f32."""

@@ -124,6 +124,22 @@ def stats() -> Dict[Tuple[str, str], int]:
     return dict(_stats)
 
 
+@contextlib.contextmanager
+def stats_scope():
+    """Isolated counter scope: zeroed on entry, restored on exit.
+
+    Tests and probes read routes via the yielded ``stats`` accessor without
+    leaking counts into (or absorbing counts from) other test modules.
+    """
+    saved = Counter(_stats)
+    _stats.clear()
+    try:
+        yield stats
+    finally:
+        _stats.clear()
+        _stats.update(saved)
+
+
 def _count(op: str, route: str) -> None:
     _stats[(op, route)] += 1
 
@@ -414,3 +430,93 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         q, k, v, causal=causal, window=window, softcap=softcap,
         accum_dtype=accum_dtype, out_dtype=out_dtype, block_kv=block_kv,
         q_splits=q_splits, unroll=unroll)
+
+
+# --------------------------------------------------------- decode attention
+def _decode_attention_reference(q, k_pages, v_pages, table, lengths, *,
+                                window, softcap, accum_dtype, out_dtype):
+    """Paged ragged decode reference: gather pages to a dense view, mask by
+    per-slot length (and window), softmax in ``accum_dtype``.  The einsum
+    lowering the paged serve path uses when the kernel route is off."""
+    b, h, hd = q.shape
+    _, page, hkv, _ = k_pages.shape
+    grp = h // hkv
+    k = k_pages[table].reshape(b, -1, hkv, hd)
+    v = v_pages[table].reshape(b, -1, hkv, hd)
+    if grp > 1:
+        k = jnp.broadcast_to(k[:, :, :, None, :],
+                             k.shape[:3] + (grp, hd)).reshape(b, -1, h, hd)
+        v = jnp.broadcast_to(v[:, :, :, None, :],
+                             v.shape[:3] + (grp, hd)).reshape(b, -1, h, hd)
+    scale = 1.0 / math.sqrt(hd)
+    scores = jnp.einsum("bhd,bshd->bhs", q, k).astype(accum_dtype) * scale
+    if softcap > 0:
+        scores = jnp.tanh(scores / softcap) * softcap
+    kpos = jnp.arange(k.shape[1])[None, :]
+    valid = kpos < lengths[:, None]
+    if window > 0:
+        valid &= kpos >= lengths[:, None] - window
+    scores = jnp.where(valid[:, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(out_dtype)
+    out = jnp.einsum("bhs,bshd->bhd", probs, v)
+    # inactive slots (length 0): every key masked -> exact zeros, no NaNs
+    return jnp.where((lengths > 0)[:, None, None], out,
+                     jnp.zeros((), out.dtype))
+
+
+def _decode_eligible(q, k_pages, v_pages, *, softcap) -> bool:
+    if softcap > 0:
+        return False
+    if q.shape[1] % k_pages.shape[2]:
+        return False              # GQA group must divide evenly
+    return all(jnp.issubdtype(t.dtype, jnp.floating)
+               for t in (q, k_pages, v_pages))
+
+
+def decode_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                     table: jax.Array, lengths: jax.Array, *,
+                     window: int = 0, softcap: float = 0.0,
+                     accum_dtype: Any = jnp.float32,
+                     out_dtype: Any = None,
+                     policy: PolicyLike = None) -> jax.Array:
+    """Ragged decode attention over a paged KV cache — the serving hot path.
+
+    q (B, H, hd) one query token per slot; k_pages / v_pages (P, page,
+    Hkv, hd) shared pools; table (B, n_pages) logical->physical page ids;
+    lengths (B,) valid tokens per slot (0 = inactive -> zero output).
+    Returns (B, H, hd) in ``out_dtype`` (default q's dtype).  Inference
+    only — no custom VJP; the kernel route consults the tuned-plan cache
+    for KV-tile geometry (``plan="tuned"``).
+    """
+    out_dtype = q.dtype if out_dtype is None else out_dtype
+    mode = resolve_mode(policy)
+    use_kernel = (mode != "reference"
+                  and (mode == "kernels" or _kernels_by_default())
+                  and _decode_eligible(q, k_pages, v_pages, softcap=softcap))
+    pages_per_tile = None
+    if use_kernel:
+        # resolve the tuned plan HERE so the route counter stays honest: a
+        # tuned entry may say the reference lowering wins on this backend
+        # (level <= T1), in which case "auto" honors it and counts the
+        # reference route — while an explicit "kernels" override forces
+        # the Pallas lowering (keeping any tuned tile geometry), as the
+        # policy docstring promises the differential tests
+        from ..core.plan import Level
+        from ..tune.cache import resolve_plan
+        shape = (q.shape[0], q.shape[1], table.shape[1], k_pages.shape[1],
+                 q.shape[2])
+        level, kw = resolve_plan("decode_attention", shape, q.dtype,
+                                 Level.T3_REPLICATED, "tuned")
+        pages_per_tile = (kw or {}).get("pages_per_tile")
+        if level in (Level.T0_NAIVE, Level.T1_PIPELINED) \
+                and mode != "kernels":
+            use_kernel = False
+    _count("decode_attention", "kernel" if use_kernel else "reference")
+    if use_kernel:
+        from .attention.ops import decode_attention as decode_op
+        out = decode_op(q, k_pages, v_pages, table, lengths, window=window,
+                        pages_per_tile=pages_per_tile, plan=None)
+        return out.astype(out_dtype)
+    return _decode_attention_reference(
+        q, k_pages, v_pages, table, lengths, window=window, softcap=softcap,
+        accum_dtype=accum_dtype, out_dtype=out_dtype)

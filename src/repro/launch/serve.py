@@ -1,14 +1,24 @@
-"""Batched serving driver: prefill + continuous decode.
+"""Batched serving driver: paged-KV scheduler + legacy dense server.
 
-A minimal-but-real serving loop: requests arrive with prompts, get packed
-into a fixed-slot batch, prefilled (one forward), then all active slots
-decode one token per ``serve_step`` (the paper's cross-input interleaving
-§2.1.4: the batch dimension fills the pipeline the way the FPGA interleaves
-independent solver instances).  Finished sequences free their slot for the
-next queued request (continuous batching).
+Two cache layouts behind one CLI (``--cache {dense,paged}``):
+
+* ``dense`` — the original fixed-slot continuous-batching decoder: one
+  rectangular (slots, max_len) KV cache, prompts teacher-forced through the
+  decode step one token at a time.
+* ``paged`` — the serving runtime this module is really about.  The KV
+  cache is a pool of fixed-size pages (paper §4.3 memory banking); a
+  host-side scheduler does admission control (a request is admitted only
+  when its whole lifetime's pages can be reserved), chunked prefill (one
+  page-sized chunk per forward, §2.1.4 cross-input interleaving against
+  decode), batched decode over ragged lengths (every slot at its own
+  position, the Pallas ragged kernel via ``dispatch.decode_attention``),
+  and slot recycling (finished sequences return their pages to the free
+  list).  The split mirrors Chi et al.'s task-parallel decoupling: the
+  scheduler computes addresses (page tables), the kernels only ever see
+  dense tiles.
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --smoke \\
-      --requests 8 --max-new 16
+      --cache paged --dispatch kernels --requests 8 --max-new 16
 """
 from __future__ import annotations
 
@@ -24,7 +34,9 @@ import numpy as np
 
 from ..configs import get_arch
 from ..core.memory import DtypePolicy
-from ..models.transformer import ExecOptions, Model
+from ..models.transformer import ExecOptions, Model, paged_supported
+
+DEFAULT_PAGE_SIZE = 64
 
 
 @dataclass
@@ -37,7 +49,7 @@ class Request:
 
 
 class Server:
-    """Fixed-slot continuous-batching decoder."""
+    """Fixed-slot continuous-batching decoder (dense rectangular cache)."""
 
     def __init__(self, model: Model, params, *, slots: int, max_len: int):
         self.model = model
@@ -96,6 +108,220 @@ class Server:
         return done
 
 
+# --------------------------------------------------------------------------
+# paged runtime
+# --------------------------------------------------------------------------
+
+class PageAllocator:
+    """Host-side free list over the shared page pool.
+
+    Physical page 0 is reserved as the TRASH page: inactive slots' tables
+    point every logical page at it, so their masked decode writes can
+    never corrupt a live sequence.
+    """
+
+    def __init__(self, total_pages: int):
+        self.total = total_pages
+        self._free = list(range(total_pages - 1, 0, -1))
+
+    def available(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> List[int]:
+        if n > len(self._free):
+            raise RuntimeError(
+                f"page pool exhausted: want {n}, have {len(self._free)}")
+        got, self._free = self._free[-n:], self._free[:-n]
+        return got[::-1]
+
+    def release(self, pages: List[int]) -> None:
+        self._free.extend(reversed(pages))
+
+
+def pick_page_size(backend: Optional[str] = None) -> int:
+    """Choose the pool layout from tuned decode plans: among cached
+    ``decode_attention`` entries for this backend, take the page size of
+    the fastest kernel-level plan (layout is a tunable, §3.4); fall back
+    to DEFAULT_PAGE_SIZE when nothing was tuned."""
+    from ..tune.cache import default_cache, parse_key
+    cache = default_cache()
+    backend = backend or jax.default_backend()
+    best_us, best_page = float("inf"), 0
+    for key, entry in cache.entries.items():
+        try:
+            kernel, shape, _, kb = parse_key(key)
+        except ValueError:
+            continue
+        if kernel != "decode_attention" or kb != backend:
+            continue
+        plan = entry.get("plan", {})
+        page = plan.get("page_size", 0)
+        us = entry.get("us", float("inf"))
+        if page and us < best_us:
+            best_us, best_page = us, page
+    return best_page or DEFAULT_PAGE_SIZE
+
+
+class PagedScheduler:
+    """Admission, chunked prefill, batched ragged decode, slot recycling."""
+
+    def __init__(self, model: Model, params, *, slots: int, max_len: int,
+                 page_size: int = 0, total_pages: int = 0):
+        if not paged_supported(model.cfg):
+            raise ValueError(
+                f"arch {model.cfg.name} has recurrent/stateful layers; "
+                "paged serving requires attention-family stacks "
+                "(use --cache dense)")
+        self.model = model
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.page = page_size or model.cfg.kv_page_size or pick_page_size()
+        self.n_slot_pages = -(-max_len // self.page)
+        total = total_pages or 1 + slots * self.n_slot_pages
+        self.alloc = PageAllocator(total)
+        self.cache = model.init_paged_cache(slots, max_len, self.page,
+                                            total_pages=total)
+        self.table = np.zeros((slots, self.n_slot_pages), np.int32)
+        self.lengths = np.zeros((slots,), np.int32)
+        self.active: List[Optional[Request]] = [None] * slots
+        self.slot_pages: List[List[int]] = [[] for _ in range(slots)]
+        self.prefill_tokens = 0
+        self.decode_steps = 0
+        self.decode_tokens = 0
+        self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
+        self._prefill = jax.jit(model.prefill_step_paged,
+                                donate_argnums=(1,))
+
+    # ------------------------------------------------------------ admission
+    def pages_needed(self, r: Request) -> int:
+        return -(-(len(r.prompt) + r.max_new) // self.page)
+
+    def admissible(self, r: Request) -> bool:
+        """Can this request EVER be admitted?  Its lifetime page budget
+        must fit one slot's table and the pool (minus the trash page)."""
+        return self.pages_needed(r) <= min(self.n_slot_pages,
+                                           self.alloc.total - 1)
+
+    def try_admit(self, r: Request, slot: int) -> bool:
+        """Reserve the request's whole-lifetime pages up front (admission
+        control: a request never stalls mid-decode on an empty free list),
+        then chunk-prefill its prompt into them."""
+        need = self.pages_needed(r)
+        if need > self.n_slot_pages or self.alloc.available() < need:
+            return False
+        pages = self.alloc.alloc(need)
+        self.slot_pages[slot] = pages
+        self.table[slot] = 0
+        self.table[slot, :need] = pages
+        first = self._prefill_prompt(r, slot)
+        self.lengths[slot] = len(r.prompt)
+        r.out.append(first)
+        self.active[slot] = r
+        return True
+
+    def _prefill_prompt(self, r: Request, slot: int) -> int:
+        """Chunked prefill (chunk = one page); returns the first generated
+        token from the last real prompt position's logits."""
+        ln = len(r.prompt)
+        padded = -(-ln // self.page) * self.page
+        toks = np.zeros((padded,), np.int32)
+        toks[:ln] = r.prompt
+        table_row = jnp.asarray(self.table[slot])
+        logits = None
+        for t0 in range(0, ln, self.page):
+            last = min(ln, t0 + self.page) - 1 - t0
+            logits, self.cache = self._prefill(
+                self.params, self.cache,
+                jnp.asarray(toks[t0:t0 + self.page])[None],
+                jnp.int32(t0), table_row, jnp.int32(last))
+        self.prefill_tokens += ln
+        return int(np.argmax(np.asarray(logits[0])))
+
+    def _recycle(self, slot: int) -> None:
+        self.alloc.release(self.slot_pages[slot])
+        self.slot_pages[slot] = []
+        self.table[slot] = 0
+        self.lengths[slot] = 0
+        self.active[slot] = None
+
+    # --------------------------------------------------------------- decode
+    def _feed_batch(self, tokens: np.ndarray) -> Dict[str, jax.Array]:
+        batch = {"tokens": jnp.asarray(tokens)[:, None]}
+        if self.model.cfg.mrope_sections:
+            batch["positions"] = jnp.broadcast_to(
+                jnp.asarray(self.lengths)[:, None, None],
+                (self.slots, 1, len(self.model.cfg.mrope_sections))
+            ).astype(jnp.int32)
+        return batch
+
+    def step(self, tokens: np.ndarray) -> np.ndarray:
+        """One batched ragged decode step: every active slot advances at
+        its own length; inactive slots ride along masked (trash page)."""
+        logits, self.cache = self._decode(
+            self.params, self.cache, self._feed_batch(tokens),
+            jnp.int32(0),
+            (jnp.asarray(self.lengths), jnp.asarray(self.table)))
+        self.decode_steps += 1
+        self.decode_tokens += int(sum(r is not None for r in self.active))
+        return np.asarray(jnp.argmax(logits, axis=-1))
+
+    def run(self, requests: List[Request]) -> List[Request]:
+        queue = list(requests)
+        cur = np.zeros((self.slots,), np.int32)
+        for i, r in enumerate(self.active):    # resume pre-admitted slots
+            if r is not None:
+                cur[i] = r.out[-1]
+        done: List[Request] = []
+        while queue or any(r is not None for r in self.active):
+            blocked = False
+            for i in range(self.slots):
+                # `while`, not `if`: a max_new == 1 request finishes right
+                # out of prefill and frees its slot for the next in line
+                while self.active[i] is None and queue and not blocked:
+                    # reject permanently-oversized requests up front (they
+                    # must not head-of-line-block servable traffic)
+                    while queue and not self.admissible(queue[0]):
+                        r = queue.pop(0)
+                        r.done = False
+                        print(f"[paged] rejecting request {r.rid}: needs "
+                              f"{self.pages_needed(r)} pages "
+                              f"(> {self.n_slot_pages}/slot or pool)")
+                    if not queue or not self.try_admit(queue[0], i):
+                        blocked = True             # wait for free pages
+                        break
+                    r = queue.pop(0)
+                    cur[i] = r.out[-1]
+                    if len(r.out) >= r.max_new:    # max_new == 1 edge
+                        r.done = True
+                        done.append(r)
+                        self._recycle(i)
+                if blocked:
+                    break
+            if not any(r is not None for r in self.active):
+                if queue:
+                    # unreachable by construction (an idle scheduler has
+                    # every page free, so only inadmissible requests can
+                    # fail, and those were rejected above) — defensive
+                    raise RuntimeError(
+                        "admission deadlock: empty batch but queued "
+                        "requests cannot reserve pages")
+                break
+            nxt = self.step(cur)
+            for i, r in enumerate(self.active):
+                if r is None:
+                    continue
+                self.lengths[i] += 1
+                r.out.append(int(nxt[i]))
+                cur[i] = nxt[i]
+                if len(r.out) >= r.max_new \
+                        or int(self.lengths[i]) >= self.max_len - 1:
+                    r.done = True
+                    done.append(r)
+                    self._recycle(i)
+        return done
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", required=True)
@@ -105,35 +331,62 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--cache", default="dense", choices=("dense", "paged"),
+                    help="KV-cache layout: dense rectangle or paged pool "
+                         "(paged decodes through the ragged Pallas kernel)")
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="paged layout page size; 0 = pick from tuned "
+                         "decode plans (fallback %d)" % DEFAULT_PAGE_SIZE)
+    ap.add_argument("--total-pages", type=int, default=0,
+                    help="page-pool size; 0 = full capacity "
+                         "(slots x max_len); smaller oversubscribes")
     ap.add_argument("--dispatch", default="auto",
                     choices=("auto", "kernels", "reference"),
                     help="kernel routing for every hot matmul/attention "
                          "(repro.kernels.dispatch)")
     args = ap.parse_args(argv)
 
+    from ..kernels import dispatch
     from ..tune.cache import preload as preload_tuned
     preload_tuned(log=print)
     cfg = get_arch(args.arch)
     if args.smoke:
         cfg = cfg.smoke()
-    cfg = dataclasses.replace(cfg, dispatch=args.dispatch)
+    cfg = dataclasses.replace(cfg, dispatch=args.dispatch,
+                              kv_cache=args.cache,
+                              kv_page_size=args.page_size)
     print(f"[dispatch] policy={args.dispatch}")
     if cfg.input_mode == "embeddings":
         raise SystemExit("serving demo drives token-mode archs")
     model = Model(cfg, dt=DtypePolicy(param=jnp.bfloat16),
                   opts=ExecOptions(mode="run"))
     params = model.init(jax.random.key(0))
-    server = Server(model, params, slots=args.slots, max_len=args.max_len)
+    if args.cache == "paged":
+        server = PagedScheduler(model, params, slots=args.slots,
+                                max_len=args.max_len,
+                                page_size=args.page_size,
+                                total_pages=args.total_pages)
+        print(f"[paged] page_size={server.page} "
+              f"pool={server.alloc.total} pages "
+              f"({server.n_slot_pages}/slot max)")
+    else:
+        server = Server(model, params, slots=args.slots,
+                        max_len=args.max_len)
 
     rng = np.random.default_rng(0)
     reqs = [Request(i, rng.integers(0, cfg.vocab_size, args.prompt_len),
                     args.max_new) for i in range(args.requests)]
+    dispatch.reset_stats()
     t0 = time.time()
     done = server.run(reqs)
     dt = time.time() - t0
     total_new = sum(len(r.out) for r in done)
     print(f"served {len(done)} requests, {total_new} new tokens "
-          f"in {dt:.2f}s ({total_new/dt:.1f} tok/s, {args.slots} slots)")
+          f"in {dt:.2f}s ({total_new/dt:.1f} tok/s, {args.slots} slots, "
+          f"cache={args.cache})")
+    routes = dispatch.stats()
+    for (op, route), n in sorted(routes.items()):
+        print(f"[dispatch] {op:>16s} -> {route:<9s} x{n}")
     for r in done[:4]:
         print(f"  req {r.rid}: {r.out[:8]}...")
     return done

@@ -268,6 +268,81 @@ def attention_decode(p: Params, s: AttnSpec, x: jax.Array, pos: jax.Array,
     return out, k_cache, v_cache
 
 
+def attention_decode_paged(p: Params, s: AttnSpec, x: jax.Array,
+                           lengths: jax.Array, table: jax.Array,
+                           k_pages: jax.Array, v_pages: jax.Array,
+                           dt: DtypePolicy,
+                           positions_override: Optional[jax.Array] = None
+                           ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token ragged decode against the paged KV cache.
+
+    x: (B, 1, d).  lengths: (B,) int32 tokens already cached per slot —
+    the new token lands at position ``lengths[b]`` (the scheduler must
+    have a page allocated there; inactive slots point at the trash page).
+    table: (B, n_pages) int32 logical->physical page ids into the shared
+    (P, page, Hkv, hd) pools.  Returns (out (B,1,d), k_pages, v_pages).
+    """
+    b = x.shape[0]
+    page = k_pages.shape[1]
+    positions = (positions_override if positions_override is not None
+                 else lengths[:, None].astype(jnp.int32))
+    q, k, v = _qkv(p, s, x, positions, dt)
+    # memory banking (§4.3): the write lands in whatever physical page the
+    # slot's table maps position lengths[b] to — no rectangle to reshape
+    pid = table[jnp.arange(b), lengths // page]
+    off = lengths % page
+    k_pages = k_pages.at[pid, off].set(k[:, 0].astype(k_pages.dtype))
+    v_pages = v_pages.at[pid, off].set(v[:, 0].astype(v_pages.dtype))
+    # GQA grouping happens inside the decode kernel/reference, so the
+    # pools stay at Hkv heads end-to-end (no expanded copy in HBM)
+    out = dispatch.decode_attention(
+        q[:, 0], k_pages, v_pages, table, lengths + 1,
+        window=s.window, softcap=s.softcap, accum_dtype=dt.accum,
+        out_dtype=dt.compute, policy=s.dispatch)
+    return _out_proj(p, s, out[:, None], dt), k_pages, v_pages
+
+
+def attention_prefill_paged(p: Params, s: AttnSpec, x: jax.Array,
+                            start: jax.Array, table_row: jax.Array,
+                            k_pages: jax.Array, v_pages: jax.Array,
+                            dt: DtypePolicy,
+                            positions_override: Optional[jax.Array] = None
+                            ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Chunked prefill: one page-aligned chunk of one slot's prompt.
+
+    x: (1, C, d) with C == page_size (the chunk fills exactly one page;
+    the caller pads the final partial chunk — padded positions are never
+    read back because every later attention masks kpos >= length).
+    start: scalar int32 page-aligned chunk offset; table_row: (n_pages,)
+    the slot's page ids.  Chunk queries attend causally over the cached
+    history plus the chunk itself.  Returns (out (1,C,d), pools).
+    """
+    _, c, _ = x.shape
+    page = k_pages.shape[1]
+    positions = (positions_override if positions_override is not None
+                 else (start + jnp.arange(c))[None, :].astype(jnp.int32))
+    q, k, v = _qkv(p, s, x, positions, dt)
+    pid = table_row[start // page]
+    k_pages = k_pages.at[pid].set(k[0].astype(k_pages.dtype))
+    v_pages = v_pages.at[pid].set(v[0].astype(v_pages.dtype))
+    hist_k = k_pages[table_row].reshape(1, -1, s.n_kv_heads, s.head_dim)
+    hist_v = v_pages[table_row].reshape(1, -1, s.n_kv_heads, s.head_dim)
+    kk = _expand_kv(hist_k.astype(dt.compute), s.n_heads)
+    vv = _expand_kv(hist_v.astype(dt.compute), s.n_heads)
+    qpos = start + jnp.arange(c)
+    kpos = jnp.arange(kk.shape[1])
+    mask = kpos[None, :] <= qpos[:, None]
+    if s.window > 0:
+        mask &= kpos[None, :] > qpos[:, None] - s.window
+    # cross-length masked attention -> the dispatch reference route; the
+    # Pallas kernel covers the decode hot path (one token per step)
+    out = dispatch.attention(
+        q, kk, vv, softcap=s.softcap, mask=mask[None, None],
+        accum_dtype=dt.accum, out_dtype=dt.compute, impl="naive",
+        policy=s.dispatch)
+    return _out_proj(p, s, out, dt), k_pages, v_pages
+
+
 # --------------------------------------------------------------------------
 # MLPs
 # --------------------------------------------------------------------------

@@ -26,6 +26,7 @@ logits; their slots stay empty).
 """
 from __future__ import annotations
 
+import functools
 import math
 from typing import Dict, Tuple
 
@@ -34,6 +35,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from ..core.memory import DtypePolicy
+from ..kernels import dispatch as kdispatch
 from .layers import mlp_apply
 from .moe import MoESpec, _act
 from ..runtime.compat import shard_map
@@ -137,14 +139,17 @@ def moe_apply_sharded(p: Params, s: MoESpec, x: jax.Array, dt: DtypePolicy,
         # recv: (n_ep_src, e_loc, cap, d) -> (e_loc, src*cap, d)
         recv = recv.transpose(1, 0, 2, 3).reshape(e_loc, n_ep * cap, d)
 
-        # ---- expert FFN; d_expert striped over `data` (§4.3) ----
-        g = jnp.einsum("ecd,edf->ecf", recv, wg.astype(cdt))
+        # ---- expert FFN; d_expert striped over `data` (§4.3); the
+        # per-device expert contractions route through dispatch so tuned
+        # Pallas plans reach the shard_map path too ----
+        gmm = functools.partial(kdispatch.grouped_matmul, policy=s.dispatch)
+        g = gmm(recv, wg.astype(cdt))
         if s.activation in ("swiglu", "geglu"):
-            u = jnp.einsum("ecd,edf->ecf", recv, wu.astype(cdt))
+            u = gmm(recv, wu.astype(cdt))
             h = _act(g, s.activation) * u
         else:
             h = _act(g, s.activation)
-        out = jnp.einsum("ecf,efd->ecd", h, wd.astype(cdt))
+        out = gmm(h, wd.astype(cdt))
 
         # ---- return a2a + local combine ----
         back = out.reshape(e_loc, n_ep, cap, d).transpose(1, 0, 2, 3)

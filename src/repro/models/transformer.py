@@ -216,16 +216,29 @@ def layer_cache_init(cfg: ArchConfig, kind: LayerKind, batch: int,
 def layer_decode(p: Params, cfg: ArchConfig, kind: LayerKind, x: jax.Array,
                  cache: Dict[str, Any], pos: jax.Array, dt: DtypePolicy,
                  positions_override=None,
-                 opts: Optional[ExecOptions] = None
+                 opts: Optional[ExecOptions] = None,
+                 paged: Optional[Tuple[jax.Array, jax.Array]] = None
                  ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One decode token through one layer.  ``paged`` = (lengths, table)
+    switches attention layers to the paged-KV ragged path (``pos`` is then
+    ignored — each slot decodes at its own length); recurrent mixers and
+    FFNs are cache-layout-agnostic and run unchanged either way."""
     mixer, ffn = kind
     new_cache = dict(cache)
     h = layers.rmsnorm(p["ln1"], x)
     if mixer in ("attn", "swa"):
         spec = _attn_spec(cfg, mixer)
-        h, new_cache["k"], new_cache["v"] = layers.attention_decode(
-            p["attn"], spec, h, pos, cache["k"], cache["v"], dt,
-            positions_override=positions_override)
+        if paged is not None:
+            lengths, table = paged
+            h, new_cache["k_pages"], new_cache["v_pages"] = \
+                layers.attention_decode_paged(
+                    p["attn"], spec, h, lengths, table,
+                    cache["k_pages"], cache["v_pages"], dt,
+                    positions_override=positions_override)
+        else:
+            h, new_cache["k"], new_cache["v"] = layers.attention_decode(
+                p["attn"], spec, h, pos, cache["k"], cache["v"], dt,
+                positions_override=positions_override)
     elif mixer == "rwkv":
         h, tm_cache = rwkv.time_mix_decode(p["tm"], _rwkv_spec(cfg), h,
                                            cache, dt)
@@ -252,6 +265,75 @@ def layer_decode(p: Params, cfg: ArchConfig, kind: LayerKind, x: jax.Array,
                                    x_prev=cache["cm_xprev"])
         new_cache["cm_xprev"] = x[:, 0].astype(cache["cm_xprev"].dtype)
     return x + h, new_cache
+
+
+def layer_cache_init_paged(cfg: ArchConfig, kind: LayerKind, slots: int,
+                           total_pages: int, page_size: int,
+                           dtype) -> Dict[str, Any]:
+    """Paged twin of ``layer_cache_init``: attention layers get shared
+    (P, page, Hkv, hd) page pools instead of per-slot rectangles;
+    recurrent state stays per-slot (it is O(1) per sequence already)."""
+    mixer, ffn = kind
+    cache: Dict[str, Any] = {}
+    if mixer in ("attn", "swa"):
+        shape = (total_pages, page_size, cfg.n_kv_heads, cfg.head_dim)
+        cache["k_pages"] = jnp.zeros(shape, dtype)
+        cache["v_pages"] = jnp.zeros(shape, dtype)
+    elif mixer == "rwkv":
+        cache.update(rwkv.rwkv_cache_init(slots, _rwkv_spec(cfg), dtype))
+    elif mixer == "rglru":
+        cache.update(griffin.griffin_cache_init(slots, _griffin_spec(cfg),
+                                                dtype))
+    if ffn == "rwkv_cm" and "cm_xprev" not in cache:
+        cache["cm_xprev"] = jnp.zeros((slots, cfg.d_model), dtype)
+    return cache
+
+
+def layer_prefill_paged(p: Params, cfg: ArchConfig, kind: LayerKind,
+                        x: jax.Array, cache: Dict[str, Any],
+                        start: jax.Array, table_row: jax.Array,
+                        dt: DtypePolicy, positions_override=None,
+                        opts: Optional[ExecOptions] = None
+                        ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One page-aligned prompt chunk of one slot through one layer.
+
+    Only attention mixers support chunked prefill (recurrent mixers would
+    need a carried-state sequence scan — the serve scheduler falls back to
+    token-by-token prefill for those archs, see ``paged_supported``).
+    """
+    mixer, ffn = kind
+    new_cache = dict(cache)
+    h = layers.rmsnorm(p["ln1"], x)
+    if mixer in ("attn", "swa"):
+        spec = _attn_spec(cfg, mixer)
+        h, new_cache["k_pages"], new_cache["v_pages"] = \
+            layers.attention_prefill_paged(
+                p["attn"], spec, h, start, table_row,
+                cache["k_pages"], cache["v_pages"], dt,
+                positions_override=positions_override)
+    else:
+        raise ValueError(
+            f"paged chunked prefill requires attention mixers, got {mixer}")
+    x = x + h
+    h = layers.rmsnorm(p["ln2"], x)
+    if ffn == "mlp":
+        h = layers.mlp_apply(p["mlp"], h, cfg.activation, dt,
+                             policy=cfg.dispatch)
+    elif ffn == "moe":
+        spec = _moe_spec(cfg, opts.expert_pad if opts else 1)
+        h, _ = moe.moe_apply(p["moe"], spec, h, dt)
+    else:
+        raise ValueError(
+            f"paged chunked prefill requires stateless FFNs, got {ffn}")
+    return x + h, new_cache
+
+
+def paged_supported(cfg: ArchConfig) -> bool:
+    """Can this arch serve from a paged KV cache?  Requires every mixer to
+    be attention-family and every FFN stateless (chunked prefill has no
+    carried-state scan for recurrent layers)."""
+    return all(m in ("attn", "swa") and f in ("mlp", "moe")
+               for m, f in cfg.layer_kinds())
 
 
 # --------------------------------------------------------------------------
@@ -450,8 +532,13 @@ class Model:
         return jax.eval_shape(lambda: self.init_cache(batch, max_len))
 
     def decode_step(self, params: Params, cache, batch: Dict[str, jax.Array],
-                    pos: jax.Array):
-        """One token for every sequence.  Returns (logits (B, V), cache)."""
+                    pos: jax.Array, paged=None):
+        """One token for every sequence.  Returns (logits (B, V), cache).
+
+        ``paged`` = (lengths (B,), table (B, n_pages)) switches attention
+        layers onto the paged ragged path: every slot decodes at its own
+        length (``pos`` is ignored) against the shared page pools.
+        """
         cfg, dt, lay, opts = self.cfg, self.dt, self.layout, self.opts
         x = self._embed(params, batch)          # (B, 1, d)
         pos_override = batch.get("positions") if cfg.mrope_sections else None
@@ -459,7 +546,7 @@ class Model:
         new_cache = {"prefix": [], "stack": [], "tail": []}
         for p, kind, c in zip(params["prefix"], lay.prefix, cache["prefix"]):
             x, nc = layer_decode(p, cfg, kind, x, c, pos, dt, pos_override,
-                                 opts=opts)
+                                 opts=opts, paged=paged)
             new_cache["prefix"].append(nc)
 
         if lay.n_periods:
@@ -470,7 +557,7 @@ class Model:
                     for j, kind in enumerate(lay.period):
                         x, nc = layer_decode(pp[j], cfg, kind, x, cc[j],
                                              pos, dt, pos_override,
-                                             opts=opts)
+                                             opts=opts, paged=paged)
                         ncs.append(nc)
                     return x, tuple(ncs)
 
@@ -486,7 +573,7 @@ class Model:
                     for j, kind in enumerate(lay.period):
                         x, nc = layer_decode(pp[j], cfg, kind, x, cc[j],
                                              pos, dt, pos_override,
-                                             opts=opts)
+                                             opts=opts, paged=paged)
                         ncs.append(nc)
                     ncs = tuple(ncs)
                     if stacked_new is None:
@@ -499,11 +586,96 @@ class Model:
 
         for p, kind, c in zip(params["tail"], lay.tail, cache["tail"]):
             x, nc = layer_decode(p, cfg, kind, x, c, pos, dt, pos_override,
-                                 opts=opts)
+                                 opts=opts, paged=paged)
             new_cache["tail"].append(nc)
 
         logits = self._logits(params, x)[:, 0]
         return logits, new_cache
+
+    # ------------------------------ paged serving ---------------------
+    def init_paged_cache(self, slots: int, max_len: int, page_size: int,
+                         total_pages: Optional[int] = None
+                         ) -> Dict[str, Any]:
+        """Paged KV cache: per-attention-layer (P, page, Hkv, hd) pools.
+
+        Physical page 0 is the TRASH page — the scheduler points inactive
+        slots' tables at it so their (masked, discarded) decode writes
+        never land in a live sequence.  ``total_pages`` defaults to full
+        capacity (every slot can reach ``max_len``); pass something
+        smaller to oversubscribe — serve capacity then scales with the
+        page pool, not with slots x longest-sequence.
+        """
+        cfg, lay = self.cfg, self.layout
+        if total_pages is None:
+            total_pages = 1 + slots * (-(-max_len // page_size))
+        out: Dict[str, Any] = {"prefix": [], "stack": [], "tail": []}
+        for kind in lay.prefix:
+            out["prefix"].append(layer_cache_init_paged(
+                cfg, kind, slots, total_pages, page_size, self.dt.compute))
+        if lay.n_periods:
+            for kind in lay.period:
+                one = layer_cache_init_paged(
+                    cfg, kind, slots, total_pages, page_size,
+                    self.dt.compute)
+                out["stack"].append(jax.tree.map(
+                    lambda a: jnp.broadcast_to(
+                        a[None], (lay.n_periods,) + a.shape), one))
+        for kind in lay.tail:
+            out["tail"].append(layer_cache_init_paged(
+                cfg, kind, slots, total_pages, page_size, self.dt.compute))
+        return out
+
+    def prefill_step_paged(self, params: Params, cache,
+                           tokens: jax.Array, start: jax.Array,
+                           table_row: jax.Array, last_idx: jax.Array):
+        """One page-aligned prompt chunk of ONE slot through the stack.
+
+        tokens: (1, C) with C == page_size; start: scalar int32 chunk
+        offset (page-aligned); table_row: (n_pages,) the slot's page ids;
+        last_idx: scalar index of the last REAL prompt token within this
+        chunk (the final, possibly padded, chunk wants its logits).
+        Returns (logits (1, V) at last_idx, cache).
+        """
+        cfg, dt, lay, opts = self.cfg, self.dt, self.layout, self.opts
+        c = tokens.shape[1]
+        x = self._embed(params, {"tokens": tokens})
+        pos_override = None
+        if cfg.mrope_sections:
+            pos_override = jnp.broadcast_to(
+                (start + jnp.arange(c))[None, :, None],
+                (1, c, len(cfg.mrope_sections))).astype(jnp.int32)
+
+        def one(p, kind, x, c_in):
+            return layer_prefill_paged(p, cfg, kind, x, c_in, start,
+                                       table_row, dt, pos_override,
+                                       opts=opts)
+
+        new_cache = {"prefix": [], "stack": [], "tail": []}
+        for p, kind, cc in zip(params["prefix"], lay.prefix,
+                               cache["prefix"]):
+            x, nc = one(p, kind, x, cc)
+            new_cache["prefix"].append(nc)
+        if lay.n_periods:
+            def body(x, slices):
+                pp, cc = slices
+                ncs = []
+                for j, kind in enumerate(lay.period):
+                    x, nc = one(pp[j], kind, x, cc[j])
+                    ncs.append(nc)
+                return x, tuple(ncs)
+            if opts.scan_layers:
+                x, ncs = jax.lax.scan(
+                    body, x, (tuple(params["stack"]), tuple(cache["stack"])))
+                new_cache["stack"] = list(ncs)
+            else:
+                raise NotImplementedError(
+                    "paged prefill runs in scan mode (ExecOptions run/mem)")
+        for p, kind, cc in zip(params["tail"], lay.tail, cache["tail"]):
+            x, nc = one(p, kind, x, cc)
+            new_cache["tail"].append(nc)
+
+        x_last = jax.lax.dynamic_slice_in_dim(x, last_idx, 1, axis=1)
+        return self._logits(params, x_last)[:, 0], new_cache
 
 
 # --------------------------------------------------------------------------

@@ -18,16 +18,17 @@ Entry points: ``benchmarks/run.py --tune`` (sweep + CSV/JSON report) and
 ``cache.preload``).
 """
 from .cache import (PlanCache, default_cache, default_cache_path,
-                    lookup_stats, make_key, parse_key, preload,
-                    reset_lookup_stats, resolve_plan, shape_distance)
+                    lookup_scope, lookup_stats, make_key, parse_key,
+                    preload, reset_lookup_stats, resolve_plan,
+                    shape_distance)
 from .measure import Harness, Measurement
 from .space import SPACES, plan_feasible
 from .tuner import DEFAULT_SHAPES, KERNELS, TuneResult, tune, tune_all
 
 __all__ = [
-    "PlanCache", "default_cache", "default_cache_path", "lookup_stats",
-    "make_key", "parse_key", "preload", "reset_lookup_stats",
-    "resolve_plan", "shape_distance", "Harness", "Measurement", "SPACES",
-    "plan_feasible", "DEFAULT_SHAPES", "KERNELS", "TuneResult", "tune",
-    "tune_all",
+    "PlanCache", "default_cache", "default_cache_path", "lookup_scope",
+    "lookup_stats", "make_key", "parse_key", "preload",
+    "reset_lookup_stats", "resolve_plan", "shape_distance", "Harness",
+    "Measurement", "SPACES", "plan_feasible", "DEFAULT_SHAPES", "KERNELS",
+    "TuneResult", "tune", "tune_all",
 ]

@@ -33,6 +33,7 @@ from here: keeping it leaf-level avoids an import cycle with
 """
 from __future__ import annotations
 
+import contextlib
 import json
 import math
 import os
@@ -207,6 +208,20 @@ def reset_lookup_stats() -> None:
 
 def lookup_stats() -> Dict[str, int]:
     return dict(_lookups)
+
+
+@contextlib.contextmanager
+def lookup_scope():
+    """Isolated lookup-counter scope: zeroed on entry, restored on exit —
+    the tune-cache twin of ``kernels.dispatch.stats_scope`` so test probes
+    never leak counts across modules."""
+    saved = dict(_lookups)
+    reset_lookup_stats()
+    try:
+        yield lookup_stats
+    finally:
+        for k in _lookups:
+            _lookups[k] = saved.get(k, 0)
 
 
 def resolve_plan(kernel: str, shape: Sequence[int], dtype: Any,

@@ -167,10 +167,57 @@ def nbody_space(shape: Sequence[int], dtype_bytes: int = 4, *,
     return _dedup(cands, max_candidates)
 
 
+def _decode_vmem(grp: int, ppt: int, page: int, hd: int, pf: int,
+                 dtype_bytes: int) -> int:
+    """Per-grid-step working set of the paged decode kernel: q group tile,
+    ``ppt`` K and V page streams (x ``pf`` pipeline buffers, §4.2), the
+    (grp, ppt*page) score tile, and the m/l/acc carry."""
+    return (grp * hd + 2 * pf * ppt * page * hd + grp * ppt * page
+            + 2 * grp * hd) * dtype_bytes
+
+
+def decode_attention_space(shape: Sequence[int], dtype_bytes: int = 2, *,
+                           hw: HardwareSpec = TPU_V5E,
+                           max_candidates: int = MAX_CANDIDATES
+                           ) -> List[PlanDict]:
+    """shape = (slots, heads, n_pages, page_size, head_dim).
+
+    The decode plan space is the serving-cache design space: ``page_size``
+    echoes the pool layout the plan was tuned on (the serve scheduler picks
+    its layout by comparing tuned entries across page sizes),
+    ``pages_per_tile`` is the KV-tile geometry the kernel consumes, and
+    ``prefetch_depth`` is the §4.2 pipeline-buffer count the feasibility
+    arithmetic charges for.
+    """
+    from ..kernels.attention.decode import heuristic_pages_per_tile
+    b, h, n_pages, page, hd = shape
+    budget = TilePlanner(hw).budget
+    grp = h                      # conservative GQA bound (grp = h / hkv)
+    ppt_h = heuristic_pages_per_tile(n_pages, page)
+    cands: List[PlanDict] = [
+        {"level": int(Level.T3_REPLICATED), "page_size": page,
+         "pages_per_tile": ppt_h, "prefetch_depth": pf}
+        for pf in sorted(TUNE_PREFETCH_DEPTHS, reverse=True)
+    ]
+    # the reference lowering also records the layout it was timed on, so
+    # the serve scheduler's page-size pick works whichever level wins
+    cands.append({"level": int(Level.T1_PIPELINED), "page_size": page})
+    for ppt in (16, 8, 4, 2, 1):
+        if ppt > n_pages:
+            continue
+        for pf in sorted(TUNE_PREFETCH_DEPTHS, reverse=True):
+            if _decode_vmem(grp, ppt, page, hd, pf, dtype_bytes) <= budget:
+                cands.append({"level": int(Level.T3_REPLICATED),
+                              "page_size": page, "pages_per_tile": ppt,
+                              "prefetch_depth": pf})
+    return _dedup(cands, max_candidates)
+
+
 SPACES = {
     "matmul": matmul_space,
     "stencil": stencil_space,
     "attention": attention_space,
+    "decode_attention": decode_attention_space,
     "histogram": histogram_space,
     "nbody": nbody_space,
 }
@@ -214,6 +261,15 @@ def plan_feasible(kernel: str, shape: Sequence[int], plan: PlanDict, *,
         vmem = (bq * hd + 2 * 2 * bkv * hd + bq * bkv
                 + 2 * bq * hd) * dtype_bytes
         return vmem <= budget
+    if kernel == "decode_attention":
+        _, h, n_pages, page, hd = shape
+        # the kernel pads the logical page axis, so pages_per_tile never
+        # needs to divide n_pages — clamp and recheck the working set
+        # against the QUERY layout's page size (plans transplant across
+        # page sizes; tile geometry is what carries over)
+        ppt = max(1, min(plan["pages_per_tile"], n_pages))
+        pf = 2 if plan.get("prefetch_depth", 2) >= 2 else 1
+        return _decode_vmem(h, ppt, page, hd, pf, dtype_bytes) <= budget
     if kernel == "stencil":
         rows, cols = shape
         br = min(plan["block_rows"], rows)

@@ -33,6 +33,9 @@ DEFAULT_SHAPES: Dict[str, List[Tuple[int, ...]]] = {
     "matmul": [(256, 256, 256), (384, 128, 512)],
     "stencil": [(128, 256), (256, 512)],
     "attention": [(1, 2, 128, 64), (1, 4, 256, 64)],
+    # (slots, heads, n_pages, page_size, head_dim): two page-size layouts
+    # so the serve scheduler's page-size pick has entries to compare
+    "decode_attention": [(4, 4, 8, 32, 64), (4, 4, 4, 64, 64)],
     "histogram": [(1 << 14, 256), (1 << 16, 256)],
     "nbody": [(256,), (512,)],
 }
@@ -52,6 +55,23 @@ def _stencil_inputs(shape, dtype):
 def _attention_inputs(shape, dtype):
     ks = jax.random.split(jax.random.key(0), 3)
     return tuple(jax.random.normal(kk, shape, dtype) for kk in ks)
+
+
+def _decode_attention_inputs(shape, dtype):
+    """Paged ragged-decode cell: a shared pool with page 0 reserved, a
+    shuffled (deterministic) page table, and staggered per-slot lengths so
+    the sweep times the masked-tail path the serve loop actually runs."""
+    b, h, n_pages, page, hd = shape
+    hkv = max(1, h // 2)                       # exercise GQA grouping
+    pool = 1 + b * n_pages
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (b, h, hd), dtype)
+    k_pages = jax.random.normal(ks[1], (pool, page, hkv, hd), dtype)
+    v_pages = jax.random.normal(ks[2], (pool, page, hkv, hd), dtype)
+    perm = jax.random.permutation(jax.random.key(3), pool - 1) + 1
+    table = perm[:b * n_pages].reshape(b, n_pages).astype(jnp.int32)
+    lengths = ((jnp.arange(b) + 1) * (n_pages * page) // b).astype(jnp.int32)
+    return (q, k_pages, v_pages, table, lengths)
 
 
 def _histogram_inputs(shape, dtype):
@@ -82,6 +102,11 @@ def _call_attention(args, plan):
     return flash_attention(*args, plan=plan)
 
 
+def _call_decode_attention(args, plan):
+    from ..kernels.attention import decode_attention
+    return decode_attention(*args, plan=plan)
+
+
 def _call_histogram(args, plan):
     from ..kernels.histogram import histogram
     return histogram(*args, plan=plan)
@@ -107,6 +132,10 @@ KERNELS: Dict[str, KernelTuneSpec] = {
                               jnp.float32),
     "attention": KernelTuneSpec("attention", _attention_inputs,
                                 _call_attention, jnp.bfloat16),
+    "decode_attention": KernelTuneSpec("decode_attention",
+                                       _decode_attention_inputs,
+                                       _call_decode_attention,
+                                       jnp.bfloat16),
     "histogram": KernelTuneSpec("histogram", _histogram_inputs,
                                 _call_histogram, jnp.int32),
     "nbody": KernelTuneSpec("nbody", _nbody_inputs, _call_nbody,

@@ -203,26 +203,32 @@ def test_serve_prefill_decode_execute_through_dispatch(tmp_path,
                   opts=ExecOptions(mode="run"))
     params = model.init(jax.random.key(0))
 
-    dispatch.reset_stats()
-    tune_cache.reset_lookup_stats()
-    logits = model.prefill(params, {"tokens": jnp.zeros((2, 8), jnp.int32)})
-    assert bool(jnp.all(jnp.isfinite(logits)))
-    prefill_stats = dispatch.stats()
-    assert prefill_stats.get(("matmul", "kernel"), 0) > 0
-    assert prefill_stats.get(("attention", "kernel"), 0) > 0
-    looks = tune_cache.lookup_stats()
-    assert looks["exact"] > 0                    # seeded tuned plan consumed
-    assert sum(looks.values()) > 0
+    try:
+        with dispatch.stats_scope() as stats, \
+                tune_cache.lookup_scope() as looks_fn:
+            logits = model.prefill(params,
+                                   {"tokens": jnp.zeros((2, 8), jnp.int32)})
+            assert bool(jnp.all(jnp.isfinite(logits)))
+            prefill_stats = stats()
+            assert prefill_stats.get(("matmul", "kernel"), 0) > 0
+            assert prefill_stats.get(("attention", "kernel"), 0) > 0
+            looks = looks_fn()
+            assert looks["exact"] > 0            # seeded tuned plan consumed
+            assert sum(looks.values()) > 0
 
-    server = Server(model, params, slots=2, max_len=16)
-    nxt = server.step(np.zeros((2,), np.int32))
-    assert nxt.shape == (2,)
-    decode_stats = dispatch.stats()
-    # decode traced through dispatch too: projections on the kernel route,
-    # the rolling-cache attention on the (mask) reference route
-    assert decode_stats.get(("matmul", "kernel"), 0) > \
-        prefill_stats.get(("matmul", "kernel"), 0)
-    assert decode_stats.get(("attention", "reference"), 0) > 0
+            server = Server(model, params, slots=2, max_len=16)
+            nxt = server.step(np.zeros((2,), np.int32))
+            assert nxt.shape == (2,)
+            decode_stats = stats()
+            # decode traced through dispatch too: projections on the kernel
+            # route, the rolling-cache attention on the (mask) reference
+            # route
+            assert decode_stats.get(("matmul", "kernel"), 0) > \
+                prefill_stats.get(("matmul", "kernel"), 0)
+            assert decode_stats.get(("attention", "reference"), 0) > 0
+    finally:
+        monkeypatch.delenv("REPRO_TUNE_CACHE")
+        tune_cache.preload()             # restore the repo default cache
 
 
 def test_train_step_executes_through_dispatch():
@@ -243,11 +249,11 @@ def test_train_step_executes_through_dispatch():
     params, opt = init_train_state(model, ts, jax.random.key(0))
     batch = {"tokens": jnp.zeros((2, 8), jnp.int32),
              "labels": jnp.ones((2, 8), jnp.int32)}
-    dispatch.reset_stats()
-    new_params, new_opt, metrics = jax.jit(step)(params, opt, batch)
+    with dispatch.stats_scope() as stats_fn:
+        new_params, new_opt, metrics = jax.jit(step)(params, opt, batch)
+        stats = stats_fn()
     assert np.isfinite(float(metrics["loss"]))
     assert np.isfinite(float(metrics["grad_norm"]))
-    stats = dispatch.stats()
     assert stats.get(("matmul", "kernel"), 0) > 0
     assert stats.get(("attention", "kernel"), 0) > 0
     # params actually moved
@@ -265,13 +271,12 @@ def test_auto_policy_routes_reference_on_cpu():
     assert jax.default_backend() == "cpu"
     x = jax.random.normal(KEY, (2, 8, 32), jnp.float32)
     w = jax.random.normal(jax.random.key(1), (32, 16), jnp.float32)
-    dispatch.reset_stats()
-    out = dispatch.matmul(x, w)                  # policy=None -> auto
-    assert dispatch.stats() == {("matmul", "reference"): 1}
+    with dispatch.stats_scope() as stats:
+        out = dispatch.matmul(x, w)              # policy=None -> auto
+        assert stats() == {("matmul", "reference"): 1}
     _assert_close(out, dispatch.matmul(x, w, policy="reference"), "float32")
     # and the env/scope override flips it
-    with dispatch.policy_scope("kernels"):
-        dispatch.reset_stats()
+    with dispatch.policy_scope("kernels"), dispatch.stats_scope() as stats:
         out2 = dispatch.matmul(x, w)
-        assert dispatch.stats() == {("matmul", "kernel"): 1}
+        assert stats() == {("matmul", "kernel"): 1}
     _assert_close(out2, out, "float32")
