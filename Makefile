@@ -1,4 +1,4 @@
-.PHONY: smoke test tune serve bench
+.PHONY: smoke test lint tune serve bench bench-gate train-grad
 
 smoke:        ## fast suite, skips multi-device subprocess tests
 	./scripts/ci.sh smoke
@@ -6,11 +6,20 @@ smoke:        ## fast suite, skips multi-device subprocess tests
 test:         ## full tier-1 suite
 	./scripts/ci.sh full
 
+lint:         ## compileall + compat-policy grep gates
+	./scripts/ci.sh lint
+
 tune:         ## sweep the kernel design space, persist tuned plans
 	./scripts/ci.sh tune
 
 serve:        ## paged-serving smoke + BENCH_serve.json throughput rows
 	./scripts/ci.sh serve
+
+bench-gate:   ## re-run serve bench, fail on decode-throughput regression
+	./scripts/ci.sh bench
+
+train-grad:   ## fused vs reference attention-backward timing rows
+	PYTHONPATH=src python benchmarks/run.py --train-grad
 
 bench:        ## Fig. 7 staged-progression benchmark
 	PYTHONPATH=src python benchmarks/run.py

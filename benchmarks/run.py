@@ -241,6 +241,48 @@ def run_tune(args) -> None:
     print(f"# report: {out}")
 
 
+def run_train_grad(args) -> None:
+    """--train-grad: attention-backward timing rows, fused vs reference.
+
+    Times ``flash_attention_bwd`` on fixed (q, k, v, o, lse, do) cells for
+    both schedules: the dense reference VJP (level T1 — the stash
+    schedule) and the fused recompute Pallas kernels (level T3).  On this
+    CPU host the fused column times the interpret-mode emulator, so the
+    rows order the *lowerings*; re-run on TPU for real trajectories.
+    """
+    from repro.core.plan import Level
+    from repro.kernels.attention import flash_attention, flash_attention_bwd
+
+    rows = []
+    print("shape,dtype,reference_us,fused_us,ratio")
+    for shape in ((1, 2, 128, 64), (1, 4, 256, 64)):
+        for dtype in (jnp.float32, jnp.bfloat16):
+            ks = jax.random.split(jax.random.key(0), 4)
+            q, k, v = (jax.random.normal(kk, shape, dtype) for kk in ks[:3])
+            do = jax.random.normal(ks[3], shape, jnp.float32)
+            o, lse = flash_attention(q, k, v, level=Level.T1_PIPELINED,
+                                     plan=None, return_residuals=True)
+            ref_us = _time(lambda: flash_attention_bwd(
+                q, k, v, o, lse, do, plan={"level": 1}), reps=3)
+            s = shape[2]
+            fused_us = _time(lambda: flash_attention_bwd(
+                q, k, v, o, lse, do,
+                plan={"level": 3, "block_q": min(128, s),
+                      "block_kv": min(128, s)}), reps=3)
+            shape_s = "x".join(map(str, shape))
+            dname = jnp.dtype(dtype).name
+            print(f"{shape_s},{dname},{ref_us:.1f},{fused_us:.1f},"
+                  f"{ref_us / max(fused_us, 1e-9):.3f}", flush=True)
+            rows.append({"shape": list(shape), "dtype": dname,
+                         "reference_us": round(ref_us, 1),
+                         "fused_us": round(fused_us, 1),
+                         "backend": jax.default_backend()})
+    out = Path(args.train_grad_out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps({"rows": rows}, indent=2) + "\n")
+    print(f"# report: {out}")
+
+
 def run_serve(args) -> None:
     """--serve: decode-throughput rows for the serving runtime.
 
@@ -381,6 +423,12 @@ def main(argv=None) -> None:
                     help="tuned-vs-heuristic report JSON path")
     ap.add_argument("--tune-reps", type=int, default=3,
                     help="timing reps per candidate (median taken)")
+    ap.add_argument("--train-grad", action="store_true",
+                    help="attention-backward timing rows "
+                         "(fused recompute kernel vs reference VJP)")
+    ap.add_argument("--train-grad-out",
+                    default="results/BENCH_train_grad.json",
+                    help="backward-timing report JSON path")
     ap.add_argument("--serve", action="store_true",
                     help="serving-runtime decode-throughput rows "
                          "(paged vs dense cache)")
@@ -395,6 +443,8 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
     if args.tune:
         run_tune(args)
+    elif args.train_grad:
+        run_train_grad(args)
     elif args.serve:
         run_serve(args)
     else:

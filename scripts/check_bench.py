@@ -1,0 +1,110 @@
+#!/usr/bin/env python
+"""Benchmark-regression gate: compare a fresh BENCH_serve.json against the
+committed baseline and fail if decode throughput regressed.
+
+Usage (what ``scripts/ci.sh bench`` runs)::
+
+    python benchmarks/run.py --serve --serve-dispatch kernels \
+        --serve-out results/BENCH_serve_current.json
+    python scripts/check_bench.py \
+        --baseline results/BENCH_serve.json \
+        --current  results/BENCH_serve_current.json
+
+A row regresses when ``current < baseline * (1 - tolerance)`` for its
+``(arch, cache)`` key; rows present on only one side are reported but do
+not fail the gate (a new benchmark must be able to land before its
+baseline).  The default tolerance (0.45) absorbs CPU timer noise while
+still failing a 2x slowdown; override per-run with ``--tolerance`` or the
+``REPRO_BENCH_TOL`` env var.
+
+Updating the baseline (after an intentional perf change or a new
+machine): re-run the benchmark writing straight to the baseline path and
+commit the result — see benchmarks/README.md ("Benchmark-regression
+gate").
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from pathlib import Path
+from typing import Dict, List, Tuple
+
+DEFAULT_TOLERANCE = 0.45
+METRIC = "decode_tok_s"
+
+
+def load_metrics(path) -> Dict[Tuple[str, str], float]:
+    """BENCH_serve.json -> {(arch, cache): decode_tok_s}."""
+    data = json.loads(Path(path).read_text())
+    out: Dict[Tuple[str, str], float] = {}
+    for row in data.get("rows", []):
+        val = row.get(METRIC)
+        if val is not None:
+            out[(row.get("arch", "?"), row.get("cache", "?"))] = float(val)
+    return out
+
+
+def compare(baseline: Dict[Tuple[str, str], float],
+            current: Dict[Tuple[str, str], float],
+            tolerance: float = DEFAULT_TOLERANCE) -> Tuple[List[str], int]:
+    """Return (failure lines, rows actually compared).
+
+    Zero failures only passes the gate when at least one row overlapped —
+    a current run whose keys/metric don't line up with the baseline must
+    not pass vacuously.
+    """
+    failures, compared = [], 0
+    for key in sorted(baseline):
+        if key not in current:
+            print(f"note: {key} in baseline but not in current run")
+            continue
+        compared += 1
+        base, cur = baseline[key], current[key]
+        floor = base * (1.0 - tolerance)
+        if cur < floor:
+            failures.append(
+                f"{key[0]}/{key[1]}: {METRIC} {cur:.2f} < floor {floor:.2f} "
+                f"(baseline {base:.2f}, tolerance {tolerance:.0%})")
+    for key in sorted(set(current) - set(baseline)):
+        print(f"note: {key} in current run but not in baseline "
+              f"(commit an updated baseline to start gating it)")
+    return failures, compared
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", default="results/BENCH_serve.json")
+    ap.add_argument("--current", default="results/BENCH_serve_current.json")
+    ap.add_argument("--tolerance", type=float,
+                    default=float(os.environ.get("REPRO_BENCH_TOL",
+                                                 DEFAULT_TOLERANCE)),
+                    help="allowed fractional slowdown before failing "
+                         f"(default {DEFAULT_TOLERANCE}, env "
+                         "REPRO_BENCH_TOL)")
+    args = ap.parse_args(argv)
+    baseline = load_metrics(args.baseline)
+    current = load_metrics(args.current)
+    if not baseline:
+        print(f"error: no {METRIC} rows in baseline {args.baseline}")
+        return 2
+    failures, compared = compare(baseline, current, args.tolerance)
+    for line in failures:
+        print(f"REGRESSION: {line}")
+    if failures:
+        print(f"bench gate FAILED ({len(failures)} regression(s)); if "
+              "intentional, update the baseline per benchmarks/README.md")
+        return 1
+    if compared == 0:
+        print(f"error: no {METRIC} rows in {args.current} overlap the "
+              "baseline — the gate compared nothing (metric or row keys "
+              "changed?)")
+        return 2
+    print(f"bench gate passed: {compared} row(s) within "
+          f"{args.tolerance:.0%} of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

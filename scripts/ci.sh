@@ -3,19 +3,55 @@
 #   scripts/ci.sh smoke   — fast suite (-m "not slow"), incl. the kernel
 #                           dispatch differential tests
 #                           (tests/test_dispatch_differential.py +
-#                           tests/test_paged_decode.py, capped shapes)
+#                           tests/test_paged_decode.py +
+#                           tests/test_flash_backward.py, capped shapes)
+#                           Timing audit (2026-07-30, container single-CPU,
+#                           --durations=15): slowest test 27s < the 30s
+#                           slow-marker threshold, no moves needed; target
+#                           smoke wall-time <= ~8 min.
 #   scripts/ci.sh full    — everything, incl. multi-device subprocess tests
+#   scripts/ci.sh lint    — compileall + compat-policy grep gates (no direct
+#                           hypothesis imports outside the shim, no direct
+#                           jax.make_mesh(..., axis_types=...) outside
+#                           launch/mesh.py)
 #   scripts/ci.sh tune    — design-space sweep; writes results/tuned_plans.json
 #   scripts/ci.sh serve   — paged-serving smoke: interpret-mode ragged
 #                           decode through dispatch.decode_attention for a
 #                           few steps, plus BENCH_serve.json throughput rows
+#   scripts/ci.sh bench   — benchmark-regression gate: re-run the serve
+#                           benchmark and fail if decode throughput dropped
+#                           more than the tolerance vs the committed
+#                           results/BENCH_serve.json (scripts/check_bench.py;
+#                           REPRO_BENCH_TOL overrides)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+lint() {
+  python -m compileall -q src tests benchmarks scripts examples
+  # ROADMAP compat policy, enforced as grep gates:
+  # 1. tests import the seeded shim, never hypothesis directly
+  bad=$(grep -rnE '^[[:space:]]*(import hypothesis|from hypothesis)' \
+        src tests --include='*.py' | grep -v '_hypothesis_compat.py' || true)
+  if [ -n "$bad" ]; then
+    echo "lint: direct hypothesis import (use tests/_hypothesis_compat):"
+    echo "$bad"; exit 1
+  fi
+  # 2. mesh construction goes through repro.launch.mesh.make_mesh
+  bad=$(grep -rn 'axis_types' src --include='*.py' \
+        | grep -v 'launch/mesh.py' || true)
+  if [ -n "$bad" ]; then
+    echo "lint: jax.make_mesh axis_types outside launch/mesh.py" \
+         "(use repro.launch.mesh.make_mesh):"
+    echo "$bad"; exit 1
+  fi
+  echo "lint: OK"
+}
+
 case "${1:-smoke}" in
   smoke) python -m pytest -q -m "not slow" ;;
   full)  python -m pytest -q ;;
+  lint)  lint ;;
   tune)  python benchmarks/run.py --tune ;;
   serve)
     python -m repro.launch.serve --arch gemma-2b --smoke --cache paged \
@@ -23,5 +59,12 @@ case "${1:-smoke}" in
       --max-new 4 --max-len 32 --page-size 8
     python benchmarks/run.py --serve --serve-dispatch kernels
     ;;
-  *) echo "usage: $0 {smoke|full|tune|serve}" >&2; exit 2 ;;
+  bench)
+    python benchmarks/run.py --serve --serve-dispatch kernels \
+      --serve-out results/BENCH_serve_current.json
+    python scripts/check_bench.py \
+      --baseline results/BENCH_serve.json \
+      --current results/BENCH_serve_current.json
+    ;;
+  *) echo "usage: $0 {smoke|full|lint|tune|serve|bench}" >&2; exit 2 ;;
 esac

@@ -1,1 +1,2 @@
-from .ops import decode_attention, flash_attention  # noqa: F401
+from .ops import (decode_attention, flash_attention,  # noqa: F401
+                  flash_attention_bwd)

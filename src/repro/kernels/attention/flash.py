@@ -25,9 +25,13 @@ from jax.experimental.pallas import tpu as pltpu
 from ..common import tpu_compiler_params
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *rest,
                   n_kv: int, block_q: int, block_kv: int, causal: bool,
-                  window: int, scale: float):
+                  window: int, scale: float, with_lse: bool):
+    if with_lse:
+        lse_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        lse_ref, (m_ref, l_ref, acc_ref) = None, rest
     qi = pl.program_id(1)
     kj = pl.program_id(2)
 
@@ -75,13 +79,24 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
     def _flush():
         o_ref[0] = (acc_ref[...]
                     / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+        if with_lse:
+            # per-row logsumexp m + log(l): the only residual the fused
+            # backward needs to recompute P tiles (ISSUE: store lse, not P)
+            lse = m_ref[...] + jnp.log(jnp.maximum(l_ref[...], 1e-30))
+            lse_ref[...] = lse.reshape(1, block_q)
 
 
 def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
                            causal: bool = True, window: int = 0,
                            block_q: int = 512, block_kv: int = 512,
-                           interpret: bool = False) -> jax.Array:
-    """q,k,v: (B, H, S, hd) -> (B, H, S, hd) f32."""
+                           return_residuals: bool = False,
+                           interpret: bool = False):
+    """q,k,v: (B, H, S, hd) -> (B, H, S, hd) f32.
+
+    With ``return_residuals`` also emits the per-row logsumexp ``lse``
+    (B, H, S) f32 — the only forward state the fused recompute backward
+    (``backward.py``) needs beyond q/k/v/o.
+    """
     b, h, s, hd = q.shape
     block_q = min(block_q, s)
     block_kv = min(block_kv, s)
@@ -95,8 +110,14 @@ def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
     kernel = functools.partial(
         _flash_kernel, n_kv=n_kv, block_q=block_q, block_kv=block_kv,
-        causal=causal, window=window, scale=1.0 / math.sqrt(hd))
-    out = pl.pallas_call(
+        causal=causal, window=window, scale=1.0 / math.sqrt(hd),
+        with_lse=return_residuals)
+    out_specs = [pl.BlockSpec((1, block_q, hd), lambda g, i, j: (g, i, 0))]
+    out_shape = [jax.ShapeDtypeStruct((bh, s, hd), jnp.float32)]
+    if return_residuals:
+        out_specs.append(pl.BlockSpec((1, block_q), lambda g, i, j: (g, i)))
+        out_shape.append(jax.ShapeDtypeStruct((bh, s), jnp.float32))
+    outs = pl.pallas_call(
         kernel,
         grid=(bh, n_q, n_kv),
         in_specs=[
@@ -104,8 +125,8 @@ def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
             pl.BlockSpec((1, block_kv, hd), lambda g, i, j: (g, j, 0)),
             pl.BlockSpec((1, block_kv, hd), lambda g, i, j: (g, j, 0)),
         ],
-        out_specs=pl.BlockSpec((1, block_q, hd), lambda g, i, j: (g, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((bh, s, hd), jnp.float32),
+        out_specs=out_specs if return_residuals else out_specs[0],
+        out_shape=out_shape if return_residuals else out_shape[0],
         scratch_shapes=[
             pltpu.VMEM((block_q, 1), jnp.float32),    # running max
             pltpu.VMEM((block_q, 1), jnp.float32),    # running denom
@@ -115,4 +136,7 @@ def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
             ("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(qf, kf, vf)
-    return out.reshape(b, h, s, hd)
+    if return_residuals:
+        out, lse = outs
+        return out.reshape(b, h, s, hd), lse.reshape(b, h, s)
+    return outs.reshape(b, h, s, hd)

@@ -10,28 +10,39 @@ from ...core.plan import Level
 from ...tune.cache import resolve_plan
 from ..common import interpret_default
 from . import ref
+from .backward import flash_attention_bwd_pallas
 from .decode import decode_attention_pallas, heuristic_pages_per_tile
 from .flash import flash_attention_pallas
 
 
-@functools.partial(jax.jit, static_argnames=("causal", "window", "level",
-                                             "block_q", "block_kv",
-                                             "interpret"))
-def _flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
-                     causal: bool, window: int, level: Level,
-                     block_q: int, block_kv: int,
-                     interpret: bool) -> jax.Array:
-    if level in (Level.T0_NAIVE, Level.T1_PIPELINED):
-        return ref.attention_ref(q, k, v, causal=causal, window=window)
-    s = q.shape[2]
+def _fit_blocks(s: int, block_q: int, block_kv: int):
     bq = min(block_q, s)
     bkv = min(block_kv, s)
     while s % bq:
         bq //= 2
     while s % bkv:
         bkv //= 2
+    return bq, bkv
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "level",
+                                             "block_q", "block_kv",
+                                             "return_residuals",
+                                             "interpret"))
+def _flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                     causal: bool, window: int, level: Level,
+                     block_q: int, block_kv: int, return_residuals: bool,
+                     interpret: bool):
+    if level in (Level.T0_NAIVE, Level.T1_PIPELINED):
+        out = ref.attention_ref(q, k, v, causal=causal, window=window)
+        if return_residuals:
+            return out, ref.attention_lse_ref(q, k, causal=causal,
+                                              window=window)
+        return out
+    bq, bkv = _fit_blocks(q.shape[2], block_q, block_kv)
     return flash_attention_pallas(q, k, v, causal=causal, window=window,
                                   block_q=bq, block_kv=bkv,
+                                  return_residuals=return_residuals,
                                   interpret=interpret)
 
 
@@ -40,14 +51,17 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     level: Level = Level.T3_REPLICATED,
                     block_q: int = 512, block_kv: int = 512,
                     plan: Union[str, dict, None] = "heuristic",
-                    interpret: Optional[bool] = None) -> jax.Array:
+                    return_residuals: bool = False,
+                    interpret: Optional[bool] = None):
     """(B, H, S, hd) attention.  T0/T1 materialize (S, S); T2+ run the
     online-softmax Pallas kernel.
 
     ``plan`` selects the tile geometry: ``"heuristic"`` (the ``block_q``/
     ``block_kv`` arguments), ``"tuned"`` (autotuner cache, heuristic on a
     miss), or a tuned kwargs dict (``block_q``/``block_kv``, optional
-    ``level``).
+    ``level``).  ``return_residuals`` additionally returns the per-row
+    logsumexp (B, H, S) f32 — the forward state ``flash_attention_bwd``
+    consumes.
     """
     if interpret is None:
         interpret = interpret_default()
@@ -57,7 +71,59 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         block_kv = kw.get("block_kv", block_kv)
     return _flash_attention(q, k, v, causal=causal, window=window,
                             level=level, block_q=block_q, block_kv=block_kv,
+                            return_residuals=return_residuals,
                             interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "level",
+                                             "block_q", "block_kv",
+                                             "interpret"))
+def _flash_attention_bwd(q, k, v, o, lse, do, *, causal: bool, window: int,
+                         level: Level, block_q: int, block_kv: int,
+                         interpret: bool):
+    if level in (Level.T0_NAIVE, Level.T1_PIPELINED):
+        # "stash" schedule: the dense-score reference VJP (materializes
+        # (S, S) — exactly what it re-derives instead of recomputing
+        # tiles); fine when the whole score matrix fits on chip
+        _, vjp = jax.vjp(
+            lambda q_, k_, v_: ref.attention_ref(q_, k_, v_, causal=causal,
+                                                 window=window), q, k, v)
+        return vjp(do)
+    bq, bkv = _fit_blocks(q.shape[2], block_q, block_kv)
+    dq, dk, dv = flash_attention_bwd_pallas(
+        q, k, v, o, lse, do, causal=causal, window=window, block_q=bq,
+        block_kv=bkv, interpret=interpret)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+def flash_attention_bwd(q: jax.Array, k: jax.Array, v: jax.Array,
+                        o: jax.Array, lse: jax.Array, do: jax.Array, *,
+                        causal: bool = True, window: int = 0,
+                        level: Level = Level.T3_REPLICATED,
+                        block_q: int = 256, block_kv: int = 256,
+                        plan: Union[str, dict, None] = "heuristic",
+                        interpret: Optional[bool] = None):
+    """Gradients (dq, dk, dv) of ``flash_attention`` from the saved
+    residuals: ``o``/``do`` (B, H, S, hd) f32 and ``lse`` (B, H, S) f32.
+
+    T0/T1 run the dense reference VJP (the "stash" schedule — the (S, S)
+    matrix is re-derived wholesale); T2+ run the fused recompute Pallas
+    kernels (``backward.py``), which never materialize (S, S).  ``plan``
+    selects the backward tile geometry under kernel key
+    ``flash_attention_bwd`` — the tuner's per-shape level pick IS the
+    recompute-vs-stash threshold.  Gradients come back in the primal
+    dtypes (custom-VJP contract).
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    level, kw = resolve_plan("flash_attention_bwd", q.shape, q.dtype, level,
+                             plan)
+    if kw:
+        block_q = kw.get("block_q", block_q)
+        block_kv = kw.get("block_kv", block_kv)
+    return _flash_attention_bwd(q, k, v, o, lse, do, causal=causal,
+                                window=window, level=level, block_q=block_q,
+                                block_kv=block_kv, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("window", "level",

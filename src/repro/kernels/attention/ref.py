@@ -38,10 +38,12 @@ def decode_attention_ref(q: jax.Array, k_pages: jax.Array,
                      out.astype(jnp.float32), 0.0)
 
 
-def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
-                  causal: bool = True, window: int = 0) -> jax.Array:
-    """q,k,v: (B, H, S, hd).  f32 softmax; returns (B, H, S, hd) f32."""
-    b, h, s, hd = q.shape
+def _masked_scores(q: jax.Array, k: jax.Array, causal: bool,
+                   window: int) -> jax.Array:
+    """Dense (B, H, S, S) f32 scaled scores with the causal/window mask
+    applied — the one definition of the mask semantics both the forward
+    oracle and the lse residual derive from."""
+    s, hd = q.shape[2], q.shape[3]
     scale = 1.0 / math.sqrt(hd)
     scores = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * scale
     qpos = jnp.arange(s)[:, None]
@@ -51,7 +53,23 @@ def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
         mask &= kpos <= qpos
     if window > 0:
         mask &= kpos > qpos - window
-    scores = jnp.where(mask[None, None], scores, -1e30)
-    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.where(mask[None, None], scores, -1e30)
+
+
+def attention_lse_ref(q: jax.Array, k: jax.Array, *, causal: bool = True,
+                      window: int = 0) -> jax.Array:
+    """Per-row logsumexp of the masked scaled scores: (B, H, S) f32.
+
+    The residual the fused backward consumes, computed the dense way —
+    used only when the forward itself ran a T0/T1 reference lowering
+    (which already materialized (S, S))."""
+    return jax.scipy.special.logsumexp(
+        _masked_scores(q, k, causal, window), axis=-1)
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int = 0) -> jax.Array:
+    """q,k,v: (B, H, S, hd).  f32 softmax; returns (B, H, S, hd) f32."""
+    probs = jax.nn.softmax(_masked_scores(q, k, causal, window), axis=-1)
     return jnp.einsum("bhqk,bhkd->bhqd",
                       probs.astype(v.dtype), v).astype(jnp.float32)

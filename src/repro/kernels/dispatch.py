@@ -21,11 +21,17 @@ Policy (the ``DispatchPolicy`` knob threaded through ``configs/base.py``):
                 ``REPRO_DISPATCH`` env var can override "auto" globally
 
 Eligibility is decided at trace time (shapes are static), so the decision
-costs nothing at run time.  Kernel paths carry a ``jax.custom_vjp`` whose
-backward is the reference contraction — training can route its forward
-through the kernels today; fused Pallas backwards are future work (see
-ROADMAP).  Per-route counters (``stats()``) let regression tests prove the
-serve/train graphs actually flow through dispatch.
+costs nothing at run time.  Matmul kernel paths carry a ``jax.custom_vjp``
+whose backward is the reference contraction; the attention kernel path
+pairs the flash forward (which emits per-row logsumexp residuals) with the
+fused recompute Pallas backward (``attention/backward.py``) so a
+``dispatch="kernels"`` train step never materializes the (S, S) score
+matrix in either direction — the tuned ``flash_attention_bwd`` plan can
+still route small shapes to the dense reference VJP (the stash schedule)
+under "auto".  Per-route counters (``stats()``) let regression tests prove
+the serve/train graphs actually flow through dispatch, and the
+``forbid_dense_scores()`` scope turns any dense-score lowering into a
+trace-time assertion for those tests.
 """
 from __future__ import annotations
 
@@ -144,6 +150,34 @@ def _count(op: str, route: str) -> None:
     _stats[(op, route)] += 1
 
 
+# ------------------------------------------------- dense-score tripwire
+# Trace-time shape-assertion hook for the reference attention lowerings:
+# inside a ``forbid_dense_scores()`` scope, any path that would materialize
+# a dense (Sq, Skv) score tensor raises instead of tracing.  Tests wrap a
+# ``dispatch="kernels"`` train step in it to PROVE the fused routes carried
+# the whole graph — counters say which route ran, the tripwire says no
+# other route could have.
+_forbid_dense = False
+
+
+@contextlib.contextmanager
+def forbid_dense_scores():
+    global _forbid_dense
+    prev = _forbid_dense
+    _forbid_dense = True
+    try:
+        yield
+    finally:
+        _forbid_dense = prev
+
+
+def _assert_no_dense_scores(where: str, sq: int, skv: int) -> None:
+    if _forbid_dense:
+        raise AssertionError(
+            f"dense ({sq}, {skv}) attention scores would be materialized "
+            f"in {where} inside a forbid_dense_scores() scope")
+
+
 # ------------------------------------------------------------------ matmul
 def _matmul_eligible(x: jax.Array, w: jax.Array) -> bool:
     if x.ndim < 2 or w.ndim < 2:
@@ -260,6 +294,7 @@ def _attention_reference(q, k, v, *, causal, window, softcap, mask,
     blockwise variant below), so ``models/layers.py`` holds no attention
     contraction of its own.
     """
+    _assert_no_dense_scores("_attention_reference", q.shape[1], k.shape[1])
     scale = 1.0 / math.sqrt(q.shape[-1])
     scores = jnp.einsum("bqhk,bshk->bhqs", q, k).astype(accum_dtype) * scale
     if softcap > 0:
@@ -363,24 +398,47 @@ def _flash_ref(q, k, v, causal, window):
     return attention_ref(q, k, v, causal=causal, window=window)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
-def _attn_kernel(causal, window, q, k, v):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _attn_kernel(causal, window, mode, q, k, v):
     """(B, H, S, hd) flash attention with tuned-plan lookup; f32 output.
 
-    Backward = vjp of the naive reference (materializes (S, S) — a fused
-    Pallas backward is ROADMAP future work); forward residuals are just
-    (q, k, v), so remat policies see the same tensors either route."""
+    Forward/backward are a paired schedule: the forward emits per-row
+    logsumexp residuals, the backward recomputes P tiles from them in the
+    fused Pallas kernels (``attention/backward.py``) — neither direction
+    materializes (S, S).  The tuned ``flash_attention_bwd`` plan may route
+    a shape to the dense reference VJP instead (the stash schedule); an
+    explicit ``mode="kernels"`` overrides that, forcing the fused
+    backward, exactly as the forward policy promises the differential
+    tests."""
     from .attention.ops import flash_attention
     return flash_attention(q, k, v, causal=causal, window=window,
                            plan="tuned")
 
 
-def _attn_kernel_fwd(causal, window, q, k, v):
-    return _attn_kernel(causal, window, q, k, v), (q, k, v)
+def _attn_kernel_fwd(causal, window, mode, q, k, v):
+    from .attention.ops import flash_attention
+    o, lse = flash_attention(q, k, v, causal=causal, window=window,
+                             plan="tuned", return_residuals=True)
+    return o, (q, k, v, o, lse)
 
 
-def _attn_kernel_bwd(causal, window, res, g):
-    q, k, v = res
+def _attn_kernel_bwd(causal, window, mode, res, g):
+    q, k, v, o, lse = res
+    from ..core.plan import Level
+    from ..tune.cache import resolve_plan
+    level, kw = resolve_plan("flash_attention_bwd", q.shape, q.dtype,
+                             Level.T3_REPLICATED, "tuned")
+    use_fused = not (level in (Level.T0_NAIVE, Level.T1_PIPELINED)
+                     and mode != "kernels")
+    _count("attention_bwd", "kernel" if use_fused else "reference")
+    if use_fused:
+        from .attention.ops import flash_attention_bwd
+        bkw = {k_: v_ for k_, v_ in (kw or {}).items()
+               if k_ in ("block_q", "block_kv")}
+        return flash_attention_bwd(q, k, v, o, lse, g, causal=causal,
+                                   window=window, plan=None, **bkw)
+    _assert_no_dense_scores("_attn_kernel_bwd reference VJP",
+                            q.shape[2], k.shape[2])
     _, vjp = jax.vjp(
         lambda q_, k_, v_: _flash_ref(q_, k_, v_, causal, window), q, k, v)
     return vjp(g)
@@ -418,7 +476,7 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     _count("attention", "kernel" if use_kernel else "reference")
     if use_kernel:
         qt, kt, vt = (t.transpose(0, 2, 1, 3) for t in (q, k, v))
-        out = _attn_kernel(bool(causal), int(window), qt, kt, vt)
+        out = _attn_kernel(bool(causal), int(window), mode, qt, kt, vt)
         return out.transpose(0, 2, 1, 3).astype(out_dtype)
     # the blockwise lowering tiles a single self-attention length; any
     # cross-length (decode) call falls back to the naive lowering

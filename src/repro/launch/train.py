@@ -126,6 +126,8 @@ def main(argv=None):
                   f"gnorm {float(metrics['grad_norm']):.3f}  "
                   f"lr {float(metrics['lr']):.2e}")
 
+    from ..kernels import dispatch
+    dispatch.reset_stats()
     t0 = time.time()
     (params, opt), final = sup.run((params, opt), one_step, args.steps,
                                    on_metrics=on_metrics)
@@ -134,6 +136,16 @@ def main(argv=None):
     print(f"done: {final} steps in {dt:.1f}s ({tok_s:,.0f} tok/s); "
           f"loss {losses[0]:.3f} -> {np.mean(losses[-5:]):.3f}; "
           f"restarts={sup.restarts} stragglers={len(sup.stragglers.flags)}")
+    # route probe: counters are trace-time, so one jit compile of the step
+    # is enough to prove which lowerings the train graph flowed through
+    routes = dispatch.stats()
+    print("[dispatch] routes: "
+          + (", ".join(f"{op}/{r}={n}" for (op, r), n in sorted(
+              routes.items())) or "none"))
+    if args.dispatch == "kernels" and routes.get(("attention", "kernel"), 0):
+        assert routes.get(("attention_bwd", "kernel"), 0) > 0, (
+            "dispatch=kernels train step did not route the attention "
+            f"backward through the fused Pallas kernel: {routes}")
     return losses
 
 

@@ -125,6 +125,42 @@ def attention_space(shape: Sequence[int], dtype_bytes: int = 2, *,
     return _dedup(cands, max_candidates)
 
 
+def _attn_bwd_vmem(bq: int, bkv: int, hd: int, dtype_bytes: int) -> int:
+    """Working set of the fused backward's larger (dKV) kernel: K/V tiles
+    resident, Q streamed double-buffered (§4.2) in the input dtype; dO
+    streams, the f32 dK/dV accumulators, the recomputed P and dS tiles,
+    and the lse/di row carries all in f32."""
+    return ((2 * bkv * hd + 2 * 2 * bq * hd) * dtype_bytes
+            + (2 * 2 * bq * hd + 2 * bkv * hd + 2 * bq * bkv + 2 * bq) * 4)
+
+
+def flash_attention_bwd_space(shape: Sequence[int], dtype_bytes: int = 2, *,
+                              hw: HardwareSpec = TPU_V5E,
+                              max_candidates: int = MAX_CANDIDATES
+                              ) -> List[PlanDict]:
+    """shape = (batch, heads, seq, head_dim) — same key as the forward.
+
+    The backward design space is the recompute schedule: ``block_q`` /
+    ``block_kv`` tile geometry for the dQ/dKV kernels (level T3), or level
+    T1 — the dense reference VJP, i.e. the "stash the whole score matrix"
+    schedule that wins when (S, S) is small enough to re-derive wholesale.
+    The tuner's per-shape level pick IS the recompute-vs-stash threshold.
+    """
+    _, _, s, hd = shape
+    budget = TilePlanner(hw).budget
+    cands: List[PlanDict] = [
+        {"level": int(Level.T3_REPLICATED), "block_q": min(256, s),
+         "block_kv": min(256, s)},
+        {"level": int(Level.T1_PIPELINED)},
+    ]
+    for bq in _divisors(s, (256, 128, 64, 32)):
+        for bkv in _divisors(s, (256, 128, 64, 32)):
+            if _attn_bwd_vmem(bq, bkv, hd, dtype_bytes) <= budget:
+                cands.append({"level": int(Level.T3_REPLICATED),
+                              "block_q": bq, "block_kv": bkv})
+    return _dedup(cands, max_candidates)
+
+
 def histogram_space(shape: Sequence[int], dtype_bytes: int = 4, *,
                     hw: HardwareSpec = TPU_V5E,
                     max_candidates: int = MAX_CANDIDATES) -> List[PlanDict]:
@@ -217,6 +253,7 @@ SPACES = {
     "matmul": matmul_space,
     "stencil": stencil_space,
     "attention": attention_space,
+    "flash_attention_bwd": flash_attention_bwd_space,
     "decode_attention": decode_attention_space,
     "histogram": histogram_space,
     "nbody": nbody_space,
@@ -261,6 +298,11 @@ def plan_feasible(kernel: str, shape: Sequence[int], plan: PlanDict, *,
         vmem = (bq * hd + 2 * 2 * bkv * hd + bq * bkv
                 + 2 * bq * hd) * dtype_bytes
         return vmem <= budget
+    if kernel == "flash_attention_bwd":
+        _, _, s, hd = shape
+        bq = min(plan["block_q"], s)
+        bkv = min(plan["block_kv"], s)
+        return _attn_bwd_vmem(bq, bkv, hd, dtype_bytes) <= budget
     if kernel == "decode_attention":
         _, h, n_pages, page, hd = shape
         # the kernel pads the logical page axis, so pages_per_tile never

@@ -33,6 +33,7 @@ DEFAULT_SHAPES: Dict[str, List[Tuple[int, ...]]] = {
     "matmul": [(256, 256, 256), (384, 128, 512)],
     "stencil": [(128, 256), (256, 512)],
     "attention": [(1, 2, 128, 64), (1, 4, 256, 64)],
+    "flash_attention_bwd": [(1, 2, 128, 64), (1, 4, 256, 64)],
     # (slots, heads, n_pages, page_size, head_dim): two page-size layouts
     # so the serve scheduler's page-size pick has entries to compare
     "decode_attention": [(4, 4, 8, 32, 64), (4, 4, 4, 64, 64)],
@@ -55,6 +56,20 @@ def _stencil_inputs(shape, dtype):
 def _attention_inputs(shape, dtype):
     ks = jax.random.split(jax.random.key(0), 3)
     return tuple(jax.random.normal(kk, shape, dtype) for kk in ks)
+
+
+def _flash_bwd_inputs(shape, dtype):
+    """Backward cell: run the (reference-level) forward once to build the
+    (o, lse) residuals, then time the backward candidates on a fixed
+    cotangent — the sweep never times the forward."""
+    from ..kernels.attention import flash_attention
+    from ..core.plan import Level
+    ks = jax.random.split(jax.random.key(0), 4)
+    q, k, v = (jax.random.normal(kk, shape, dtype) for kk in ks[:3])
+    o, lse = flash_attention(q, k, v, level=Level.T1_PIPELINED, plan=None,
+                             return_residuals=True)
+    do = jax.random.normal(ks[3], shape, jnp.float32)
+    return (q, k, v, o, lse, do)
 
 
 def _decode_attention_inputs(shape, dtype):
@@ -102,6 +117,11 @@ def _call_attention(args, plan):
     return flash_attention(*args, plan=plan)
 
 
+def _call_flash_bwd(args, plan):
+    from ..kernels.attention import flash_attention_bwd
+    return flash_attention_bwd(*args, plan=plan)
+
+
 def _call_decode_attention(args, plan):
     from ..kernels.attention import decode_attention
     return decode_attention(*args, plan=plan)
@@ -132,6 +152,9 @@ KERNELS: Dict[str, KernelTuneSpec] = {
                               jnp.float32),
     "attention": KernelTuneSpec("attention", _attention_inputs,
                                 _call_attention, jnp.bfloat16),
+    "flash_attention_bwd": KernelTuneSpec("flash_attention_bwd",
+                                          _flash_bwd_inputs,
+                                          _call_flash_bwd, jnp.bfloat16),
     "decode_attention": KernelTuneSpec("decode_attention",
                                        _decode_attention_inputs,
                                        _call_decode_attention,

@@ -1,0 +1,96 @@
+"""The benchmark-regression gate (scripts/check_bench.py) must pass on
+like-for-like numbers and FAIL on an injected 2x slowdown — the negative
+test the CI gate's acceptance criteria demand."""
+import importlib.util
+import json
+from pathlib import Path
+
+import pytest
+
+_SPEC = importlib.util.spec_from_file_location(
+    "check_bench",
+    Path(__file__).resolve().parents[1] / "scripts" / "check_bench.py")
+check_bench = importlib.util.module_from_spec(_SPEC)
+_SPEC.loader.exec_module(check_bench)
+
+
+def _report(decode_paged, decode_dense):
+    return {"rows": [
+        {"arch": "gemma-2b-smoke", "cache": "paged",
+         "decode_tok_s": decode_paged, "prefill_tok_s": 100.0},
+        {"arch": "gemma-2b-smoke", "cache": "dense",
+         "decode_tok_s": decode_dense, "prefill_tok_s": None},
+    ]}
+
+
+def _write(tmp_path, name, payload):
+    p = tmp_path / name
+    p.write_text(json.dumps(payload))
+    return p
+
+
+def test_gate_passes_on_identical_numbers(tmp_path):
+    base = _write(tmp_path, "base.json", _report(100.0, 40.0))
+    cur = _write(tmp_path, "cur.json", _report(100.0, 40.0))
+    assert check_bench.main(["--baseline", str(base),
+                             "--current", str(cur)]) == 0
+
+
+def test_gate_passes_within_tolerance(tmp_path):
+    base = _write(tmp_path, "base.json", _report(100.0, 40.0))
+    cur = _write(tmp_path, "cur.json", _report(70.0, 30.0))   # -30%, -25%
+    assert check_bench.main(["--baseline", str(base),
+                             "--current", str(cur)]) == 0
+
+
+def test_gate_fails_on_injected_2x_slowdown(tmp_path):
+    base = _write(tmp_path, "base.json", _report(100.0, 40.0))
+    cur = _write(tmp_path, "cur.json", _report(50.0, 40.0))   # 2x slower
+    assert check_bench.main(["--baseline", str(base),
+                             "--current", str(cur)]) == 1
+    failures, compared = check_bench.compare(check_bench.load_metrics(base),
+                                             check_bench.load_metrics(cur))
+    assert len(failures) == 1 and "paged" in failures[0]
+    assert compared == 2
+
+
+def test_gate_ignores_rows_missing_from_either_side(tmp_path):
+    base = _write(tmp_path, "base.json", _report(100.0, 40.0))
+    cur = _write(tmp_path, "cur.json", {"rows": [
+        {"arch": "gemma-2b-smoke", "cache": "paged",
+         "decode_tok_s": 100.0}]})
+    # dense row absent from current, new arch absent from baseline: noted,
+    # not failed — a new benchmark must be able to land before its baseline
+    assert check_bench.main(["--baseline", str(base),
+                             "--current", str(cur)]) == 0
+
+
+def test_gate_never_passes_vacuously(tmp_path):
+    """Zero overlap between baseline and current (renamed metric, changed
+    row keys, empty run) is an error, not a pass — the gate must have
+    compared at least one row to claim success."""
+    base = _write(tmp_path, "base.json", _report(100.0, 40.0))
+    empty = _write(tmp_path, "empty.json", {"rows": []})
+    assert check_bench.main(["--baseline", str(base),
+                             "--current", str(empty)]) == 2
+    disjoint = _write(tmp_path, "disjoint.json", {"rows": [
+        {"arch": "other-arch", "cache": "paged", "decode_tok_s": 1.0}]})
+    assert check_bench.main(["--baseline", str(base),
+                             "--current", str(disjoint)]) == 2
+
+
+def test_gate_errors_on_empty_baseline(tmp_path):
+    base = _write(tmp_path, "base.json", {"rows": []})
+    cur = _write(tmp_path, "cur.json", _report(1.0, 1.0))
+    assert check_bench.main(["--baseline", str(base),
+                             "--current", str(cur)]) == 2
+
+
+def test_tolerance_is_configurable(tmp_path):
+    base = _write(tmp_path, "base.json", _report(100.0, 40.0))
+    cur = _write(tmp_path, "cur.json", _report(50.0, 40.0))
+    assert check_bench.main(["--baseline", str(base), "--current", str(cur),
+                             "--tolerance", "0.6"]) == 0
+    with pytest.raises(SystemExit):
+        check_bench.main(["--baseline", str(base), "--current", str(cur),
+                          "--tolerance", "not-a-float"])
