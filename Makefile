@@ -1,4 +1,4 @@
-.PHONY: smoke test lint tune serve bench bench-gate train-grad
+.PHONY: smoke test lint tune serve bench bench-gate train-grad prefill
 
 smoke:        ## fast suite, skips multi-device subprocess tests
 	./scripts/ci.sh smoke
@@ -20,6 +20,9 @@ bench-gate:   ## re-run serve bench, fail on decode-throughput regression
 
 train-grad:   ## fused vs reference attention-backward timing rows
 	PYTHONPATH=src python benchmarks/run.py --train-grad
+
+prefill:      ## ragged prefill-attention kernel vs reference timing rows
+	PYTHONPATH=src python benchmarks/run.py --prefill
 
 bench:        ## Fig. 7 staged-progression benchmark
 	PYTHONPATH=src python benchmarks/run.py

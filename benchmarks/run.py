@@ -283,6 +283,42 @@ def run_train_grad(args) -> None:
     print(f"# report: {out}")
 
 
+def run_prefill(args) -> None:
+    """--prefill: ragged multi-token prefill attention timing rows.
+
+    Times ``prefill_attention`` on fixed paged-KV cells for both
+    lowerings: the gather-and-mask reference (level T1) and the Pallas
+    ragged kernel (level T3, heuristic KV-tile geometry).  On this CPU
+    host the kernel column times the interpret-mode emulator, so the rows
+    order the *lowerings*; re-run on TPU for real trajectories.
+    """
+    from repro.kernels import registry
+    from repro.kernels.attention import prefill_attention
+
+    spec = registry.get("prefill_attention")
+    rows = []
+    print("shape,dtype,reference_us,kernel_us,ratio")
+    for shape in spec.tune.default_shapes:
+        for dtype in (jnp.float32, jnp.bfloat16):
+            args_ = spec.tune.make_inputs(tuple(shape), dtype)
+            ref_us = _time(lambda: prefill_attention(
+                *args_, plan={"level": 1}), reps=3)
+            kern_us = _time(lambda: prefill_attention(
+                *args_, plan={"level": 3}), reps=3)
+            shape_s = "x".join(map(str, shape))
+            dname = jnp.dtype(dtype).name
+            print(f"{shape_s},{dname},{ref_us:.1f},{kern_us:.1f},"
+                  f"{ref_us / max(kern_us, 1e-9):.3f}", flush=True)
+            rows.append({"shape": list(shape), "dtype": dname,
+                         "reference_us": round(ref_us, 1),
+                         "kernel_us": round(kern_us, 1),
+                         "backend": jax.default_backend()})
+    out = Path(args.prefill_out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps({"rows": rows}, indent=2) + "\n")
+    print(f"# report: {out}")
+
+
 def run_serve(args) -> None:
     """--serve: decode-throughput rows for the serving runtime.
 
@@ -429,6 +465,11 @@ def main(argv=None) -> None:
     ap.add_argument("--train-grad-out",
                     default="results/BENCH_train_grad.json",
                     help="backward-timing report JSON path")
+    ap.add_argument("--prefill", action="store_true",
+                    help="ragged prefill-attention timing rows "
+                         "(Pallas kernel vs gather-and-mask reference)")
+    ap.add_argument("--prefill-out", default="results/BENCH_prefill.json",
+                    help="prefill-timing report JSON path")
     ap.add_argument("--serve", action="store_true",
                     help="serving-runtime decode-throughput rows "
                          "(paged vs dense cache)")
@@ -445,6 +486,8 @@ def main(argv=None) -> None:
         run_tune(args)
     elif args.train_grad:
         run_train_grad(args)
+    elif args.prefill:
+        run_prefill(args)
     elif args.serve:
         run_serve(args)
     else:

@@ -13,11 +13,14 @@
 #   scripts/ci.sh lint    — compileall + compat-policy grep gates (no direct
 #                           hypothesis imports outside the shim, no direct
 #                           jax.make_mesh(..., axis_types=...) outside
-#                           launch/mesh.py)
+#                           launch/mesh.py, no direct kernel-family imports
+#                           from models/ or launch/ — everything routes
+#                           through kernels.dispatch / kernels.registry)
 #   scripts/ci.sh tune    — design-space sweep; writes results/tuned_plans.json
 #   scripts/ci.sh serve   — paged-serving smoke: interpret-mode ragged
-#                           decode through dispatch.decode_attention for a
-#                           few steps, plus BENCH_serve.json throughput rows
+#                           prefill + decode through dispatch for a few
+#                           steps, plus BENCH_serve.json throughput rows
+#                           and BENCH_prefill.json kernel-vs-reference rows
 #   scripts/ci.sh bench   — benchmark-regression gate: re-run the serve
 #                           benchmark and fail if decode throughput dropped
 #                           more than the tolerance vs the committed
@@ -45,6 +48,18 @@ lint() {
          "(use repro.launch.mesh.make_mesh):"
     echo "$bad"; exit 1
   fi
+  # 3. models/ and launch/ never import a kernel family directly — every
+  #    hot contraction routes through kernels.dispatch (thin facades) /
+  #    kernels.registry (the one generic path), so tuned plans, route
+  #    counters, and policy knobs can't be silently bypassed
+  bad=$(grep -rnE \
+        'kernels(\.| +import +)(matmul|attention|stencil|histogram|nbody|wkv)' \
+        src/repro/models src/repro/launch --include='*.py' || true)
+  if [ -n "$bad" ]; then
+    echo "lint: direct kernel-family import from models/ or launch/" \
+         "(route through repro.kernels.dispatch):"
+    echo "$bad"; exit 1
+  fi
   echo "lint: OK"
 }
 
@@ -58,6 +73,7 @@ case "${1:-smoke}" in
       --dispatch kernels --slots 2 --requests 3 --prompt-len 6 \
       --max-new 4 --max-len 32 --page-size 8
     python benchmarks/run.py --serve --serve-dispatch kernels
+    python benchmarks/run.py --prefill
     ;;
   bench)
     python benchmarks/run.py --serve --serve-dispatch kernels \

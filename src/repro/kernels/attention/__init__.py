@@ -1,2 +1,2 @@
 from .ops import (decode_attention, flash_attention,  # noqa: F401
-                  flash_attention_bwd)
+                  flash_attention_bwd, prefill_attention)

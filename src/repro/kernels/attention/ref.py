@@ -38,6 +38,38 @@ def decode_attention_ref(q: jax.Array, k_pages: jax.Array,
                      out.astype(jnp.float32), 0.0)
 
 
+def prefill_attention_ref(q: jax.Array, k_pages: jax.Array,
+                          v_pages: jax.Array, table: jax.Array,
+                          starts: jax.Array, *,
+                          window: int = 0) -> jax.Array:
+    """Oracle for paged ragged multi-token prefill: gather pages to a
+    dense (B, S, Hkv, hd) view, mask causally against each chunk's own
+    positions (``starts[b] + [0, C)``; the chunk's own keys are already in
+    the pool) and by the sliding window, f32 softmax.
+    q (B, C, H, hd) -> (B, C, H, hd) f32."""
+    b, c, h, hd = q.shape
+    _, page, hkv, _ = k_pages.shape
+    grp = h // hkv
+    k = k_pages[table].reshape(b, -1, hkv, hd)       # (B, n_pages*page, ...)
+    v = v_pages[table].reshape(b, -1, hkv, hd)
+    if grp > 1:                                      # GQA group broadcast
+        k = jnp.broadcast_to(k[:, :, :, None, :],
+                             k.shape[:3] + (grp, hd)).reshape(b, -1, h, hd)
+        v = jnp.broadcast_to(v[:, :, :, None, :],
+                             v.shape[:3] + (grp, hd)).reshape(b, -1, h, hd)
+    scores = jnp.einsum("bqhd,bshd->bhqs", q, k).astype(jnp.float32) \
+        / math.sqrt(hd)
+    qpos = starts[:, None] + jnp.arange(c)[None, :]          # (B, C)
+    kpos = jnp.arange(k.shape[1])                            # (S,)
+    mask = kpos[None, None, :] <= qpos[:, :, None]           # (B, C, S)
+    if window > 0:
+        mask &= kpos[None, None, :] > qpos[:, :, None] - window
+    scores = jnp.where(mask[:, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqs,bshd->bqhd", probs.astype(v.dtype), v)
+    return out.astype(jnp.float32)
+
+
 def _masked_scores(q: jax.Array, k: jax.Array, causal: bool,
                    window: int) -> jax.Array:
     """Dense (B, H, S, S) f32 scaled scores with the causal/window mask

@@ -5,19 +5,32 @@ runs through the transformed kernels (FBLAS's module-routing argument): a
 tuned Pallas matmul buys nothing while the surrounding projections still
 lower through raw einsums.  This module is the routing layer that closes
 that gap — ``dispatch.matmul`` / ``dispatch.attention`` /
-``dispatch.grouped_matmul`` consult the tuned-plan cache (exact key first,
-then nearest-shape, see ``repro.tune.cache``) and route each call to the
-Pallas kernel or to the pure-jnp reference lowering based on policy and
-shape/dtype/backend eligibility.
+``dispatch.grouped_matmul`` / ``dispatch.decode_attention`` /
+``dispatch.prefill_attention`` route each call to the Pallas kernel or to
+the pure-jnp reference lowering based on policy and shape/dtype/backend
+eligibility.
+
+Since the registry redesign this module is a *thin facade*: every op is a
+declarative :class:`repro.kernels.registry.OpSpec` (reference lowering,
+kernel lowering, eligibility predicate, tuned-plan key schema, optional
+custom-VJP pair, tune-space hookup — one registration in the op family's
+``ops.py``), and every facade below collapses its policy argument and
+delegates to ``registry.call`` — the ONE generic code path holding the
+exact → nearest → heuristic tuned-plan lookup, the level gate, and the
+``(op, route)`` counters that used to be five hand-wired copies.
 
 Policy (the ``DispatchPolicy`` knob threaded through ``configs/base.py``):
 
   "kernels"   — force the Pallas path whenever structurally possible
-                (interpret mode on CPU); used by the differential tests
+                (interpret mode on CPU); used by the differential tests.
+                A tuned plan that says "the reference lowering wins at
+                this shape" (level <= T1) is overridden: the Pallas
+                lowering runs with the tuned tile geometry.
   "reference" — force the einsum reference lowering; bitwise-identical to
                 the pre-dispatch model code
   "auto"      — kernels on TPU when eligible, reference otherwise (CPU HLO
-                interpretation of a Pallas kernel is never a win); the
+                interpretation of a Pallas kernel is never a win); a tuned
+                level <= T1 plan is honored as the reference route; the
                 ``REPRO_DISPATCH`` env var can override "auto" globally
 
 Eligibility is decided at trace time (shapes are static), so the decision
@@ -26,27 +39,26 @@ whose backward is the reference contraction; the attention kernel path
 pairs the flash forward (which emits per-row logsumexp residuals) with the
 fused recompute Pallas backward (``attention/backward.py``) so a
 ``dispatch="kernels"`` train step never materializes the (S, S) score
-matrix in either direction — the tuned ``flash_attention_bwd`` plan can
-still route small shapes to the dense reference VJP (the stash schedule)
-under "auto".  Per-route counters (``stats()``) let regression tests prove
-the serve/train graphs actually flow through dispatch, and the
-``forbid_dense_scores()`` scope turns any dense-score lowering into a
-trace-time assertion for those tests.
+matrix in either direction.  Per-route counters (``stats()``, plus
+``plan_source_stats()`` tagging each decision with the tuned-plan lookup
+route that produced it) let regression tests prove the serve/train graphs
+actually flow through dispatch, and the ``forbid_dense_scores()`` scope
+turns any dense-score lowering into a trace-time assertion for those
+tests.
 """
 from __future__ import annotations
 
 import contextlib
 import dataclasses
-import functools
-import math
 import os
-from collections import Counter
-from typing import Any, Dict, Optional, Tuple, Union
+from typing import Any, Optional, Union
 
 import jax
 import jax.numpy as jnp
 
-from ..core.scaling import TilePlanner
+from . import registry
+from .registry import (forbid_dense_scores, plan_source_stats,  # noqa: F401
+                       reset_stats, stats, stats_scope)
 
 MODES = ("kernels", "reference", "auto")
 
@@ -115,111 +127,24 @@ def _kernels_by_default() -> bool:
     return jax.default_backend() == "tpu"
 
 
-# ------------------------------------------------------------------- stats
-# (op, route) counters, incremented at trace time.  Regression tests reset
-# them, run a serve/train step, and assert the kernel routes were taken —
-# so a refactor cannot silently drop the models back to raw einsums.
-_stats: Counter = Counter()
+def _call(name: str, *args, statics=None, policy: PolicyLike = None):
+    """Collapse the policy knob and hand off to the registry's one path."""
+    mode = resolve_mode(policy)
+    allow = mode != "reference" and (mode == "kernels"
+                                     or _kernels_by_default())
+    return registry.call(name, *args, statics=statics, mode=mode,
+                         allow_kernels=allow)
 
 
-def reset_stats() -> None:
-    _stats.clear()
+def causal_mask(qpos: jax.Array, kpos: jax.Array, window: int,
+                causal: bool = True) -> jax.Array:
+    """Re-export of the attention family's branch-free causal/window mask
+    (condition flattening, §2.7)."""
+    from .attention.ops import causal_mask as _causal_mask
+    return _causal_mask(qpos, kpos, window, causal)
 
 
-def stats() -> Dict[Tuple[str, str], int]:
-    return dict(_stats)
-
-
-@contextlib.contextmanager
-def stats_scope():
-    """Isolated counter scope: zeroed on entry, restored on exit.
-
-    Tests and probes read routes via the yielded ``stats`` accessor without
-    leaking counts into (or absorbing counts from) other test modules.
-    """
-    saved = Counter(_stats)
-    _stats.clear()
-    try:
-        yield stats
-    finally:
-        _stats.clear()
-        _stats.update(saved)
-
-
-def _count(op: str, route: str) -> None:
-    _stats[(op, route)] += 1
-
-
-# ------------------------------------------------- dense-score tripwire
-# Trace-time shape-assertion hook for the reference attention lowerings:
-# inside a ``forbid_dense_scores()`` scope, any path that would materialize
-# a dense (Sq, Skv) score tensor raises instead of tracing.  Tests wrap a
-# ``dispatch="kernels"`` train step in it to PROVE the fused routes carried
-# the whole graph — counters say which route ran, the tripwire says no
-# other route could have.
-_forbid_dense = False
-
-
-@contextlib.contextmanager
-def forbid_dense_scores():
-    global _forbid_dense
-    prev = _forbid_dense
-    _forbid_dense = True
-    try:
-        yield
-    finally:
-        _forbid_dense = prev
-
-
-def _assert_no_dense_scores(where: str, sq: int, skv: int) -> None:
-    if _forbid_dense:
-        raise AssertionError(
-            f"dense ({sq}, {skv}) attention scores would be materialized "
-            f"in {where} inside a forbid_dense_scores() scope")
-
-
-# ------------------------------------------------------------------ matmul
-def _matmul_eligible(x: jax.Array, w: jax.Array) -> bool:
-    if x.ndim < 2 or w.ndim < 2:
-        return False
-    if x.shape[-1] != w.shape[0]:
-        return False
-    if not (jnp.issubdtype(x.dtype, jnp.floating)
-            and jnp.issubdtype(w.dtype, jnp.floating)):
-        return False
-    m = math.prod(x.shape[:-1])
-    k = x.shape[-1]
-    n = math.prod(w.shape[1:])
-    if min(m, k, n) < 1:
-        return False
-    try:          # same heuristic solver the ops wrapper falls back to
-        TilePlanner().plan_matmul(m, n, k, in_bytes=x.dtype.itemsize)
-    except ValueError:
-        return False
-    return True
-
-
-@jax.custom_vjp
-def _matmul_kernel(a: jax.Array, b: jax.Array) -> jax.Array:
-    """2-D Pallas matmul with tuned-plan lookup; f32 output."""
-    from .matmul.ops import matmul as matmul_op
-    return matmul_op(a, b, plan="tuned")
-
-
-def _matmul_kernel_fwd(a, b):
-    return _matmul_kernel(a, b), (a, b)
-
-
-def _matmul_kernel_bwd(res, g):
-    a, b = res
-    da = jnp.einsum("mn,kn->mk", g, b).astype(a.dtype)
-    db = jnp.einsum("mk,mn->kn", a, g).astype(b.dtype)
-    return da, db
-
-
-_matmul_kernel.defvjp(_matmul_kernel_fwd, _matmul_kernel_bwd)
-
-
+# ------------------------------------------------------------------ facades
 def matmul(x: jax.Array, w: jax.Array, *,
            policy: PolicyLike = None) -> jax.Array:
     """Contract the last axis of ``x`` with the first axis of ``w``.
@@ -230,22 +155,7 @@ def matmul(x: jax.Array, w: jax.Array, *,
     with w pre-reshaped, so the reference lowering is bit-identical to the
     einsums it replaces).
     """
-    out_shape = x.shape[:-1] + w.shape[1:]
-    out_dtype = jnp.result_type(x, w)
-    mode = resolve_mode(policy)
-    # backend gate first: skip the tile enumeration on reference-bound paths
-    use_kernel = (mode != "reference"
-                  and (mode == "kernels" or _kernels_by_default())
-                  and _matmul_eligible(x, w))
-    _count("matmul", "kernel" if use_kernel else "reference")
-    k = x.shape[-1]
-    x2 = x.reshape(-1, k)
-    w2 = w.reshape(k, -1)
-    if use_kernel:
-        out = _matmul_kernel(x2, w2).astype(out_dtype)
-    else:
-        out = jnp.einsum("mk,kn->mn", x2, w2)
-    return out.reshape(out_shape)
+    return _call("matmul", x, w, policy=policy)
 
 
 def grouped_matmul(x: jax.Array, w: jax.Array, *,
@@ -253,198 +163,11 @@ def grouped_matmul(x: jax.Array, w: jax.Array, *,
     """Per-group matmul: x (G, C, K) x w (G, K, N) -> (G, C, N).
 
     The MoE expert contraction.  The kernel route unrolls the (static)
-    group axis into per-expert Pallas matmuls; the reference route is the
-    batched einsum the MoE layer always used.
+    group axis into per-expert Pallas matmuls (one shared tuned plan,
+    resolved on the per-expert cell); the reference route is the batched
+    einsum the MoE layer always used.
     """
-    g, c, k = x.shape
-    _, _, n = w.shape
-    mode = resolve_mode(policy)
-    use_kernel = (mode != "reference"
-                  and (mode == "kernels" or _kernels_by_default())
-                  and _matmul_eligible(x[0], w[0]))
-    _count("grouped_matmul", "kernel" if use_kernel else "reference")
-    if use_kernel:
-        out_dtype = jnp.result_type(x, w)
-        outs = [_matmul_kernel(x[e], w[e]).astype(out_dtype)
-                for e in range(g)]
-        return jnp.stack(outs, axis=0)
-    return jnp.einsum("gck,gkn->gcn", x, w)
-
-
-# --------------------------------------------------------------- attention
-def causal_mask(qpos: jax.Array, kpos: jax.Array, window: int,
-                causal: bool = True) -> jax.Array:
-    """Branch-free causal (+ sliding window) mask — condition flattening
-    (paper §2.7).  qpos (Sq,), kpos (Skv,) -> bool (Sq, Skv)."""
-    if causal:
-        m = kpos[None, :] <= qpos[:, None]
-    else:
-        m = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
-    if window > 0:
-        m &= kpos[None, :] > (qpos[:, None] - window)
-    return m
-
-
-def _attention_reference(q, k, v, *, causal, window, softcap, mask,
-                         accum_dtype, out_dtype):
-    """Naive reference: materializes the (Sq, Skv) score tensor.
-
-    This is THE dispatch reference path for attention — the einsum
-    contractions the models used inline now live here (and in the
-    blockwise variant below), so ``models/layers.py`` holds no attention
-    contraction of its own.
-    """
-    _assert_no_dense_scores("_attention_reference", q.shape[1], k.shape[1])
-    scale = 1.0 / math.sqrt(q.shape[-1])
-    scores = jnp.einsum("bqhk,bshk->bhqs", q, k).astype(accum_dtype) * scale
-    if softcap > 0:
-        scores = jnp.tanh(scores / softcap) * softcap
-    if mask is None:
-        mask = causal_mask(jnp.arange(q.shape[1]), jnp.arange(k.shape[1]),
-                           window, causal)[None, None]
-    scores = jnp.where(mask, scores, -1e30)
-    probs = jax.nn.softmax(scores, axis=-1).astype(out_dtype)
-    return jnp.einsum("bhqs,bshk->bqhk", probs, v)
-
-
-def _attention_blockwise_reference(q, k, v, *, causal, window, softcap,
-                                   accum_dtype, out_dtype, block_kv,
-                                   q_splits, unroll):
-    """Blockwise (flash-style) reference in pure XLA — tiled accumulation
-    interleaving (§2.1.2) on the softmax reduction; never materializes
-    (S, S).  Ported verbatim from the pre-dispatch model layer: q stays
-    un-blocked (its sharding passes through), only K/V are tiled and
-    scanned, and causality is exploited with ``q_splits`` *static*
-    sequence quarters so GSPMD never sees a dynamic q loop.
-    ``unroll=True`` (dry-run cost compiles) python-unrolls the KV scans so
-    ``cost_analysis`` counts every tile with identical math/FLOPs."""
-    b, sq, h, hd = q.shape
-    block_kv = min(block_kv, sq)
-    while block_kv > 1 and sq % block_kv:
-        block_kv //= 2
-    nkv = sq // block_kv
-    scale = 1.0 / math.sqrt(hd)
-
-    kb = jnp.moveaxis(k.reshape(b, nkv, block_kv, h, hd), 1, 0)
-    vb = jnp.moveaxis(v.reshape(b, nkv, block_kv, h, hd), 1, 0)
-
-    while q_splits > 1 and sq % q_splits != 0:
-        q_splits //= 2
-    qlen = sq // q_splits
-
-    def kv_step(carry, kj, q_slice, qpos):
-        m, l, acc = carry
-        kpos = kj * block_kv + jnp.arange(block_kv)
-        sc = jnp.einsum("bqhk,bshk->bhqs", q_slice,
-                        jax.lax.dynamic_index_in_dim(kb, kj, 0, False)) \
-            .astype(accum_dtype) * scale
-        if softcap > 0:
-            sc = jnp.tanh(sc / softcap) * softcap
-        msk = causal_mask(qpos, kpos, window, causal)[None, None]
-        sc = jnp.where(msk, sc, -1e30)
-        m_new = jnp.maximum(m, sc.max(axis=-1))
-        alpha = jnp.exp(m - m_new)
-        pexp = jnp.exp(sc - m_new[..., None])
-        l_new = l * alpha + pexp.sum(axis=-1)
-        acc_new = acc * alpha[..., None] + jnp.einsum(
-            "bhqs,bshk->bhqk", pexp.astype(out_dtype),
-            jax.lax.dynamic_index_in_dim(vb, kj, 0, False)) \
-            .astype(accum_dtype)
-        return (m_new, l_new, acc_new)
-
-    outs = []
-    for qi in range(q_splits):
-        q_lo, q_hi = qi * qlen, (qi + 1) * qlen - 1
-        q_slice = jax.lax.slice_in_dim(q, q_lo, q_hi + 1, axis=1)
-        qpos = jnp.arange(q_lo, q_hi + 1)
-        # static KV range this quarter can see (causal upper bound,
-        # window lower bound) — condition flattening at compile time
-        kj_hi = min(nkv - 1, q_hi // block_kv) if causal else nkv - 1
-        kj_lo = 0
-        if window > 0:
-            kj_lo = max(0, (q_lo - window + 1) // block_kv)
-        m0 = jnp.full((b, h, qlen), -1e30, accum_dtype)
-        l0 = jnp.zeros((b, h, qlen), accum_dtype)
-        a0 = jnp.zeros((b, h, qlen, hd), accum_dtype)
-        if unroll:
-            carry = (m0, l0, a0)
-            for kj in range(kj_lo, kj_hi + 1):
-                carry = kv_step(carry, kj, q_slice, qpos)
-            m, l, acc = carry
-        else:
-            def body(c, kj, _q=q_slice, _p=qpos):
-                return kv_step(c, kj, _q, _p), None
-            (m, l, acc), _ = jax.lax.scan(
-                body, (m0, l0, a0), jnp.arange(kj_lo, kj_hi + 1))
-        out = acc / jnp.maximum(l, 1e-30)[..., None]
-        outs.append(out.astype(out_dtype))       # (b, h, qlen, hd)
-
-    out = jnp.concatenate(outs, axis=2) if len(outs) > 1 else outs[0]
-    return jnp.moveaxis(out, 1, 2)               # (b, sq, h, hd)
-
-
-def _attention_eligible(q, k, v, *, softcap, mask) -> bool:
-    if mask is not None or softcap > 0:
-        return False
-    if q.shape != k.shape or k.shape != v.shape:
-        return False          # decode / cross-length: no self-attn kernel
-    if q.shape[1] < 2:
-        return False
-    return all(jnp.issubdtype(t.dtype, jnp.floating) for t in (q, k, v))
-
-
-def _flash_ref(q, k, v, causal, window):
-    from .attention.ref import attention_ref
-    return attention_ref(q, k, v, causal=causal, window=window)
-
-
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
-def _attn_kernel(causal, window, mode, q, k, v):
-    """(B, H, S, hd) flash attention with tuned-plan lookup; f32 output.
-
-    Forward/backward are a paired schedule: the forward emits per-row
-    logsumexp residuals, the backward recomputes P tiles from them in the
-    fused Pallas kernels (``attention/backward.py``) — neither direction
-    materializes (S, S).  The tuned ``flash_attention_bwd`` plan may route
-    a shape to the dense reference VJP instead (the stash schedule); an
-    explicit ``mode="kernels"`` overrides that, forcing the fused
-    backward, exactly as the forward policy promises the differential
-    tests."""
-    from .attention.ops import flash_attention
-    return flash_attention(q, k, v, causal=causal, window=window,
-                           plan="tuned")
-
-
-def _attn_kernel_fwd(causal, window, mode, q, k, v):
-    from .attention.ops import flash_attention
-    o, lse = flash_attention(q, k, v, causal=causal, window=window,
-                             plan="tuned", return_residuals=True)
-    return o, (q, k, v, o, lse)
-
-
-def _attn_kernel_bwd(causal, window, mode, res, g):
-    q, k, v, o, lse = res
-    from ..core.plan import Level
-    from ..tune.cache import resolve_plan
-    level, kw = resolve_plan("flash_attention_bwd", q.shape, q.dtype,
-                             Level.T3_REPLICATED, "tuned")
-    use_fused = not (level in (Level.T0_NAIVE, Level.T1_PIPELINED)
-                     and mode != "kernels")
-    _count("attention_bwd", "kernel" if use_fused else "reference")
-    if use_fused:
-        from .attention.ops import flash_attention_bwd
-        bkw = {k_: v_ for k_, v_ in (kw or {}).items()
-               if k_ in ("block_q", "block_kv")}
-        return flash_attention_bwd(q, k, v, o, lse, g, causal=causal,
-                                   window=window, plan=None, **bkw)
-    _assert_no_dense_scores("_attn_kernel_bwd reference VJP",
-                            q.shape[2], k.shape[2])
-    _, vjp = jax.vjp(
-        lambda q_, k_, v_: _flash_ref(q_, k_, v_, causal, window), q, k, v)
-    return vjp(g)
-
-
-_attn_kernel.defvjp(_attn_kernel_fwd, _attn_kernel_bwd)
+    return _call("grouped_matmul", x, w, policy=policy)
 
 
 def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
@@ -468,67 +191,13 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     formulation (with ``block_kv`` / ``q_splits`` / ``unroll``).
     """
     out_dtype = q.dtype if out_dtype is None else out_dtype
-    mode = resolve_mode(policy)
-    use_kernel = (mode != "reference"
-                  and (mode == "kernels" or _kernels_by_default())
-                  and _attention_eligible(q, k, v, softcap=softcap,
-                                          mask=mask))
-    _count("attention", "kernel" if use_kernel else "reference")
-    if use_kernel:
-        qt, kt, vt = (t.transpose(0, 2, 1, 3) for t in (q, k, v))
-        out = _attn_kernel(bool(causal), int(window), mode, qt, kt, vt)
-        return out.transpose(0, 2, 1, 3).astype(out_dtype)
-    # the blockwise lowering tiles a single self-attention length; any
-    # cross-length (decode) call falls back to the naive lowering
-    if impl == "naive" or mask is not None or q.shape[1] != k.shape[1]:
-        return _attention_reference(
-            q, k, v, causal=causal, window=window, softcap=softcap,
-            mask=mask, accum_dtype=accum_dtype, out_dtype=out_dtype)
-    return _attention_blockwise_reference(
-        q, k, v, causal=causal, window=window, softcap=softcap,
-        accum_dtype=accum_dtype, out_dtype=out_dtype, block_kv=block_kv,
-        q_splits=q_splits, unroll=unroll)
-
-
-# --------------------------------------------------------- decode attention
-def _decode_attention_reference(q, k_pages, v_pages, table, lengths, *,
-                                window, softcap, accum_dtype, out_dtype):
-    """Paged ragged decode reference: gather pages to a dense view, mask by
-    per-slot length (and window), softmax in ``accum_dtype``.  The einsum
-    lowering the paged serve path uses when the kernel route is off."""
-    b, h, hd = q.shape
-    _, page, hkv, _ = k_pages.shape
-    grp = h // hkv
-    k = k_pages[table].reshape(b, -1, hkv, hd)
-    v = v_pages[table].reshape(b, -1, hkv, hd)
-    if grp > 1:
-        k = jnp.broadcast_to(k[:, :, :, None, :],
-                             k.shape[:3] + (grp, hd)).reshape(b, -1, h, hd)
-        v = jnp.broadcast_to(v[:, :, :, None, :],
-                             v.shape[:3] + (grp, hd)).reshape(b, -1, h, hd)
-    scale = 1.0 / math.sqrt(hd)
-    scores = jnp.einsum("bhd,bshd->bhs", q, k).astype(accum_dtype) * scale
-    if softcap > 0:
-        scores = jnp.tanh(scores / softcap) * softcap
-    kpos = jnp.arange(k.shape[1])[None, :]
-    valid = kpos < lengths[:, None]
-    if window > 0:
-        valid &= kpos >= lengths[:, None] - window
-    scores = jnp.where(valid[:, None], scores, -1e30)
-    probs = jax.nn.softmax(scores, axis=-1).astype(out_dtype)
-    out = jnp.einsum("bhs,bshd->bhd", probs, v)
-    # inactive slots (length 0): every key masked -> exact zeros, no NaNs
-    return jnp.where((lengths > 0)[:, None, None], out,
-                     jnp.zeros((), out.dtype))
-
-
-def _decode_eligible(q, k_pages, v_pages, *, softcap) -> bool:
-    if softcap > 0:
-        return False
-    if q.shape[1] % k_pages.shape[2]:
-        return False              # GQA group must divide evenly
-    return all(jnp.issubdtype(t.dtype, jnp.floating)
-               for t in (q, k_pages, v_pages))
+    return _call(
+        "attention", q, k, v, mask,
+        statics=dict(causal=bool(causal), window=int(window),
+                     softcap=float(softcap), accum_dtype=accum_dtype,
+                     out_dtype=out_dtype, impl=impl, block_kv=block_kv,
+                     q_splits=q_splits, unroll=bool(unroll)),
+        policy=policy)
 
 
 def decode_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
@@ -544,37 +213,36 @@ def decode_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     lengths (B,) valid tokens per slot (0 = inactive -> zero output).
     Returns (B, H, hd) in ``out_dtype`` (default q's dtype).  Inference
     only — no custom VJP; the kernel route consults the tuned-plan cache
-    for KV-tile geometry (``plan="tuned"``).
+    for KV-tile geometry.
     """
     out_dtype = q.dtype if out_dtype is None else out_dtype
-    mode = resolve_mode(policy)
-    use_kernel = (mode != "reference"
-                  and (mode == "kernels" or _kernels_by_default())
-                  and _decode_eligible(q, k_pages, v_pages, softcap=softcap))
-    pages_per_tile = None
-    if use_kernel:
-        # resolve the tuned plan HERE so the route counter stays honest: a
-        # tuned entry may say the reference lowering wins on this backend
-        # (level <= T1), in which case "auto" honors it and counts the
-        # reference route — while an explicit "kernels" override forces
-        # the Pallas lowering (keeping any tuned tile geometry), as the
-        # policy docstring promises the differential tests
-        from ..core.plan import Level
-        from ..tune.cache import resolve_plan
-        shape = (q.shape[0], q.shape[1], table.shape[1], k_pages.shape[1],
-                 q.shape[2])
-        level, kw = resolve_plan("decode_attention", shape, q.dtype,
-                                 Level.T3_REPLICATED, "tuned")
-        pages_per_tile = (kw or {}).get("pages_per_tile")
-        if level in (Level.T0_NAIVE, Level.T1_PIPELINED) \
-                and mode != "kernels":
-            use_kernel = False
-    _count("decode_attention", "kernel" if use_kernel else "reference")
-    if use_kernel:
-        from .attention.ops import decode_attention as decode_op
-        out = decode_op(q, k_pages, v_pages, table, lengths, window=window,
-                        pages_per_tile=pages_per_tile, plan=None)
-        return out.astype(out_dtype)
-    return _decode_attention_reference(
-        q, k_pages, v_pages, table, lengths, window=window, softcap=softcap,
-        accum_dtype=accum_dtype, out_dtype=out_dtype)
+    return _call(
+        "decode_attention", q, k_pages, v_pages, table, lengths,
+        statics=dict(window=int(window), softcap=float(softcap),
+                     accum_dtype=accum_dtype, out_dtype=out_dtype),
+        policy=policy)
+
+
+def prefill_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                      table: jax.Array, starts: jax.Array, *,
+                      window: int = 0, softcap: float = 0.0,
+                      accum_dtype: Any = jnp.float32,
+                      out_dtype: Any = None,
+                      policy: PolicyLike = None) -> jax.Array:
+    """Ragged multi-token prefill attention over a paged KV cache.
+
+    q (B, C, H, hd) one chunk of C prompt tokens per slot (already written
+    into the pools); table (B, n_pages) page ids; starts (B,) page-aligned
+    chunk offsets — slot b's queries sit at positions ``starts[b] +
+    [0, C)`` and attend causally over the cached history plus the chunk
+    itself (padded tail positions are hidden by causality).  Returns
+    (B, C, H, hd) in ``out_dtype`` (default q's dtype).  Inference only —
+    no custom VJP; the first op registered end-to-end through the registry
+    (kernel, oracle, tune space, plan key: one ``OpSpec``).
+    """
+    out_dtype = q.dtype if out_dtype is None else out_dtype
+    return _call(
+        "prefill_attention", q, k_pages, v_pages, table, starts,
+        statics=dict(window=int(window), softcap=float(softcap),
+                     accum_dtype=accum_dtype, out_dtype=out_dtype),
+        policy=policy)

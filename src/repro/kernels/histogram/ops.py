@@ -49,3 +49,33 @@ def histogram(values: jax.Array, n_bins: int = 256, *,
 
 
 __all__ = ["histogram"]
+
+
+# ------------------------------------------------------------ registration
+# Tune-only OpSpec: no model dispatch surface, swept by the autotuner.
+def _histogram_tune_inputs(shape, dtype):
+    n, n_bins = shape
+    return (jax.random.randint(jax.random.key(0), (n,), 0, n_bins, dtype),
+            n_bins)
+
+
+def _histogram_tune_call(args, plan):
+    return histogram(*args, plan=plan)
+
+
+def _register():
+    from ...tune.space import histogram_space
+    from .. import registry
+    registry.register(registry.OpSpec(
+        name="histogram",
+        tune=registry.TuneSpec(
+            space=histogram_space,
+            make_inputs=_histogram_tune_inputs,
+            call=_histogram_tune_call,
+            default_dtype=jnp.int32,
+            default_shapes=((1 << 14, 256), (1 << 16, 256)),
+        ),
+    ))
+
+
+_register()

@@ -1,7 +1,15 @@
-"""jit'd public wrapper for the staged matmul."""
+"""jit'd public wrapper for the staged matmul + its op registrations.
+
+This module is the complete registry story for the matmul family: the
+staged ``matmul`` wrapper, and the ``OpSpec`` declarations for the
+``matmul`` and ``grouped_matmul`` dispatch ops — reference lowering,
+eligibility, custom-VJP pair, tuned-plan key schema, and tune-space hookup
+all in one place (see ``repro.kernels.registry``).
+"""
 from __future__ import annotations
 
 import functools
+import math
 from typing import Optional, Union
 
 import jax
@@ -10,6 +18,7 @@ import jax.numpy as jnp
 from ...core.plan import Level
 from ...core.scaling import TilePlan, TilePlanner
 from ...tune.cache import resolve_plan
+from .. import registry
 from ..common import interpret_default
 from . import ref
 from .matmul import matmul_pallas
@@ -72,3 +81,180 @@ def matmul(a: jax.Array, b: jax.Array, *,
                 m, n, k, min(kw["bm"], m), min(kw["bn"], n),
                 min(kw["bk"], k), in_bytes=a.dtype.itemsize)
     return _matmul(a, b, level=level, plan=tile_plan, interpret=interpret)
+
+
+# --------------------------------------------------------------------------
+# op registrations (repro.kernels.registry)
+# --------------------------------------------------------------------------
+#
+# ``dispatch.matmul`` contracts the last axis of x with the first axis of
+# w — the generalized form of every projection / dense / head matmul in
+# the models (``bsd,dhk->bshk`` is exactly this with w pre-reshaped, so
+# the reference lowering is bit-identical to the einsums it replaces).
+# ``grouped_matmul`` is the MoE expert contraction: per-group matmuls over
+# a static group axis, sharing the ``matmul`` tuned-plan namespace.
+
+def _matmul_eligible(statics, x, w) -> bool:
+    if x.ndim < 2 or w.ndim < 2:
+        return False
+    if x.shape[-1] != w.shape[0]:
+        return False
+    if not (jnp.issubdtype(x.dtype, jnp.floating)
+            and jnp.issubdtype(w.dtype, jnp.floating)):
+        return False
+    m = math.prod(x.shape[:-1])
+    k = x.shape[-1]
+    n = math.prod(w.shape[1:])
+    if min(m, k, n) < 1:
+        return False
+    try:          # same heuristic solver the kernel falls back to
+        TilePlanner().plan_matmul(m, n, k, in_bytes=x.dtype.itemsize)
+    except ValueError:
+        return False
+    return True
+
+
+def _matmul_plan_shape(statics, x, w):
+    return (math.prod(x.shape[:-1]), x.shape[-1], math.prod(w.shape[1:]))
+
+
+def _matmul_reference(ctx, x, w):
+    k = x.shape[-1]
+    out = jnp.einsum("mk,kn->mn", x.reshape(-1, k), w.reshape(k, -1))
+    return out.reshape(x.shape[:-1] + w.shape[1:])
+
+
+def _matmul_kernel_lowering(ctx, x, w):
+    k = x.shape[-1]
+    out = matmul(x.reshape(-1, k), w.reshape(k, -1), plan=ctx.ops_plan())
+    return out.astype(jnp.result_type(x, w)) \
+        .reshape(x.shape[:-1] + w.shape[1:])
+
+
+def _matmul_vjp_fwd(ctx, x, w):
+    return _matmul_kernel_lowering(ctx, x, w), (x, w)
+
+
+def _matmul_vjp_bwd(ctx, res, g):
+    # backward = the reference contraction in f32, grads in primal dtypes
+    # (projection grads are plain GEMMs; the kernel forward's f32 output
+    # was cast to the promoted dtype, so the cotangent casts back first)
+    x, w = res
+    k = x.shape[-1]
+    g2 = g.reshape(-1, math.prod(w.shape[1:])).astype(jnp.float32)
+    x2 = x.reshape(-1, k)
+    w2 = w.reshape(k, -1)
+    dx = jnp.einsum("mn,kn->mk", g2, w2).astype(x.dtype).reshape(x.shape)
+    dw = jnp.einsum("mk,mn->kn", x2, g2).astype(w.dtype).reshape(w.shape)
+    return dx, dw
+
+
+def _matmul_example(dtype):
+    a = jax.random.normal(jax.random.key(0), (2, 16, 32), dtype)
+    b = jax.random.normal(jax.random.key(1), (32, 24), dtype)
+    return (a, b), {}
+
+
+def _matmul_bad_example():
+    # integer contraction: the MXU path wants floats, the einsum reference
+    # handles it — eligibility must reject, not crash
+    a = jax.random.randint(jax.random.key(0), (8, 16), 0, 3, jnp.int32)
+    b = jax.random.randint(jax.random.key(1), (16, 8), 0, 3, jnp.int32)
+    return (a, b), {}
+
+
+def _grouped_eligible(statics, x, w) -> bool:
+    return _matmul_eligible(statics, x[0], w[0])
+
+
+def _grouped_plan_shape(statics, x, w):
+    g, c, k = x.shape
+    return (c, k, w.shape[2])
+
+
+def _grouped_reference(ctx, x, w):
+    return jnp.einsum("gck,gkn->gcn", x, w)
+
+
+def _grouped_kernel_lowering(ctx, x, w):
+    g = x.shape[0]
+    out_dtype = jnp.result_type(x, w)
+    plan = ctx.ops_plan()
+    # the (static) group axis unrolls into per-expert Pallas matmuls, all
+    # sharing the one plan resolved for the per-expert (c, k, n) cell
+    outs = [matmul(x[e], w[e], plan=plan).astype(out_dtype)
+            for e in range(g)]
+    return jnp.stack(outs, axis=0)
+
+
+def _grouped_vjp_fwd(ctx, x, w):
+    return _grouped_kernel_lowering(ctx, x, w), (x, w)
+
+
+def _grouped_vjp_bwd(ctx, res, g):
+    x, w = res
+    g32 = g.astype(jnp.float32)
+    dx = jnp.einsum("gcn,gkn->gck", g32, w).astype(x.dtype)
+    dw = jnp.einsum("gck,gcn->gkn", x, g32).astype(w.dtype)
+    return dx, dw
+
+
+def _grouped_example(dtype):
+    x = jax.random.normal(jax.random.key(0), (4, 8, 32), dtype)
+    w = jax.random.normal(jax.random.key(1), (4, 32, 16), dtype)
+    return (x, w), {}
+
+
+def _grouped_bad_example():
+    x = jax.random.randint(jax.random.key(0), (4, 8, 32), 0, 3, jnp.int32)
+    w = jax.random.randint(jax.random.key(1), (4, 32, 16), 0, 3, jnp.int32)
+    return (x, w), {}
+
+
+def _matmul_tune_inputs(shape, dtype):
+    m, k, n = shape
+    a = jax.random.normal(jax.random.key(0), (m, k), dtype)
+    b = jax.random.normal(jax.random.key(1), (k, n), dtype)
+    return (a, b)
+
+
+def _matmul_tune_call(args, plan):
+    return matmul(*args, plan=plan)
+
+
+def _matmul_tune_spec():
+    from ...tune.space import matmul_space
+    return registry.TuneSpec(
+        space=matmul_space,
+        make_inputs=_matmul_tune_inputs,
+        call=_matmul_tune_call,
+        default_dtype=jnp.float32,
+        default_shapes=((256, 256, 256), (384, 128, 512)),
+    )
+
+
+registry.register(registry.OpSpec(
+    name="matmul",
+    reference=_matmul_reference,
+    kernel=_matmul_kernel_lowering,
+    eligible=_matmul_eligible,
+    plan_shape=_matmul_plan_shape,
+    vjp_fwd=_matmul_vjp_fwd,
+    vjp_bwd=_matmul_vjp_bwd,
+    tune=_matmul_tune_spec(),
+    example=_matmul_example,
+    bad_example=_matmul_bad_example,
+))
+
+registry.register(registry.OpSpec(
+    name="grouped_matmul",
+    reference=_grouped_reference,
+    kernel=_grouped_kernel_lowering,
+    eligible=_grouped_eligible,
+    plan_shape=_grouped_plan_shape,
+    plan_kernel="matmul",        # shares the matmul tuned-plan namespace
+    vjp_fwd=_grouped_vjp_fwd,
+    vjp_bwd=_grouped_vjp_bwd,
+    example=_grouped_example,
+    bad_example=_grouped_bad_example,
+))

@@ -57,3 +57,34 @@ def nbody_accel(pos: jax.Array, mass: jax.Array, *,
         block_sources = kw.get("block_sources", block_sources)
     return _nbody_accel(pos, mass, level=level, block_targets=block_targets,
                         block_sources=block_sources, interpret=interpret)
+
+
+# ------------------------------------------------------------ registration
+# Tune-only OpSpec: no model dispatch surface, swept by the autotuner.
+def _nbody_tune_inputs(shape, dtype):
+    (n,) = shape
+    pos = jax.random.normal(jax.random.key(0), (3, n), dtype)
+    mass = jax.random.uniform(jax.random.key(1), (n,), dtype) + 0.1
+    return (pos, mass)
+
+
+def _nbody_tune_call(args, plan):
+    return nbody_accel(*args, plan=plan)
+
+
+def _register():
+    from ...tune.space import nbody_space
+    from .. import registry
+    registry.register(registry.OpSpec(
+        name="nbody",
+        tune=registry.TuneSpec(
+            space=nbody_space,
+            make_inputs=_nbody_tune_inputs,
+            call=_nbody_tune_call,
+            default_dtype=jnp.float32,
+            default_shapes=((256,), (512,)),
+        ),
+    ))
+
+
+_register()

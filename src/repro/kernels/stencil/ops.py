@@ -60,3 +60,32 @@ def jacobi4(x: jax.Array, *, steps: int = 1,
         block_rows = kw.get("block_rows")
     return _jacobi4(x, steps=steps, level=level, block_rows=block_rows,
                     interpret=interpret)
+
+
+# ------------------------------------------------------------ registration
+# Tune-only OpSpec: the stencil has no model dispatch surface, but the
+# autotuner sweeps it (repro.kernels.registry drives tune.tuner's tables).
+def _stencil_tune_inputs(shape, dtype):
+    return (jax.random.normal(jax.random.key(0), shape, dtype),)
+
+
+def _stencil_tune_call(args, plan):
+    return jacobi4(*args, steps=1, plan=plan)
+
+
+def _register():
+    from ...tune.space import stencil_space
+    from .. import registry
+    registry.register(registry.OpSpec(
+        name="stencil",
+        tune=registry.TuneSpec(
+            space=stencil_space,
+            make_inputs=_stencil_tune_inputs,
+            call=_stencil_tune_call,
+            default_dtype=jnp.float32,
+            default_shapes=((128, 256), (256, 512)),
+        ),
+    ))
+
+
+_register()

@@ -9,13 +9,16 @@ Two cache layouts behind one CLI (``--cache {dense,paged}``):
   cache is a pool of fixed-size pages (paper §4.3 memory banking); a
   host-side scheduler does admission control (a request is admitted only
   when its whole lifetime's pages can be reserved), chunked prefill (one
-  page-sized chunk per forward, §2.1.4 cross-input interleaving against
-  decode), batched decode over ragged lengths (every slot at its own
-  position, the Pallas ragged kernel via ``dispatch.decode_attention``),
-  and slot recycling (finished sequences return their pages to the free
-  list).  The split mirrors Chi et al.'s task-parallel decoupling: the
-  scheduler computes addresses (page tables), the kernels only ever see
-  dense tiles.
+  page-sized chunk per forward — the Pallas ragged multi-token kernel
+  via ``dispatch.prefill_attention``, §2.1.4 cross-input interleaving
+  against decode), batched decode over ragged lengths (every slot at its
+  own position, the Pallas ragged kernel via
+  ``dispatch.decode_attention``), sliding-window page reclamation (fully
+  windowed stacks free pages wholly behind ``lengths - window``
+  mid-request), and slot recycling (finished sequences return their
+  pages to the free list).  The split mirrors Chi et al.'s task-parallel
+  decoupling: the scheduler computes addresses (page tables), the
+  kernels only ever see dense tiles.
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --smoke \\
       --cache paged --dispatch kernels --requests 8 --max-new 16
@@ -186,6 +189,13 @@ class PagedScheduler:
         self.lengths = np.zeros((slots,), np.int32)
         self.active: List[Optional[Request]] = [None] * slots
         self.slot_pages: List[List[int]] = [[] for _ in range(slots)]
+        # sliding-window page reclamation: only sound when EVERY attention
+        # layer is windowed (a single global-attention layer reads the
+        # whole history, so its pages are never dead)
+        self.window = model.cfg.window if all(
+            m == "swa" for m, _ in model.cfg.layer_kinds()) else 0
+        self.reclaimed = [0] * slots      # leading logical pages freed
+        self.pages_reclaimed = 0
         self.prefill_tokens = 0
         self.decode_steps = 0
         self.decode_tokens = 0
@@ -212,12 +222,14 @@ class PagedScheduler:
             return False
         pages = self.alloc.alloc(need)
         self.slot_pages[slot] = pages
+        self.reclaimed[slot] = 0
         self.table[slot] = 0
         self.table[slot, :need] = pages
         first = self._prefill_prompt(r, slot)
         self.lengths[slot] = len(r.prompt)
         r.out.append(first)
         self.active[slot] = r
+        self._reclaim_slot(slot)    # long prompts can outrun the window
         return True
 
     def _prefill_prompt(self, r: Request, slot: int) -> int:
@@ -238,9 +250,52 @@ class PagedScheduler:
         self.prefill_tokens += ln
         return int(np.argmax(np.asarray(logits[0])))
 
+    def _reclaim_slot(self, slot: int) -> int:
+        """Sliding-window page reclamation (delay buffering §2.2 applied
+        to the cache): once every attention layer is windowed, a page
+        whose last position sits wholly behind ``lengths - window`` can
+        never be read again — every later mask starts at
+        ``lengths + 1 - window``.  Free it now (its table entry moves to
+        the trash page, so residual masked reads stay harmless) instead of
+        holding it until the request retires; queued requests admit
+        against the returned pages.  Returns the number of pages freed.
+        """
+        if not self.window or not self.slot_pages[slot]:
+            return 0
+        # logical page p covers [p*page, (p+1)*page); dead iff
+        # (p+1)*page <= lengths - window  (conservative by one position)
+        dead = max(0, (int(self.lengths[slot]) - self.window) // self.page)
+        dead = min(dead, len(self.slot_pages[slot]))
+        freed = 0
+        while self.reclaimed[slot] < dead:
+            j = self.reclaimed[slot]
+            self.alloc.release([self.slot_pages[slot][j]])
+            self.table[slot, j] = 0          # -> trash page (masked reads)
+            self.reclaimed[slot] += 1
+            freed += 1
+        if freed:
+            self.pages_reclaimed += freed
+            self.check_page_accounting()
+        return freed
+
+    def held_pages(self) -> int:
+        """Physical pages currently held by slots (excl. trash page 0)."""
+        return sum(len(p) - r for p, r in zip(self.slot_pages,
+                                              self.reclaimed))
+
+    def check_page_accounting(self) -> None:
+        """Invariant: every page is either free, held by a slot, or the
+        trash page — reclamation must never leak or double-free."""
+        held = self.held_pages()
+        free = self.alloc.available()
+        assert held + free + 1 == self.alloc.total, (
+            f"page accounting broken: held={held} free={free} "
+            f"trash=1 != total={self.alloc.total}")
+
     def _recycle(self, slot: int) -> None:
-        self.alloc.release(self.slot_pages[slot])
+        self.alloc.release(self.slot_pages[slot][self.reclaimed[slot]:])
         self.slot_pages[slot] = []
+        self.reclaimed[slot] = 0
         self.table[slot] = 0
         self.lengths[slot] = 0
         self.active[slot] = None
@@ -319,6 +374,8 @@ class PagedScheduler:
                     r.done = True
                     done.append(r)
                     self._recycle(i)
+                else:
+                    self._reclaim_slot(i)
         return done
 
 
@@ -384,6 +441,9 @@ def main(argv=None):
     print(f"served {len(done)} requests, {total_new} new tokens "
           f"in {dt:.2f}s ({total_new/dt:.1f} tok/s, {args.slots} slots, "
           f"cache={args.cache})")
+    if args.cache == "paged" and server.window:
+        print(f"[paged] reclaimed {server.pages_reclaimed} window-dead "
+              f"page(s) (window={server.window})")
     routes = dispatch.stats()
     for (op, route), n in sorted(routes.items()):
         print(f"[dispatch] {op:>16s} -> {route:<9s} x{n}")

@@ -325,21 +325,14 @@ def attention_prefill_paged(p: Params, s: AttnSpec, x: jax.Array,
     pid = table_row[start // page]
     k_pages = k_pages.at[pid].set(k[0].astype(k_pages.dtype))
     v_pages = v_pages.at[pid].set(v[0].astype(v_pages.dtype))
-    hist_k = k_pages[table_row].reshape(1, -1, s.n_kv_heads, s.head_dim)
-    hist_v = v_pages[table_row].reshape(1, -1, s.n_kv_heads, s.head_dim)
-    kk = _expand_kv(hist_k.astype(dt.compute), s.n_heads)
-    vv = _expand_kv(hist_v.astype(dt.compute), s.n_heads)
-    qpos = start + jnp.arange(c)
-    kpos = jnp.arange(kk.shape[1])
-    mask = kpos[None, :] <= qpos[:, None]
-    if s.window > 0:
-        mask &= kpos[None, :] > qpos[:, None] - s.window
-    # cross-length masked attention -> the dispatch reference route; the
-    # Pallas kernel covers the decode hot path (one token per step)
-    out = dispatch.attention(
-        q, kk, vv, softcap=s.softcap, mask=mask[None, None],
-        accum_dtype=dt.accum, out_dtype=dt.compute, impl="naive",
-        policy=s.dispatch)
+    # multi-token ragged prefill through dispatch: the chunk's queries
+    # attend causally over the cached history plus the chunk itself (just
+    # written into its page); GQA grouping happens inside the kernel /
+    # reference, so the pools stay at Hkv heads end-to-end
+    out = dispatch.prefill_attention(
+        q, k_pages, v_pages, table_row[None], jnp.reshape(start, (1,)),
+        window=s.window, softcap=s.softcap, accum_dtype=dt.accum,
+        out_dtype=dt.compute, policy=s.dispatch)
     return _out_proj(p, s, out, dt), k_pages, v_pages
 
 

@@ -20,15 +20,25 @@ Entry points: ``benchmarks/run.py --tune`` (sweep + CSV/JSON report) and
 from .cache import (PlanCache, default_cache, default_cache_path,
                     lookup_scope, lookup_stats, make_key, parse_key,
                     preload, reset_lookup_stats, resolve_plan,
-                    shape_distance)
+                    resolve_plan_source, shape_distance)
 from .measure import Harness, Measurement
 from .space import SPACES, plan_feasible
-from .tuner import DEFAULT_SHAPES, KERNELS, TuneResult, tune, tune_all
+from .tuner import TuneResult, tune, tune_all
 
 __all__ = [
     "PlanCache", "default_cache", "default_cache_path", "lookup_scope",
     "lookup_stats", "make_key", "parse_key", "preload",
-    "reset_lookup_stats", "resolve_plan", "shape_distance", "Harness",
-    "Measurement", "SPACES", "plan_feasible", "DEFAULT_SHAPES", "KERNELS",
-    "TuneResult", "tune", "tune_all",
+    "reset_lookup_stats", "resolve_plan", "resolve_plan_source",
+    "shape_distance", "Harness", "Measurement", "SPACES", "plan_feasible",
+    "DEFAULT_SHAPES", "KERNELS", "TuneResult", "tune", "tune_all",
 ]
+
+
+def __getattr__(name):
+    # KERNELS / DEFAULT_SHAPES are derived from the kernel registry, which
+    # must not be imported as a side effect of ``import repro.tune`` (the
+    # kernel op modules themselves import this package) — resolve lazily.
+    if name in ("KERNELS", "DEFAULT_SHAPES"):
+        from . import tuner
+        return getattr(tuner, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -224,6 +224,46 @@ def lookup_scope():
             _lookups[k] = saved.get(k, 0)
 
 
+def resolve_plan_source(kernel: str, shape: Sequence[int], dtype: Any,
+                        level, plan
+                        ) -> Tuple[Any, Optional[Dict[str, Any]], str]:
+    """``resolve_plan`` plus the lookup route that produced the result.
+
+    Returns ``(level, kwargs, source)`` where ``source`` is ``"exact"`` /
+    ``"nearest"`` (tuned-cache hits), ``"heuristic"`` (cache miss or a
+    non-tuned plan argument), or ``"explicit"`` (a verbatim kwargs dict).
+    The kernel registry threads ``source`` into its route counters so
+    ``dispatch.stats()`` and ``lookup_stats()`` can never disagree about
+    why a route was taken.
+    """
+    from ..core.plan import Level
+
+    if plan is None or plan == "heuristic":
+        return level, None, "heuristic"
+    source = "explicit"
+    if plan == "tuned":
+        cache = default_cache()
+        entry = cache.get(kernel, shape, dtype)
+        if entry is not None:
+            source = "exact"
+            _lookups["exact"] += 1
+        else:
+            entry = cache.get_nearest(kernel, shape, dtype)
+            source = "nearest" if entry is not None else "heuristic"
+            _lookups["nearest" if entry is not None else "miss"] += 1
+        if entry is None:
+            return level, None, source
+        plan = entry.get("plan", {})
+    if isinstance(plan, dict):
+        kwargs = dict(plan)
+        if "level" in kwargs:
+            level = Level(kwargs.pop("level"))
+        return level, kwargs, source
+    raise ValueError(
+        f"plan must be 'tuned', 'heuristic', None, or a kwargs dict; "
+        f"got {plan!r}")
+
+
 def resolve_plan(kernel: str, shape: Sequence[int], dtype: Any,
                  level, plan) -> Tuple[Any, Optional[Dict[str, Any]]]:
     """Resolve an ops wrapper's ``plan=`` argument to (level, kwargs).
@@ -239,26 +279,5 @@ def resolve_plan(kernel: str, shape: Sequence[int], dtype: Any,
     and should not be passed here.  Returns the possibly-overridden level
     and a kwargs dict or ``None``.
     """
-    from ..core.plan import Level
-
-    if plan is None or plan == "heuristic":
-        return level, None
-    if plan == "tuned":
-        cache = default_cache()
-        entry = cache.get(kernel, shape, dtype)
-        if entry is not None:
-            _lookups["exact"] += 1
-        else:
-            entry = cache.get_nearest(kernel, shape, dtype)
-            _lookups["nearest" if entry is not None else "miss"] += 1
-        if entry is None:
-            return level, None
-        plan = entry.get("plan", {})
-    if isinstance(plan, dict):
-        kwargs = dict(plan)
-        if "level" in kwargs:
-            level = Level(kwargs.pop("level"))
-        return level, kwargs
-    raise ValueError(
-        f"plan must be 'tuned', 'heuristic', None, or a kwargs dict; "
-        f"got {plan!r}")
+    level, kwargs, _ = resolve_plan_source(kernel, shape, dtype, level, plan)
+    return level, kwargs

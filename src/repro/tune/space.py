@@ -249,12 +249,58 @@ def decode_attention_space(shape: Sequence[int], dtype_bytes: int = 2, *,
     return _dedup(cands, max_candidates)
 
 
+def _prefill_vmem(rows: int, ppt: int, page: int, hd: int, pf: int,
+                  dtype_bytes: int) -> int:
+    """Per-grid-step working set of the paged prefill kernel: the
+    (chunk*grp, hd) query tile, ``ppt`` K and V page streams (x ``pf``
+    pipeline buffers, §4.2), the (rows, ppt*page) score tile, and the
+    m/l/acc carry."""
+    return (rows * hd + 2 * pf * ppt * page * hd + rows * ppt * page
+            + 2 * rows * hd) * dtype_bytes
+
+
+def prefill_attention_space(shape: Sequence[int], dtype_bytes: int = 2, *,
+                            hw: HardwareSpec = TPU_V5E,
+                            max_candidates: int = MAX_CANDIDATES
+                            ) -> List[PlanDict]:
+    """shape = (slots, chunk, heads, n_pages, page_size, head_dim).
+
+    The prefill plan space mirrors decode's (it is the same paged-KV
+    streaming problem with a chunk of query rows instead of one):
+    ``page_size`` echoes the pool layout, ``pages_per_tile`` is the
+    KV-tile geometry, ``prefetch_depth`` the §4.2 pipeline-buffer count —
+    but feasibility charges for the (chunk * grp, ppt * page) score tile,
+    which is what separates it from the decode space.
+    """
+    from ..kernels.attention.decode import heuristic_pages_per_tile
+    b, c, h, n_pages, page, hd = shape
+    budget = TilePlanner(hw).budget
+    rows = c * h                 # conservative GQA bound (grp = h / hkv)
+    ppt_h = heuristic_pages_per_tile(n_pages, page)
+    cands: List[PlanDict] = [
+        {"level": int(Level.T3_REPLICATED), "page_size": page,
+         "pages_per_tile": ppt_h, "prefetch_depth": pf}
+        for pf in sorted(TUNE_PREFETCH_DEPTHS, reverse=True)
+    ]
+    cands.append({"level": int(Level.T1_PIPELINED), "page_size": page})
+    for ppt in (16, 8, 4, 2, 1):
+        if ppt > n_pages:
+            continue
+        for pf in sorted(TUNE_PREFETCH_DEPTHS, reverse=True):
+            if _prefill_vmem(rows, ppt, page, hd, pf, dtype_bytes) <= budget:
+                cands.append({"level": int(Level.T3_REPLICATED),
+                              "page_size": page, "pages_per_tile": ppt,
+                              "prefetch_depth": pf})
+    return _dedup(cands, max_candidates)
+
+
 SPACES = {
     "matmul": matmul_space,
     "stencil": stencil_space,
     "attention": attention_space,
     "flash_attention_bwd": flash_attention_bwd_space,
     "decode_attention": decode_attention_space,
+    "prefill_attention": prefill_attention_space,
     "histogram": histogram_space,
     "nbody": nbody_space,
 }
@@ -312,6 +358,12 @@ def plan_feasible(kernel: str, shape: Sequence[int], plan: PlanDict, *,
         ppt = max(1, min(plan["pages_per_tile"], n_pages))
         pf = 2 if plan.get("prefetch_depth", 2) >= 2 else 1
         return _decode_vmem(h, ppt, page, hd, pf, dtype_bytes) <= budget
+    if kernel == "prefill_attention":
+        _, c, h, n_pages, page, hd = shape
+        ppt = max(1, min(plan["pages_per_tile"], n_pages))
+        pf = 2 if plan.get("prefetch_depth", 2) >= 2 else 1
+        return _prefill_vmem(c * h, ppt, page, hd, pf,
+                             dtype_bytes) <= budget
     if kernel == "stencil":
         rows, cols = shape
         br = min(plan["block_rows"], rows)

@@ -1,18 +1,22 @@
 """Benchmark-driven sweep over the per-kernel design spaces.
 
 ``tune()`` runs one (kernel, shape, dtype) cell: enumerate the pruned
-candidate plans (``space.py``), time each through the shared harness
-(``measure.py``), pick the fastest, and persist it in the ``PlanCache`` so
-the ``ops.py`` wrappers pick it up via ``plan="tuned"``.
+candidate plans, time each through the shared harness (``measure.py``),
+pick the fastest, and persist it in the ``PlanCache`` so the ``ops.py``
+wrappers pick it up via ``plan="tuned"``.
 
 The candidate list always starts with the exact heuristic plan the kernel
 would use on its own, so ``best_us <= heuristic_us`` holds *within the same
 sweep's measurements* by construction — the tuned plan is never slower than
 the heuristic beyond re-measurement noise.
 
-Kernels are imported lazily inside the input/call builders: ``ops.py``
-imports ``tune.cache`` at module level, and keeping this module free of
-top-level kernel imports breaks the cycle.
+Since the registry redesign this module holds NO per-op tables: the
+candidate space, input builder, timed call, default dtype, and default
+shapes all come from each op's ``TuneSpec`` declaration in
+``repro.kernels.registry`` — registering a kernel there is the whole
+hookup.  ``KERNELS`` / ``DEFAULT_SHAPES`` remain as module attributes
+(resolved lazily through ``__getattr__`` so importing ``repro.tune`` never
+eagerly imports the kernel modules).
 """
 from __future__ import annotations
 
@@ -25,145 +29,47 @@ import jax.numpy as jnp
 
 from .cache import PlanCache, make_key
 from .measure import Harness, Measurement
-from .space import SPACES, PlanDict
-
-# Default problem shapes per kernel for `benchmarks/run.py --tune` (kept
-# interpret-mode-small; on a real TPU pass production shapes instead).
-DEFAULT_SHAPES: Dict[str, List[Tuple[int, ...]]] = {
-    "matmul": [(256, 256, 256), (384, 128, 512)],
-    "stencil": [(128, 256), (256, 512)],
-    "attention": [(1, 2, 128, 64), (1, 4, 256, 64)],
-    "flash_attention_bwd": [(1, 2, 128, 64), (1, 4, 256, 64)],
-    # (slots, heads, n_pages, page_size, head_dim): two page-size layouts
-    # so the serve scheduler's page-size pick has entries to compare
-    "decode_attention": [(4, 4, 8, 32, 64), (4, 4, 4, 64, 64)],
-    "histogram": [(1 << 14, 256), (1 << 16, 256)],
-    "nbody": [(256,), (512,)],
-}
-
-
-def _matmul_inputs(shape, dtype):
-    m, k, n = shape
-    a = jax.random.normal(jax.random.key(0), (m, k), dtype)
-    b = jax.random.normal(jax.random.key(1), (k, n), dtype)
-    return (a, b)
-
-
-def _stencil_inputs(shape, dtype):
-    return (jax.random.normal(jax.random.key(0), shape, dtype),)
-
-
-def _attention_inputs(shape, dtype):
-    ks = jax.random.split(jax.random.key(0), 3)
-    return tuple(jax.random.normal(kk, shape, dtype) for kk in ks)
-
-
-def _flash_bwd_inputs(shape, dtype):
-    """Backward cell: run the (reference-level) forward once to build the
-    (o, lse) residuals, then time the backward candidates on a fixed
-    cotangent — the sweep never times the forward."""
-    from ..kernels.attention import flash_attention
-    from ..core.plan import Level
-    ks = jax.random.split(jax.random.key(0), 4)
-    q, k, v = (jax.random.normal(kk, shape, dtype) for kk in ks[:3])
-    o, lse = flash_attention(q, k, v, level=Level.T1_PIPELINED, plan=None,
-                             return_residuals=True)
-    do = jax.random.normal(ks[3], shape, jnp.float32)
-    return (q, k, v, o, lse, do)
-
-
-def _decode_attention_inputs(shape, dtype):
-    """Paged ragged-decode cell: a shared pool with page 0 reserved, a
-    shuffled (deterministic) page table, and staggered per-slot lengths so
-    the sweep times the masked-tail path the serve loop actually runs."""
-    b, h, n_pages, page, hd = shape
-    hkv = max(1, h // 2)                       # exercise GQA grouping
-    pool = 1 + b * n_pages
-    ks = jax.random.split(jax.random.key(0), 3)
-    q = jax.random.normal(ks[0], (b, h, hd), dtype)
-    k_pages = jax.random.normal(ks[1], (pool, page, hkv, hd), dtype)
-    v_pages = jax.random.normal(ks[2], (pool, page, hkv, hd), dtype)
-    perm = jax.random.permutation(jax.random.key(3), pool - 1) + 1
-    table = perm[:b * n_pages].reshape(b, n_pages).astype(jnp.int32)
-    lengths = ((jnp.arange(b) + 1) * (n_pages * page) // b).astype(jnp.int32)
-    return (q, k_pages, v_pages, table, lengths)
-
-
-def _histogram_inputs(shape, dtype):
-    n, n_bins = shape
-    return (jax.random.randint(jax.random.key(0), (n,), 0, n_bins, dtype),
-            n_bins)
-
-
-def _nbody_inputs(shape, dtype):
-    (n,) = shape
-    pos = jax.random.normal(jax.random.key(0), (3, n), dtype)
-    mass = jax.random.uniform(jax.random.key(1), (n,), dtype) + 0.1
-    return (pos, mass)
-
-
-def _call_matmul(args, plan):
-    from ..kernels.matmul import matmul
-    return matmul(*args, plan=plan)
-
-
-def _call_stencil(args, plan):
-    from ..kernels.stencil import jacobi4
-    return jacobi4(*args, steps=1, plan=plan)
-
-
-def _call_attention(args, plan):
-    from ..kernels.attention import flash_attention
-    return flash_attention(*args, plan=plan)
-
-
-def _call_flash_bwd(args, plan):
-    from ..kernels.attention import flash_attention_bwd
-    return flash_attention_bwd(*args, plan=plan)
-
-
-def _call_decode_attention(args, plan):
-    from ..kernels.attention import decode_attention
-    return decode_attention(*args, plan=plan)
-
-
-def _call_histogram(args, plan):
-    from ..kernels.histogram import histogram
-    return histogram(*args, plan=plan)
-
-
-def _call_nbody(args, plan):
-    from ..kernels.nbody import nbody_accel
-    return nbody_accel(*args, plan=plan)
+from .space import PlanDict
 
 
 @dataclasses.dataclass(frozen=True)
 class KernelTuneSpec:
+    """Tuner-facing view of one registered op's ``TuneSpec``."""
+
     name: str
     make_inputs: Callable[[Sequence[int], Any], tuple]
     call: Callable[[tuple, PlanDict], jax.Array]
     default_dtype: Any
+    space: Callable[..., List[PlanDict]]
+    default_shapes: Tuple[Tuple[int, ...], ...]
 
 
-KERNELS: Dict[str, KernelTuneSpec] = {
-    "matmul": KernelTuneSpec("matmul", _matmul_inputs, _call_matmul,
-                             jnp.float32),
-    "stencil": KernelTuneSpec("stencil", _stencil_inputs, _call_stencil,
-                              jnp.float32),
-    "attention": KernelTuneSpec("attention", _attention_inputs,
-                                _call_attention, jnp.bfloat16),
-    "flash_attention_bwd": KernelTuneSpec("flash_attention_bwd",
-                                          _flash_bwd_inputs,
-                                          _call_flash_bwd, jnp.bfloat16),
-    "decode_attention": KernelTuneSpec("decode_attention",
-                                       _decode_attention_inputs,
-                                       _call_decode_attention,
-                                       jnp.bfloat16),
-    "histogram": KernelTuneSpec("histogram", _histogram_inputs,
-                                _call_histogram, jnp.int32),
-    "nbody": KernelTuneSpec("nbody", _nbody_inputs, _call_nbody,
-                            jnp.float32),
-}
+def _registry_kernels() -> Dict[str, KernelTuneSpec]:
+    """The tunable-op table, derived from the registry (no parallel copy)."""
+    from ..kernels import registry
+    out: Dict[str, KernelTuneSpec] = {}
+    for name, spec in registry.tunable().items():
+        t = spec.tune
+        out[name] = KernelTuneSpec(
+            name=name, make_inputs=t.make_inputs, call=t.call,
+            default_dtype=t.default_dtype, space=t.space,
+            default_shapes=tuple(tuple(s) for s in t.default_shapes))
+    return out
+
+
+def _default_shapes() -> Dict[str, List[Tuple[int, ...]]]:
+    return {name: list(spec.default_shapes)
+            for name, spec in _registry_kernels().items()}
+
+
+def __getattr__(name: str):
+    # lazy: building these imports the kernel op modules, which must not
+    # happen as a side effect of ``import repro.tune``
+    if name == "KERNELS":
+        return _registry_kernels()
+    if name == "DEFAULT_SHAPES":
+        return _default_shapes()
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 @dataclasses.dataclass
@@ -197,13 +103,13 @@ def tune(kernel: str, shape: Sequence[int], *, dtype: Any = None,
          log: Optional[Callable[[str], None]] = None) -> TuneResult:
     """Sweep one (kernel, shape) cell; returns and (optionally) caches the
     winner.  ``harness`` is injectable for deterministic tests."""
-    spec = KERNELS[kernel]
+    spec = _registry_kernels()[kernel]
     dtype = dtype or spec.default_dtype
     harness = harness or Harness()
     dtype_bytes = jnp.dtype(dtype).itemsize
     space_kw = {} if max_candidates is None \
         else {"max_candidates": max_candidates}
-    candidates = SPACES[kernel](tuple(shape), dtype_bytes, **space_kw)
+    candidates = spec.space(tuple(shape), dtype_bytes, **space_kw)
     args = spec.make_inputs(tuple(shape), dtype)
 
     rows: List[dict] = []
@@ -241,8 +147,9 @@ def tune_all(shapes: Optional[Dict[str, List[Tuple[int, ...]]]] = None, *,
              harness: Optional[Harness] = None,
              max_candidates: Optional[int] = None,
              log: Optional[Callable[[str], None]] = None) -> List[TuneResult]:
-    """Sweep every kernel over its shape list (default: DEFAULT_SHAPES)."""
-    shapes = shapes or DEFAULT_SHAPES
+    """Sweep every registered tunable op over its shape list (default:
+    the registry's declared default shapes)."""
+    shapes = shapes or _default_shapes()
     results = []
     for kernel, shape_list in shapes.items():
         for shape in shape_list:

@@ -1,0 +1,205 @@
+"""Registry completeness + plan-source consistency tests.
+
+The OpSpec contract (repro.kernels.registry) promises that registering an
+op is the WHOLE hookup: reference oracle, eligibility, tuned-plan key,
+optional VJP, tune space.  These tests enforce the contract generically —
+every future op registered through the registry is covered the moment it
+is declared, with zero test edits:
+
+1. completeness — every dispatch-surface op has a reference lowering, a
+   kernel lowering, an eligibility predicate that rejects its declared
+   known-bad input, and working example routes on both policies;
+2. tune wiring — every tunable op's space yields >= 1 feasible plan on
+   its declared default shapes, and ``tune.tuner``'s KERNELS /
+   DEFAULT_SHAPES tables are derived from the registry (no parallel op
+   tables to drift);
+3. VJP — every op declaring a custom-VJP pair passes an fp32 grad
+   differential (kernel route vs reference route);
+4. plan-source threading — the (op, route, source) counters agree with
+   ``tune.cache.lookup_stats()``, including the regression case where a
+   tuned entry picks the *reference* lowering under "auto".
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.plan import Level
+from repro.kernels import dispatch, registry
+from repro.tune import cache as tune_cache
+from repro.tune import plan_feasible
+
+DISPATCHABLE = sorted(registry.dispatchable())
+TUNABLE = sorted(registry.tunable())
+VJP_OPS = sorted(n for n, s in registry.dispatchable().items()
+                 if s.vjp_bwd is not None)
+
+
+@pytest.fixture
+def empty_plan_cache(tmp_path, monkeypatch):
+    """Point the tuned-plan cache at an empty file so the repo cache's
+    (CPU-tuned, often level-1) entries cannot steer routing."""
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(tmp_path / "empty.json"))
+    tune_cache.preload()
+    yield
+    monkeypatch.delenv("REPRO_TUNE_CACHE")
+    tune_cache.preload()
+
+
+# ------------------------------------------------------------ completeness
+@pytest.mark.parametrize("op", DISPATCHABLE)
+def test_dispatch_ops_declare_full_contract(op):
+    spec = registry.get(op)
+    assert spec.reference is not None
+    assert spec.kernel is not None
+    assert spec.eligible is not None
+    assert spec.plan_shape is not None, \
+        f"{op} has no tuned-plan key schema"
+    assert spec.example is not None and spec.bad_example is not None
+    # VJP pairs come whole or not at all
+    assert (spec.vjp_fwd is None) == (spec.vjp_bwd is None)
+
+
+@pytest.mark.parametrize("op", DISPATCHABLE)
+def test_example_routes_and_differential(op, empty_plan_cache):
+    """The declared example runs on BOTH routes (counters prove it) and
+    the kernel route matches the reference oracle in fp32."""
+    spec = registry.get(op)
+    args, kwargs = spec.example(jnp.float32)
+    facade = getattr(dispatch, op)
+    with dispatch.stats_scope() as stats:
+        got = facade(*args, policy="kernels", **kwargs)
+        want = facade(*args, policy="reference", **kwargs)
+        s = stats()
+    assert s.get((op, "kernel"), 0) >= 1, s
+    assert s.get((op, "reference"), 0) >= 1, s
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("op", DISPATCHABLE)
+def test_eligibility_rejects_known_bad_input(op):
+    """policy="kernels" on the declared bad example must fall back to the
+    reference route (the predicate rejected it), not crash or mis-route."""
+    spec = registry.get(op)
+    args, kwargs = spec.bad_example()
+    facade = getattr(dispatch, op)
+    with dispatch.stats_scope() as stats:
+        facade(*args, policy="kernels", **kwargs)
+        s = stats()
+    assert s.get((op, "kernel"), 0) == 0, s
+    assert s.get((op, "reference"), 0) == 1, s
+
+
+# ------------------------------------------------------------- tune wiring
+@pytest.mark.parametrize("op", TUNABLE)
+def test_tune_space_yields_feasible_plan_on_default_shapes(op):
+    spec = registry.get(op)
+    t = spec.tune
+    dtype_bytes = jnp.dtype(t.default_dtype).itemsize
+    for shape in t.default_shapes:
+        cands = t.space(tuple(shape), dtype_bytes)
+        assert cands, (op, shape)
+        feasible = [c for c in cands
+                    if plan_feasible(op if spec.plan_kernel is None
+                                     else spec.plan_kernel,
+                                     tuple(shape), c,
+                                     dtype_bytes=dtype_bytes)]
+        assert feasible, f"{op} {shape}: no feasible candidate"
+
+
+def test_tuner_tables_are_registry_derived():
+    from repro.tune import DEFAULT_SHAPES, KERNELS
+    assert sorted(KERNELS) == TUNABLE
+    assert sorted(DEFAULT_SHAPES) == TUNABLE
+    for name, spec in registry.tunable().items():
+        assert tuple(DEFAULT_SHAPES[name]) == spec.tune.default_shapes
+        assert KERNELS[name].call is spec.tune.call
+        assert KERNELS[name].make_inputs is spec.tune.make_inputs
+
+
+# --------------------------------------------------------------------- vjp
+@pytest.mark.parametrize("op", VJP_OPS)
+def test_vjp_ops_pass_fp32_grad_differential(op, empty_plan_cache):
+    spec = registry.get(op)
+    args, kwargs = spec.example(jnp.float32)
+    facade = getattr(dispatch, op)
+    cot = jax.random.normal(jax.random.key(9), jnp.shape(
+        facade(*args, policy="reference", **kwargs)), jnp.float32)
+
+    def loss(policy):
+        def f(*diff_args):
+            out = facade(*diff_args, *args[2:], policy=policy, **kwargs)
+            return jnp.sum(out.astype(jnp.float32) * cot)
+        return f
+
+    gk = jax.grad(loss("kernels"), argnums=(0, 1))(*args[:2])
+    gr = jax.grad(loss("reference"), argnums=(0, 1))(*args[:2])
+    jax.tree.map(
+        lambda a, b: np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            rtol=5e-4, atol=5e-4), gk, gr)
+
+
+# ----------------------------------------------------- plan-source threading
+def test_plan_source_tags_agree_with_lookup_stats(tmp_path, monkeypatch):
+    """Satellite regression: a tuned entry that says "the reference
+    lowering wins at this shape" (level 1) must be counted as the
+    REFERENCE route under "auto", tagged with the exact-hit source — so
+    ``dispatch.stats()`` and ``tune.cache.lookup_stats()`` tell one story
+    instead of a "kernel" count with no kernel behind it."""
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(tmp_path / "plans.json"))
+    spec = registry.get("decode_attention")
+    (q, kp, vp, table, lengths), _ = spec.example(jnp.float32)
+    shape = spec.plan_shape({"softcap": 0.0}, q, kp, vp, table, lengths)
+    cache = tune_cache.PlanCache(tmp_path / "plans.json")
+    cache.put("decode_attention", shape, jnp.float32,
+              {"level": int(Level.T1_PIPELINED),
+               "page_size": kp.shape[1]}, us=1.0)
+    cache.save()
+    tune_cache.preload()
+    # emulate a TPU-style auto route: backend gate open, mode stays "auto"
+    monkeypatch.setattr(dispatch, "_kernels_by_default", lambda: True)
+    try:
+        with dispatch.stats_scope() as stats, \
+                tune_cache.lookup_scope() as looks:
+            got = dispatch.decode_attention(q, kp, vp, table, lengths,
+                                            policy="auto")
+            s, l = stats(), looks()
+            sources = dispatch.plan_source_stats()
+        assert s == {("decode_attention", "reference"): 1}, s
+        assert sources.get(("decode_attention", "reference", "exact"),
+                           0) == 1, sources
+        assert l["exact"] == 1 and l["nearest"] == 0, l
+        # ... while an explicit "kernels" policy overrides the tuned level
+        # and forces the Pallas lowering
+        with dispatch.stats_scope() as stats:
+            forced = dispatch.decode_attention(q, kp, vp, table, lengths,
+                                               policy="kernels")
+            assert stats() == {("decode_attention", "kernel"): 1}
+        np.testing.assert_allclose(np.asarray(forced, np.float32),
+                                   np.asarray(got, np.float32),
+                                   rtol=2e-4, atol=2e-4)
+    finally:
+        monkeypatch.delenv("REPRO_TUNE_CACHE")
+        tune_cache.preload()
+
+
+def test_plan_source_stats_isolated_by_stats_scope(empty_plan_cache):
+    before = dispatch.plan_source_stats()
+    with dispatch.stats_scope():
+        x = jax.random.normal(jax.random.key(0), (8, 16), jnp.float32)
+        w = jax.random.normal(jax.random.key(1), (16, 8), jnp.float32)
+        dispatch.matmul(x, w, policy="kernels")
+        inside = dispatch.plan_source_stats()
+        assert inside.get(("matmul", "kernel", "heuristic"), 0) == 1, inside
+    assert dispatch.plan_source_stats() == before   # scope did not leak
+
+
+def test_tune_only_ops_have_no_dispatch_surface():
+    for name in ("flash_attention_bwd", "stencil", "histogram", "nbody"):
+        spec = registry.get(name)
+        assert not spec.dispatchable
+        with pytest.raises(ValueError, match="no dispatch surface"):
+            registry.call(name)
