@@ -319,6 +319,24 @@ def run_prefill(args) -> None:
     print(f"# report: {out}")
 
 
+def _merge_serve_rows(path, new_rows) -> None:
+    """Merge rows into the serve report keyed by (arch, cache, schedule),
+    so --serve and --serve-continuous co-own one file: a re-run replaces
+    its own keys and leaves the other mode's rows alone.  Legacy rows
+    without a schedule field are the phased (--serve) rows."""
+    def key(r):
+        return (r.get("arch"), r.get("cache"), r.get("schedule", "phased"))
+    out = Path(path)
+    rows = []
+    if out.exists():
+        rows = json.loads(out.read_text()).get("rows", [])
+    fresh = {key(r) for r in new_rows}
+    rows = [r for r in rows if key(r) not in fresh] + new_rows
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps({"rows": rows}, indent=2) + "\n")
+    print(f"# report: {out}")
+
+
 def run_serve(args) -> None:
     """--serve: decode-throughput rows for the serving runtime.
 
@@ -365,7 +383,8 @@ def run_serve(args) -> None:
         if kind == "paged":
             sched = PagedScheduler(model, params, slots=slots,
                                    max_len=max_len,
-                                   page_size=args.serve_page_size)
+                                   page_size=args.serve_page_size,
+                                   log=None)
             # warmup: compile prefill_step_paged + decode_step on this
             # scheduler instance outside the timed regions
             sched.run([warmup_request()])
@@ -384,7 +403,8 @@ def run_serve(args) -> None:
             prefill_tok_s = sched.prefill_tokens / max(t_prefill, 1e-9)
             decode_tok_s = sched.decode_tokens / max(t_decode, 1e-9)
         else:
-            server = Server(model, params, slots=slots, max_len=max_len)
+            server = Server(model, params, slots=slots, max_len=max_len,
+                            log=None)
             server.run([warmup_request()])     # compile decode_step
             reqs = requests()
             t0 = time.perf_counter()
@@ -406,7 +426,7 @@ def run_serve(args) -> None:
             decode_route = ("kernel" if routes.get(("decode_attention",
                                                     "kernel"), 0) else
                             "reference")
-        row = {"arch": cfg.name, "cache": kind,
+        row = {"arch": cfg.name, "cache": kind, "schedule": "phased",
                "dispatch": args.serve_dispatch, "slots": slots,
                "page_size": page,
                "prefill_tok_s": None if prefill_tok_s is None
@@ -418,10 +438,126 @@ def run_serve(args) -> None:
         pf = "" if prefill_tok_s is None else f"{prefill_tok_s:.2f}"
         print(f"{cfg.name},{kind},{args.serve_dispatch},{slots},{page},"
               f"{pf},{decode_tok_s:.2f},{decode_route}", flush=True)
-    out = Path(args.serve_out)
-    out.parent.mkdir(parents=True, exist_ok=True)
-    out.write_text(json.dumps({"rows": rows}, indent=2) + "\n")
-    print(f"# report: {out}")
+    _merge_serve_rows(args.serve_out, rows)
+
+
+def run_serve_continuous(args) -> None:
+    """--serve-continuous: continuous-batching engine rows vs the static
+    run-to-completion schedule.
+
+    Drives the layered engine (loadgen -> policy -> executor -> metrics)
+    on a seeded request stream and reports the serving-latency trio the
+    engine exists to improve: TTFT p50/p99, per-token latency p50/p99
+    (both on the wall virtual clock, in seconds), and decode throughput.
+    A second leg replays the SAME stream through ``PagedScheduler.run``
+    (schedule=static) so the rows carry a like-for-like total-throughput
+    comparison; the continuous row's ``max_prefill_batch`` +
+    ``prefill_route`` prove a multi-slot (B > 1) batched
+    ``prefill_attention`` kernel forward actually fired.  Absolute
+    numbers are CPU-interpret numbers; the row structure carries to TPU.
+    """
+    import numpy as np
+
+    from repro.configs import get_arch
+    from repro.core.memory import DtypePolicy
+    from repro.kernels import dispatch
+    from repro.launch.engine import ContinuousEngine
+    from repro.launch.loadgen import Request, poisson_stream
+    from repro.launch.serve import PagedScheduler
+    from repro.models.transformer import ExecOptions, Model
+    from repro.tune.cache import preload as preload_tuned
+
+    preload_tuned()
+    cfg = get_arch(args.serve_arch).smoke()
+    cfg = dataclasses.replace(cfg, dispatch=args.serve_dispatch)
+    model = Model(cfg, dt=DtypePolicy(param=jnp.bfloat16),
+                  opts=ExecOptions(mode="run"))
+    params = model.init(jax.random.key(0))
+    slots, prompt_len, max_new, max_len = 2, 12, 8, 64
+    n_req, rate = args.serve_requests, args.serve_rate
+
+    def stream():
+        return poisson_stream(n_req, rate=rate, vocab_size=cfg.vocab_size,
+                              prompt_len=prompt_len, max_new=max_new,
+                              seed=0)
+
+    def r6(v):
+        return None if v is None else round(v, 6)
+
+    def route(routes, op):
+        return "kernel" if routes.get((op, "kernel"), 0) else "reference"
+
+    # -------------------------------------------------- continuous leg
+    sched = PagedScheduler(model, params, slots=slots, max_len=max_len,
+                           page_size=args.serve_page_size, log=None)
+    engine = ContinuousEngine(sched, token_budget=args.serve_token_budget,
+                              clock="wall", log=None)
+    dispatch.reset_stats()       # trace-time counters: count from warmup
+    engine.warmup()
+    t0 = time.perf_counter()
+    done = engine.run(stream())
+    dt = time.perf_counter() - t0
+    if len(done) != n_req:
+        raise RuntimeError(
+            f"continuous serve finished {len(done)}/{n_req} requests")
+    s = engine.metrics.summary()
+    ex = engine.executor
+    routes = dispatch.stats()
+    total_new = sum(len(r.out) for r in done)
+    cont_tok_s = total_new / max(dt, 1e-9)
+    cont_row = {
+        "arch": cfg.name, "cache": "paged", "schedule": "continuous",
+        "dispatch": args.serve_dispatch, "slots": slots,
+        "page_size": sched.page, "requests": n_req, "rate": rate,
+        "token_budget": engine.policy.token_budget,
+        "decode_tok_s": round(
+            sched.decode_tokens / max(ex.t_decode, 1e-9), 2),
+        "total_tok_s": round(cont_tok_s, 2),
+        "ttft_p50_s": r6(s["ttft_p50"]),
+        "ttft_p99_s": r6(s["ttft_p99"]),
+        "tok_latency_p50_s": r6(s["tok_latency_p50"]),
+        "tok_latency_p99_s": r6(s["tok_latency_p99"]),
+        "max_prefill_batch": ex.max_prefill_batch,
+        "prefill_route": route(routes, "prefill_attention"),
+        "decode_route": route(routes, "decode_attention"),
+        "rejected": sched.rejected,
+        "backend": jax.default_backend(),
+    }
+
+    # ------------------------------------------------------ static leg
+    sched2 = PagedScheduler(model, params, slots=slots, max_len=max_len,
+                            page_size=args.serve_page_size, log=None)
+    rng = np.random.default_rng(99)
+    sched2.run([Request(-1, rng.integers(0, cfg.vocab_size, 4), 2)])
+    sched2.prefill_tokens = sched2.decode_tokens = sched2.decode_steps = 0
+    t0 = time.perf_counter()
+    done2 = sched2.run(stream())      # arrivals ignored: admit-at-once
+    dt2 = time.perf_counter() - t0
+    if len(done2) != n_req:
+        raise RuntimeError(
+            f"static serve finished {len(done2)}/{n_req} requests")
+    static_tok_s = sum(len(r.out) for r in done2) / max(dt2, 1e-9)
+    static_row = {
+        "arch": cfg.name, "cache": "paged", "schedule": "static",
+        "dispatch": args.serve_dispatch, "slots": slots,
+        "page_size": sched2.page, "requests": n_req,
+        "total_tok_s": round(static_tok_s, 2),
+        "backend": jax.default_backend(),
+    }
+    cont_row["speedup_vs_static"] = round(cont_tok_s / static_tok_s, 3)
+
+    print("arch,schedule,dispatch,total_tok_s,decode_tok_s,"
+          "ttft_p99_s,tok_latency_p99_s,max_prefill_batch,prefill_route")
+    print(f"{cfg.name},continuous,{args.serve_dispatch},"
+          f"{cont_row['total_tok_s']},{cont_row['decode_tok_s']},"
+          f"{cont_row['ttft_p99_s']},{cont_row['tok_latency_p99_s']},"
+          f"{cont_row['max_prefill_batch']},{cont_row['prefill_route']}",
+          flush=True)
+    print(f"{cfg.name},static,{args.serve_dispatch},"
+          f"{static_row['total_tok_s']},,,,,", flush=True)
+    print(f"# continuous/static total throughput: "
+          f"{cont_row['speedup_vs_static']:.3f}x")
+    _merge_serve_rows(args.serve_out, [cont_row, static_row])
 
 
 def run_progression() -> None:
@@ -481,6 +617,18 @@ def main(argv=None) -> None:
                          "(0 = tuned-plan pick)")
     ap.add_argument("--serve-out", default="results/BENCH_serve.json",
                     help="serve-throughput report JSON path")
+    ap.add_argument("--serve-continuous", action="store_true",
+                    help="continuous-batching engine rows (TTFT + "
+                         "per-token latency percentiles) vs the static "
+                         "run-to-completion schedule")
+    ap.add_argument("--serve-requests", type=int, default=6,
+                    help="continuous workload size (requests)")
+    ap.add_argument("--serve-rate", type=float, default=0.0,
+                    help="continuous Poisson arrival rate "
+                         "(0 = burst at t=0, deterministic)")
+    ap.add_argument("--serve-token-budget", type=int, default=0,
+                    help="continuous per-iteration token budget "
+                         "(0 = slots x page_size)")
     args = ap.parse_args(argv)
     if args.tune:
         run_tune(args)
@@ -490,6 +638,8 @@ def main(argv=None) -> None:
         run_prefill(args)
     elif args.serve:
         run_serve(args)
+    elif args.serve_continuous:
+        run_serve_continuous(args)
     else:
         run_progression()
 

@@ -1,21 +1,33 @@
 #!/usr/bin/env python
 """Benchmark-regression gate: compare a fresh BENCH_serve.json against the
-committed baseline and fail if decode throughput regressed.
+committed baseline and fail on throughput OR latency regressions.
 
 Usage (what ``scripts/ci.sh bench`` runs)::
 
     python benchmarks/run.py --serve --serve-dispatch kernels \
         --serve-out results/BENCH_serve_current.json
+    python benchmarks/run.py --serve-continuous --serve-dispatch kernels \
+        --serve-out results/BENCH_serve_current.json
     python scripts/check_bench.py \
         --baseline results/BENCH_serve.json \
         --current  results/BENCH_serve_current.json
 
-A row regresses when ``current < baseline * (1 - tolerance)`` for its
-``(arch, cache)`` key; rows present on only one side are reported but do
-not fail the gate (a new benchmark must be able to land before its
-baseline).  The default tolerance (0.45) absorbs CPU timer noise while
-still failing a 2x slowdown; override per-run with ``--tolerance`` or the
-``REPRO_BENCH_TOL`` env var.
+Rows are keyed ``(arch, cache, schedule)`` — legacy rows without a
+schedule field are the phased (``--serve``) rows.  Two gates per key:
+
+* **throughput floor** — ``decode_tok_s`` must stay above
+  ``baseline * (1 - tolerance)``; default tolerance 0.45 (absorbs CPU
+  timer noise, still fails a 2x slowdown), override with ``--tolerance``
+  or ``REPRO_BENCH_TOL``.
+* **latency ceiling** — ``tok_latency_p99_s`` (the continuous engine's
+  p99 per-token decode latency) must stay below
+  ``baseline * (1 + lat_tolerance)``; default 0.8 (p99 of a small smoke
+  sample is noisier than a mean), override with ``--lat-tolerance`` or
+  ``REPRO_BENCH_LAT_TOL``.
+
+A key gates only the metrics present on BOTH sides; keys present on one
+side are reported but do not fail (a new benchmark must be able to land
+before its baseline).
 
 Updating the baseline (after an intentional perf change or a new
 machine): re-run the benchmark writing straight to the baseline path and
@@ -32,41 +44,61 @@ from pathlib import Path
 from typing import Dict, List, Tuple
 
 DEFAULT_TOLERANCE = 0.45
-METRIC = "decode_tok_s"
+DEFAULT_LAT_TOLERANCE = 0.8
+FLOOR_METRIC = "decode_tok_s"       # higher is better
+CEIL_METRIC = "tok_latency_p99_s"   # lower is better
+
+Key = Tuple[str, str, str]
 
 
-def load_metrics(path) -> Dict[Tuple[str, str], float]:
-    """BENCH_serve.json -> {(arch, cache): decode_tok_s}."""
+def load_metrics(path) -> Dict[Key, Dict[str, float]]:
+    """BENCH_serve.json -> {(arch, cache, schedule): {metric: value}}."""
     data = json.loads(Path(path).read_text())
-    out: Dict[Tuple[str, str], float] = {}
+    out: Dict[Key, Dict[str, float]] = {}
     for row in data.get("rows", []):
-        val = row.get(METRIC)
-        if val is not None:
-            out[(row.get("arch", "?"), row.get("cache", "?"))] = float(val)
+        key = (row.get("arch", "?"), row.get("cache", "?"),
+               row.get("schedule", "phased"))
+        metrics = {m: float(row[m]) for m in (FLOOR_METRIC, CEIL_METRIC)
+                   if row.get(m) is not None}
+        if metrics:
+            out[key] = metrics
     return out
 
 
-def compare(baseline: Dict[Tuple[str, str], float],
-            current: Dict[Tuple[str, str], float],
-            tolerance: float = DEFAULT_TOLERANCE) -> Tuple[List[str], int]:
-    """Return (failure lines, rows actually compared).
+def compare(baseline: Dict[Key, Dict[str, float]],
+            current: Dict[Key, Dict[str, float]],
+            tolerance: float = DEFAULT_TOLERANCE,
+            lat_tolerance: float = DEFAULT_LAT_TOLERANCE
+            ) -> Tuple[List[str], int]:
+    """Return (failure lines, metric comparisons made).
 
-    Zero failures only passes the gate when at least one row overlapped —
-    a current run whose keys/metric don't line up with the baseline must
-    not pass vacuously.
+    Zero failures only passes the gate when at least one metric
+    overlapped — a current run whose keys/metrics don't line up with the
+    baseline must not pass vacuously.
     """
     failures, compared = [], 0
     for key in sorted(baseline):
         if key not in current:
             print(f"note: {key} in baseline but not in current run")
             continue
-        compared += 1
+        name = "/".join(key)
         base, cur = baseline[key], current[key]
-        floor = base * (1.0 - tolerance)
-        if cur < floor:
-            failures.append(
-                f"{key[0]}/{key[1]}: {METRIC} {cur:.2f} < floor {floor:.2f} "
-                f"(baseline {base:.2f}, tolerance {tolerance:.0%})")
+        if FLOOR_METRIC in base and FLOOR_METRIC in cur:
+            compared += 1
+            floor = base[FLOOR_METRIC] * (1.0 - tolerance)
+            if cur[FLOOR_METRIC] < floor:
+                failures.append(
+                    f"{name}: {FLOOR_METRIC} {cur[FLOOR_METRIC]:.2f} < "
+                    f"floor {floor:.2f} (baseline {base[FLOOR_METRIC]:.2f},"
+                    f" tolerance {tolerance:.0%})")
+        if CEIL_METRIC in base and CEIL_METRIC in cur:
+            compared += 1
+            ceil = base[CEIL_METRIC] * (1.0 + lat_tolerance)
+            if cur[CEIL_METRIC] > ceil:
+                failures.append(
+                    f"{name}: {CEIL_METRIC} {cur[CEIL_METRIC]:.6f} > "
+                    f"ceiling {ceil:.6f} (baseline {base[CEIL_METRIC]:.6f},"
+                    f" tolerance {lat_tolerance:.0%})")
     for key in sorted(set(current) - set(baseline)):
         print(f"note: {key} in current run but not in baseline "
               f"(commit an updated baseline to start gating it)")
@@ -80,16 +112,24 @@ def main(argv=None) -> int:
     ap.add_argument("--tolerance", type=float,
                     default=float(os.environ.get("REPRO_BENCH_TOL",
                                                  DEFAULT_TOLERANCE)),
-                    help="allowed fractional slowdown before failing "
-                         f"(default {DEFAULT_TOLERANCE}, env "
+                    help="allowed fractional throughput slowdown before "
+                         f"failing (default {DEFAULT_TOLERANCE}, env "
                          "REPRO_BENCH_TOL)")
+    ap.add_argument("--lat-tolerance", type=float,
+                    default=float(os.environ.get("REPRO_BENCH_LAT_TOL",
+                                                 DEFAULT_LAT_TOLERANCE)),
+                    help="allowed fractional p99 per-token latency "
+                         f"increase before failing (default "
+                         f"{DEFAULT_LAT_TOLERANCE}, env "
+                         "REPRO_BENCH_LAT_TOL)")
     args = ap.parse_args(argv)
     baseline = load_metrics(args.baseline)
     current = load_metrics(args.current)
     if not baseline:
-        print(f"error: no {METRIC} rows in baseline {args.baseline}")
+        print(f"error: no gated-metric rows in baseline {args.baseline}")
         return 2
-    failures, compared = compare(baseline, current, args.tolerance)
+    failures, compared = compare(baseline, current, args.tolerance,
+                                 args.lat_tolerance)
     for line in failures:
         print(f"REGRESSION: {line}")
     if failures:
@@ -97,12 +137,13 @@ def main(argv=None) -> int:
               "intentional, update the baseline per benchmarks/README.md")
         return 1
     if compared == 0:
-        print(f"error: no {METRIC} rows in {args.current} overlap the "
+        print(f"error: no gated metrics in {args.current} overlap the "
               "baseline — the gate compared nothing (metric or row keys "
               "changed?)")
         return 2
-    print(f"bench gate passed: {compared} row(s) within "
-          f"{args.tolerance:.0%} of baseline")
+    print(f"bench gate passed: {compared} metric comparison(s) within "
+          f"tolerance (throughput {args.tolerance:.0%}, latency "
+          f"{args.lat_tolerance:.0%})")
     return 0
 
 

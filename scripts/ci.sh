@@ -19,13 +19,15 @@
 #   scripts/ci.sh tune    — design-space sweep; writes results/tuned_plans.json
 #   scripts/ci.sh serve   — paged-serving smoke: interpret-mode ragged
 #                           prefill + decode through dispatch for a few
-#                           steps, plus BENCH_serve.json throughput rows
-#                           and BENCH_prefill.json kernel-vs-reference rows
-#   scripts/ci.sh bench   — benchmark-regression gate: re-run the serve
-#                           benchmark and fail if decode throughput dropped
-#                           more than the tolerance vs the committed
+#                           steps (static AND continuous schedules), plus
+#                           BENCH_serve.json throughput/latency rows and
+#                           BENCH_prefill.json kernel-vs-reference rows
+#   scripts/ci.sh bench   — benchmark-regression gate: re-run both serve
+#                           benchmark modes and fail if decode throughput
+#                           dropped or p99 per-token latency rose more than
+#                           the tolerances vs the committed
 #                           results/BENCH_serve.json (scripts/check_bench.py;
-#                           REPRO_BENCH_TOL overrides)
+#                           REPRO_BENCH_TOL / REPRO_BENCH_LAT_TOL override)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -72,11 +74,18 @@ case "${1:-smoke}" in
     python -m repro.launch.serve --arch gemma-2b --smoke --cache paged \
       --dispatch kernels --slots 2 --requests 3 --prompt-len 6 \
       --max-new 4 --max-len 32 --page-size 8
+    python -m repro.launch.serve --arch gemma-2b --smoke --cache paged \
+      --schedule continuous --dispatch kernels --slots 2 --requests 3 \
+      --prompt-len 6 --max-new 4 --max-len 32 --page-size 4 --clock tick
     python benchmarks/run.py --serve --serve-dispatch kernels
+    python benchmarks/run.py --serve-continuous --serve-dispatch kernels
     python benchmarks/run.py --prefill
     ;;
   bench)
+    rm -f results/BENCH_serve_current.json
     python benchmarks/run.py --serve --serve-dispatch kernels \
+      --serve-out results/BENCH_serve_current.json
+    python benchmarks/run.py --serve-continuous --serve-dispatch kernels \
       --serve-out results/BENCH_serve_current.json
     python scripts/check_bench.py \
       --baseline results/BENCH_serve.json \

@@ -8,27 +8,36 @@ Two cache layouts behind one CLI (``--cache {dense,paged}``):
 * ``paged`` — the serving runtime this module is really about.  The KV
   cache is a pool of fixed-size pages (paper §4.3 memory banking); a
   host-side scheduler does admission control (a request is admitted only
-  when its whole lifetime's pages can be reserved), chunked prefill (one
-  page-sized chunk per forward — the Pallas ragged multi-token kernel
-  via ``dispatch.prefill_attention``, §2.1.4 cross-input interleaving
-  against decode), batched decode over ragged lengths (every slot at its
-  own position, the Pallas ragged kernel via
-  ``dispatch.decode_attention``), sliding-window page reclamation (fully
-  windowed stacks free pages wholly behind ``lengths - window``
-  mid-request), and slot recycling (finished sequences return their
-  pages to the free list).  The split mirrors Chi et al.'s task-parallel
-  decoupling: the scheduler computes addresses (page tables), the
-  kernels only ever see dense tiles.
+  when its whole lifetime's pages can be reserved), chunked prefill (the
+  Pallas ragged multi-token kernel via ``dispatch.prefill_attention``,
+  §2.1.4 cross-input interleaving against decode), batched decode over
+  ragged lengths (every slot at its own position, the Pallas ragged
+  kernel via ``dispatch.decode_attention``), sliding-window page
+  reclamation (fully windowed stacks free pages wholly behind
+  ``lengths - window`` mid-request), and slot recycling (finished
+  sequences return their pages to the free list).  The split mirrors
+  Chi et al.'s task-parallel decoupling: the scheduler computes
+  addresses (page tables), the kernels only ever see dense tiles.
+
+Two paged schedules (``--schedule {static,continuous}``):
+
+* ``static`` — ``PagedScheduler.run``: admit a static request list,
+  whole-prompt prefill on admission, decode rounds to completion.
+* ``continuous`` — ``launch/engine.ContinuousEngine``: requests arrive
+  on a virtual clock (``launch/loadgen``), each iteration composes a
+  mix of multi-slot prefill chunks (one BATCHED ``prefill_attention``
+  forward, B > 1) and decode steps under a token budget, and
+  ``launch/metrics`` records TTFT + per-token latency percentiles.
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --smoke \\
-      --cache paged --dispatch kernels --requests 8 --max-new 16
+      --cache paged --schedule continuous --dispatch kernels \\
+      --requests 8 --max-new 16 --rate 4
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
 import time
-from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
 import jax
@@ -38,27 +47,21 @@ import numpy as np
 from ..configs import get_arch
 from ..core.memory import DtypePolicy
 from ..models.transformer import ExecOptions, Model, paged_supported
+from .loadgen import Request  # noqa: F401  (re-export: the historical home)
 
 DEFAULT_PAGE_SIZE = 64
-
-
-@dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray
-    max_new: int
-    out: List[int] = field(default_factory=list)
-    done: bool = False
 
 
 class Server:
     """Fixed-slot continuous-batching decoder (dense rectangular cache)."""
 
-    def __init__(self, model: Model, params, *, slots: int, max_len: int):
+    def __init__(self, model: Model, params, *, slots: int, max_len: int,
+                 log=print):
         self.model = model
         self.params = params
         self.slots = slots
         self.max_len = max_len
+        self.log = log or (lambda *a, **k: None)
         self.cache = model.init_cache(slots, max_len)
         self.active: List[Optional[Request]] = [None] * slots
         self.pos = 0
@@ -169,7 +172,7 @@ class PagedScheduler:
     """Admission, chunked prefill, batched ragged decode, slot recycling."""
 
     def __init__(self, model: Model, params, *, slots: int, max_len: int,
-                 page_size: int = 0, total_pages: int = 0):
+                 page_size: int = 0, total_pages: int = 0, log=print):
         if not paged_supported(model.cfg):
             raise ValueError(
                 f"arch {model.cfg.name} has recurrent/stateful layers; "
@@ -179,6 +182,7 @@ class PagedScheduler:
         self.params = params
         self.slots = slots
         self.max_len = max_len
+        self.log = log or (lambda *a, **k: None)
         self.page = page_size or model.cfg.kv_page_size or pick_page_size()
         self.n_slot_pages = -(-max_len // self.page)
         total = total_pages or 1 + slots * self.n_slot_pages
@@ -199,6 +203,8 @@ class PagedScheduler:
         self.prefill_tokens = 0
         self.decode_steps = 0
         self.decode_tokens = 0
+        self.rejected = 0                 # inadmissible requests, counted
+        self.rejected_requests: List[Request] = []
         self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
         self._prefill = jax.jit(model.prefill_step_paged,
                                 donate_argnums=(1,))
@@ -213,10 +219,13 @@ class PagedScheduler:
         return self.pages_needed(r) <= min(self.n_slot_pages,
                                            self.alloc.total - 1)
 
-    def try_admit(self, r: Request, slot: int) -> bool:
+    def reserve(self, r: Request, slot: int) -> bool:
         """Reserve the request's whole-lifetime pages up front (admission
-        control: a request never stalls mid-decode on an empty free list),
-        then chunk-prefill its prompt into them."""
+        control: a request never stalls mid-decode on an empty free
+        list) and bind it to ``slot``.  Prefill is the caller's business:
+        the static path prefills the whole prompt immediately
+        (``try_admit``), the continuous engine spreads chunks across
+        iterations."""
         need = self.pages_needed(r)
         if need > self.n_slot_pages or self.alloc.available() < need:
             return False
@@ -225,10 +234,18 @@ class PagedScheduler:
         self.reclaimed[slot] = 0
         self.table[slot] = 0
         self.table[slot, :need] = pages
+        self.lengths[slot] = 0
+        self.active[slot] = r
+        return True
+
+    def try_admit(self, r: Request, slot: int) -> bool:
+        """Static-schedule admission: reserve, then chunk-prefill the
+        whole prompt to completion."""
+        if not self.reserve(r, slot):
+            return False
         first = self._prefill_prompt(r, slot)
         self.lengths[slot] = len(r.prompt)
         r.out.append(first)
-        self.active[slot] = r
         self._reclaim_slot(slot)    # long prompts can outrun the window
         return True
 
@@ -301,24 +318,32 @@ class PagedScheduler:
         self.active[slot] = None
 
     # --------------------------------------------------------------- decode
-    def _feed_batch(self, tokens: np.ndarray) -> Dict[str, jax.Array]:
+    def _feed_batch(self, tokens: np.ndarray,
+                    lengths: np.ndarray) -> Dict[str, jax.Array]:
         batch = {"tokens": jnp.asarray(tokens)[:, None]}
         if self.model.cfg.mrope_sections:
             batch["positions"] = jnp.broadcast_to(
-                jnp.asarray(self.lengths)[:, None, None],
+                jnp.asarray(lengths)[:, None, None],
                 (self.slots, 1, len(self.model.cfg.mrope_sections))
             ).astype(jnp.int32)
         return batch
 
-    def step(self, tokens: np.ndarray) -> np.ndarray:
+    def step(self, tokens: np.ndarray, view=None) -> np.ndarray:
         """One batched ragged decode step: every active slot advances at
-        its own length; inactive slots ride along masked (trash page)."""
+        its own length; inactive slots ride along masked (trash page).
+
+        ``view`` = (lengths, table) overrides the scheduler's canonical
+        arrays — the continuous engine masks mid-prefill slots to zero
+        length and the trash page so their ride-along writes are inert.
+        """
+        lengths, table = view if view is not None \
+            else (self.lengths, self.table)
         logits, self.cache = self._decode(
-            self.params, self.cache, self._feed_batch(tokens),
+            self.params, self.cache, self._feed_batch(tokens, lengths),
             jnp.int32(0),
-            (jnp.asarray(self.lengths), jnp.asarray(self.table)))
+            (jnp.asarray(lengths), jnp.asarray(table)))
         self.decode_steps += 1
-        self.decode_tokens += int(sum(r is not None for r in self.active))
+        self.decode_tokens += int(np.count_nonzero(lengths))
         return np.asarray(jnp.argmax(logits, axis=-1))
 
     def run(self, requests: List[Request]) -> List[Request]:
@@ -339,9 +364,11 @@ class PagedScheduler:
                     while queue and not self.admissible(queue[0]):
                         r = queue.pop(0)
                         r.done = False
-                        print(f"[paged] rejecting request {r.rid}: needs "
-                              f"{self.pages_needed(r)} pages "
-                              f"(> {self.n_slot_pages}/slot or pool)")
+                        self.rejected += 1
+                        self.rejected_requests.append(r)
+                        self.log(f"[paged] rejecting request {r.rid}: "
+                                 f"needs {self.pages_needed(r)} pages "
+                                 f"(> {self.n_slot_pages}/slot or pool)")
                     if not queue or not self.try_admit(queue[0], i):
                         blocked = True             # wait for free pages
                         break
@@ -401,6 +428,24 @@ def main(argv=None):
                     choices=("auto", "kernels", "reference"),
                     help="kernel routing for every hot matmul/attention "
                          "(repro.kernels.dispatch)")
+    ap.add_argument("--schedule", default="static",
+                    choices=("static", "continuous"),
+                    help="paged scheduling: static run-to-completion or "
+                         "continuous batching on a virtual arrival clock")
+    ap.add_argument("--token-budget", type=int, default=0,
+                    help="continuous: max tokens composed per iteration "
+                         "(0 = slots x page_size)")
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="continuous: Poisson arrival rate in requests "
+                         "per clock unit (0 = burst at t=0)")
+    ap.add_argument("--clock", default="wall", choices=("wall", "tick"),
+                    help="continuous: virtual clock advances by measured "
+                         "step wall time or a fixed tick")
+    ap.add_argument("--tick", type=float, default=1.0,
+                    help="continuous: clock increment per iteration in "
+                         "tick mode")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="load-generator seed (arrivals + prompt tokens)")
     args = ap.parse_args(argv)
 
     from ..kernels import dispatch
@@ -430,17 +475,53 @@ def main(argv=None):
         server = Server(model, params, slots=args.slots,
                         max_len=args.max_len)
 
-    rng = np.random.default_rng(0)
-    reqs = [Request(i, rng.integers(0, cfg.vocab_size, args.prompt_len),
-                    args.max_new) for i in range(args.requests)]
-    dispatch.reset_stats()
-    t0 = time.time()
-    done = server.run(reqs)
-    dt = time.time() - t0
-    total_new = sum(len(r.out) for r in done)
-    print(f"served {len(done)} requests, {total_new} new tokens "
-          f"in {dt:.2f}s ({total_new/dt:.1f} tok/s, {args.slots} slots, "
-          f"cache={args.cache})")
+    if args.schedule == "continuous":
+        if args.cache != "paged":
+            raise SystemExit("--schedule continuous requires --cache paged")
+        from .engine import ContinuousEngine
+        from .loadgen import poisson_stream
+        reqs = poisson_stream(args.requests, rate=args.rate,
+                              vocab_size=cfg.vocab_size,
+                              prompt_len=args.prompt_len,
+                              max_new=args.max_new, seed=args.seed)
+        engine = ContinuousEngine(server, token_budget=args.token_budget,
+                                  clock=args.clock, tick=args.tick)
+        # route counters tick at trace time, so reset BEFORE warmup: the
+        # warmup compiles (every prefill width + masked decode) are exactly
+        # the routes the run then executes from cache
+        dispatch.reset_stats()
+        engine.warmup()
+        t0 = time.time()
+        done = engine.run(reqs)
+        dt = time.time() - t0
+        s = engine.metrics.summary()
+        ex = engine.executor
+        total_new = sum(len(r.out) for r in done)
+        print(f"served {len(done)} requests, {total_new} new tokens "
+              f"in {dt:.2f}s ({total_new/dt:.1f} tok/s, {args.slots} "
+              f"slots, schedule=continuous, "
+              f"budget={engine.policy.token_budget})")
+        print(f"[engine] iterations={engine.iterations} "
+              f"prefill_calls={ex.prefill_calls} "
+              f"max_prefill_batch={ex.max_prefill_batch} "
+              f"rejected={server.rejected}")
+        fmt = lambda v: "n/a" if v is None else f"{v:.4f}"
+        print(f"[engine] ttft p50={fmt(s['ttft_p50'])} "
+              f"p99={fmt(s['ttft_p99'])}  tok_latency "
+              f"p50={fmt(s['tok_latency_p50'])} "
+              f"p99={fmt(s['tok_latency_p99'])} ({args.clock} clock)")
+    else:
+        rng = np.random.default_rng(args.seed)
+        reqs = [Request(i, rng.integers(0, cfg.vocab_size, args.prompt_len),
+                        args.max_new) for i in range(args.requests)]
+        dispatch.reset_stats()
+        t0 = time.time()
+        done = server.run(reqs)
+        dt = time.time() - t0
+        total_new = sum(len(r.out) for r in done)
+        print(f"served {len(done)} requests, {total_new} new tokens "
+              f"in {dt:.2f}s ({total_new/dt:.1f} tok/s, {args.slots} "
+              f"slots, cache={args.cache})")
     if args.cache == "paged" and server.window:
         print(f"[paged] reclaimed {server.pages_reclaimed} window-dead "
               f"page(s) (window={server.window})")

@@ -303,34 +303,37 @@ def attention_decode_paged(p: Params, s: AttnSpec, x: jax.Array,
 
 
 def attention_prefill_paged(p: Params, s: AttnSpec, x: jax.Array,
-                            start: jax.Array, table_row: jax.Array,
+                            starts: jax.Array, tables: jax.Array,
                             k_pages: jax.Array, v_pages: jax.Array,
                             dt: DtypePolicy,
                             positions_override: Optional[jax.Array] = None
                             ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """Chunked prefill: one page-aligned chunk of one slot's prompt.
+    """Chunked prefill: one page-aligned chunk each from B DISTINCT slots.
 
-    x: (1, C, d) with C == page_size (the chunk fills exactly one page;
-    the caller pads the final partial chunk — padded positions are never
+    x: (B, C, d) with C == page_size (each chunk fills exactly one page;
+    the caller pads final partial chunks — padded positions are never
     read back because every later attention masks kpos >= length).
-    start: scalar int32 page-aligned chunk offset; table_row: (n_pages,)
-    the slot's page ids.  Chunk queries attend causally over the cached
-    history plus the chunk itself.  Returns (out (1,C,d), pools).
+    starts: (B,) int32 page-aligned chunk offsets; tables: (B, n_pages)
+    each slot's page ids.  Chunk b's queries sit at ``starts[b] + [0, C)``
+    and attend causally over that slot's cached history plus the chunk
+    itself.  Slots must be distinct (each chunk writes its own physical
+    page).  Returns (out (B,C,d), pools).
     """
-    _, c, _ = x.shape
+    b, c, _ = x.shape
     page = k_pages.shape[1]
     positions = (positions_override if positions_override is not None
-                 else (start + jnp.arange(c))[None, :].astype(jnp.int32))
+                 else (starts[:, None] + jnp.arange(c)[None, :]
+                       ).astype(jnp.int32))
     q, k, v = _qkv(p, s, x, positions, dt)
-    pid = table_row[start // page]
-    k_pages = k_pages.at[pid].set(k[0].astype(k_pages.dtype))
-    v_pages = v_pages.at[pid].set(v[0].astype(v_pages.dtype))
-    # multi-token ragged prefill through dispatch: the chunk's queries
+    pid = tables[jnp.arange(b), starts // page]
+    k_pages = k_pages.at[pid].set(k.astype(k_pages.dtype))
+    v_pages = v_pages.at[pid].set(v.astype(v_pages.dtype))
+    # multi-token ragged prefill through dispatch: each chunk's queries
     # attend causally over the cached history plus the chunk itself (just
     # written into its page); GQA grouping happens inside the kernel /
     # reference, so the pools stay at Hkv heads end-to-end
     out = dispatch.prefill_attention(
-        q, k_pages, v_pages, table_row[None], jnp.reshape(start, (1,)),
+        q, k_pages, v_pages, tables, starts,
         window=s.window, softcap=s.softcap, accum_dtype=dt.accum,
         out_dtype=dt.compute, policy=s.dispatch)
     return _out_proj(p, s, out, dt), k_pages, v_pages

@@ -291,11 +291,12 @@ def layer_cache_init_paged(cfg: ArchConfig, kind: LayerKind, slots: int,
 
 def layer_prefill_paged(p: Params, cfg: ArchConfig, kind: LayerKind,
                         x: jax.Array, cache: Dict[str, Any],
-                        start: jax.Array, table_row: jax.Array,
+                        starts: jax.Array, tables: jax.Array,
                         dt: DtypePolicy, positions_override=None,
                         opts: Optional[ExecOptions] = None
                         ) -> Tuple[jax.Array, Dict[str, Any]]:
-    """One page-aligned prompt chunk of one slot through one layer.
+    """One page-aligned prompt chunk each of B distinct slots through one
+    layer (x (B, C, d), starts (B,), tables (B, n_pages)).
 
     Only attention mixers support chunked prefill (recurrent mixers would
     need a carried-state sequence scan — the serve scheduler falls back to
@@ -308,7 +309,7 @@ def layer_prefill_paged(p: Params, cfg: ArchConfig, kind: LayerKind,
         spec = _attn_spec(cfg, mixer)
         h, new_cache["k_pages"], new_cache["v_pages"] = \
             layers.attention_prefill_paged(
-                p["attn"], spec, h, start, table_row,
+                p["attn"], spec, h, starts, tables,
                 cache["k_pages"], cache["v_pages"], dt,
                 positions_override=positions_override)
     else:
@@ -626,28 +627,40 @@ class Model:
         return out
 
     def prefill_step_paged(self, params: Params, cache,
-                           tokens: jax.Array, start: jax.Array,
-                           table_row: jax.Array, last_idx: jax.Array):
-        """One page-aligned prompt chunk of ONE slot through the stack.
+                           tokens: jax.Array, starts: jax.Array,
+                           tables: jax.Array, last_idx: jax.Array):
+        """One page-aligned prompt chunk each of B DISTINCT slots through
+        the stack — the continuous-batching engine's multi-slot prefill.
 
-        tokens: (1, C) with C == page_size; start: scalar int32 chunk
-        offset (page-aligned); table_row: (n_pages,) the slot's page ids;
-        last_idx: scalar index of the last REAL prompt token within this
+        tokens: (B, C) with C == page_size; starts: (B,) int32 chunk
+        offsets (page-aligned); tables: (B, n_pages) each slot's page ids;
+        last_idx: (B,) index of the last REAL prompt token within each
         chunk (the final, possibly padded, chunk wants its logits).
-        Returns (logits (1, V) at last_idx, cache).
+        The legacy single-slot convention (scalar ``starts``/``last_idx``,
+        1-D ``tables``) is normalized to B == 1.
+        Returns (logits (B, V) at last_idx, cache).
         """
         cfg, dt, lay, opts = self.cfg, self.dt, self.layout, self.opts
-        c = tokens.shape[1]
+        starts = jnp.asarray(starts)
+        tables = jnp.asarray(tables)
+        last_idx = jnp.asarray(last_idx)
+        if starts.ndim == 0:
+            starts = starts[None]
+        if tables.ndim == 1:
+            tables = tables[None]
+        if last_idx.ndim == 0:
+            last_idx = last_idx[None]
+        b, c = tokens.shape
         x = self._embed(params, {"tokens": tokens})
         pos_override = None
         if cfg.mrope_sections:
             pos_override = jnp.broadcast_to(
-                (start + jnp.arange(c))[None, :, None],
-                (1, c, len(cfg.mrope_sections))).astype(jnp.int32)
+                (starts[:, None] + jnp.arange(c)[None, :])[:, :, None],
+                (b, c, len(cfg.mrope_sections))).astype(jnp.int32)
 
         def one(p, kind, x, c_in):
-            return layer_prefill_paged(p, cfg, kind, x, c_in, start,
-                                       table_row, dt, pos_override,
+            return layer_prefill_paged(p, cfg, kind, x, c_in, starts,
+                                       tables, dt, pos_override,
                                        opts=opts)
 
         new_cache = {"prefix": [], "stack": [], "tail": []}
@@ -674,7 +687,7 @@ class Model:
             x, nc = one(p, kind, x, cc)
             new_cache["tail"].append(nc)
 
-        x_last = jax.lax.dynamic_slice_in_dim(x, last_idx, 1, axis=1)
+        x_last = jnp.take_along_axis(x, last_idx[:, None, None], axis=1)
         return self._logits(params, x_last)[:, 0], new_cache
 
 

@@ -94,3 +94,61 @@ def test_tolerance_is_configurable(tmp_path):
     with pytest.raises(SystemExit):
         check_bench.main(["--baseline", str(base), "--current", str(cur),
                           "--tolerance", "not-a-float"])
+
+
+# ---------------------------------------------------------------- schedule
+
+
+def _continuous_report(decode_tok_s, lat_p99):
+    return {"rows": [
+        {"arch": "gemma-2b-smoke", "cache": "paged",
+         "schedule": "continuous", "decode_tok_s": decode_tok_s,
+         "tok_latency_p99_s": lat_p99},
+    ]}
+
+
+def test_schedule_keys_do_not_collide(tmp_path):
+    """A phased row and a continuous row for the same (arch, cache) are
+    distinct gate keys — merging both modes into one report must not make
+    one row shadow the other."""
+    p = _write(tmp_path, "merged.json", {"rows": [
+        {"arch": "a", "cache": "paged", "decode_tok_s": 1.0},
+        {"arch": "a", "cache": "paged", "schedule": "continuous",
+         "decode_tok_s": 2.0},
+    ]})
+    loaded = check_bench.load_metrics(p)
+    assert loaded[("a", "paged", "phased")]["decode_tok_s"] == 1.0
+    assert loaded[("a", "paged", "continuous")]["decode_tok_s"] == 2.0
+
+
+def test_latency_gate_fails_on_injected_p99_blowup(tmp_path):
+    """The latency ceiling is its own gate: unchanged throughput with a
+    3x p99 per-token latency regression must FAIL."""
+    base = _write(tmp_path, "base.json", _continuous_report(100.0, 0.010))
+    cur = _write(tmp_path, "cur.json", _continuous_report(100.0, 0.030))
+    assert check_bench.main(["--baseline", str(base),
+                             "--current", str(cur)]) == 1
+    failures, compared = check_bench.compare(
+        check_bench.load_metrics(base), check_bench.load_metrics(cur))
+    assert len(failures) == 1 and "tok_latency_p99_s" in failures[0]
+    assert compared == 2         # one throughput + one latency comparison
+
+
+def test_latency_gate_passes_within_its_own_tolerance(tmp_path):
+    base = _write(tmp_path, "base.json", _continuous_report(100.0, 0.010))
+    cur = _write(tmp_path, "cur.json", _continuous_report(100.0, 0.017))
+    assert check_bench.main(["--baseline", str(base),
+                             "--current", str(cur)]) == 0     # +70% < 80%
+    # and the knob is independent of the throughput tolerance
+    worse = _write(tmp_path, "worse.json", _continuous_report(100.0, 0.017))
+    assert check_bench.main(["--baseline", str(base),
+                             "--current", str(worse),
+                             "--lat-tolerance", "0.5"]) == 1
+
+
+def test_latency_gate_env_var_override(tmp_path, monkeypatch):
+    base = _write(tmp_path, "base.json", _continuous_report(100.0, 0.010))
+    cur = _write(tmp_path, "cur.json", _continuous_report(100.0, 0.017))
+    monkeypatch.setenv("REPRO_BENCH_LAT_TOL", "0.5")
+    assert check_bench.main(["--baseline", str(base),
+                             "--current", str(cur)]) == 1

@@ -1,0 +1,121 @@
+"""Load-generator and serving-metrics unit tests (no model involved).
+
+The continuous-batching engine is only as reproducible as its inputs and
+only as honest as its summaries, so these layers get direct coverage:
+seeded stream determinism, trace parsing, arrival-queue ordering, and the
+TTFT / per-token-latency percentile math."""
+import numpy as np
+import pytest
+
+from repro.launch.loadgen import (ArrivalQueue, Request, poisson_stream,
+                                  trace_stream)
+from repro.launch.metrics import ServeMetrics
+
+
+# ------------------------------------------------------------------ loadgen
+def test_poisson_stream_is_seed_deterministic():
+    a = poisson_stream(6, rate=3.0, vocab_size=100, prompt_len=4,
+                       max_new=2, seed=42, prompt_jitter=2)
+    b = poisson_stream(6, rate=3.0, vocab_size=100, prompt_len=4,
+                       max_new=2, seed=42, prompt_jitter=2)
+    assert [r.arrival for r in a] == [r.arrival for r in b]
+    for ra, rb in zip(a, b):
+        np.testing.assert_array_equal(ra.prompt, rb.prompt)
+    c = poisson_stream(6, rate=3.0, vocab_size=100, prompt_len=4,
+                       max_new=2, seed=43, prompt_jitter=2)
+    assert [r.arrival for r in a] != [r.arrival for r in c]
+
+
+def test_poisson_stream_shapes_and_monotone_arrivals():
+    reqs = poisson_stream(8, rate=2.0, vocab_size=50, prompt_len=5,
+                          max_new=3, seed=1, prompt_jitter=3, start_rid=10)
+    assert [r.rid for r in reqs] == list(range(10, 18))
+    arr = [r.arrival for r in reqs]
+    assert arr == sorted(arr) and arr[0] > 0.0
+    assert all(5 <= len(r.prompt) <= 8 for r in reqs)
+    assert all(r.prompt.min() >= 0 and r.prompt.max() < 50 for r in reqs)
+
+
+def test_poisson_rate_zero_is_a_burst():
+    reqs = poisson_stream(4, rate=0.0, vocab_size=50, prompt_len=5,
+                          max_new=3, seed=0)
+    assert all(r.arrival == 0.0 for r in reqs)
+
+
+def test_trace_stream_parses_events():
+    trace = [{"t": 1.5, "prompt_len": 3, "max_new": 2},
+             {"tokens": [7, 8, 9, 10], "max_new": 5},
+             {"t": 0.25, "prompt_len": 2, "max_new": 1}]
+    reqs = trace_stream(trace, vocab_size=20, seed=0)
+    assert [r.rid for r in reqs] == [0, 1, 2]
+    assert [r.arrival for r in reqs] == [1.5, 0.0, 0.25]
+    assert [r.max_new for r in reqs] == [2, 5, 1]
+    np.testing.assert_array_equal(reqs[1].prompt, [7, 8, 9, 10])
+    assert len(reqs[0].prompt) == 3 and reqs[0].prompt.max() < 20
+
+
+def test_arrival_queue_orders_and_pops_ready_prefix():
+    reqs = [Request(0, np.array([1]), 1, arrival=2.0),
+            Request(1, np.array([1]), 1, arrival=0.5),
+            Request(2, np.array([1]), 1, arrival=0.5),   # tie: keep order
+            Request(3, np.array([1]), 1, arrival=5.0)]
+    q = ArrivalQueue(reqs)
+    assert len(q) == 4
+    assert q.next_arrival() == 0.5
+    assert [r.rid for r in q.pop_ready(0.0)] == []
+    assert [r.rid for r in q.pop_ready(1.0)] == [1, 2]   # stable FCFS tie
+    assert q.next_arrival() == 2.0
+    assert [r.rid for r in q.pop_ready(10.0)] == [0, 3]
+    assert len(q) == 0 and q.next_arrival() is None
+
+
+# ------------------------------------------------------------------ metrics
+def test_metrics_ttft_counts_queueing_delay():
+    m = ServeMetrics()
+    m.on_arrival(0, 1.0)
+    m.on_admit(0, 3.0)           # waited 2 units in the queue
+    m.on_token(0, 4.0)           # TTFT = 4.0 - 1.0, NOT 4.0 - 3.0
+    assert m.ttfts() == [3.0]
+
+
+def test_metrics_token_gaps_are_per_request():
+    m = ServeMetrics()
+    for rid, times in ((0, [1.0, 2.0, 4.0]), (1, [10.0, 10.5])):
+        m.on_arrival(rid, 0.0)
+        for t in times:
+            m.on_token(rid, t)
+    # gaps within a request only — never across requests
+    assert sorted(m.token_gaps()) == [0.5, 1.0, 2.0]
+
+
+def test_metrics_percentiles_and_summary():
+    m = ServeMetrics()
+    for rid in range(4):
+        m.on_arrival(rid, float(rid))
+        m.on_token(rid, float(rid) + 1.0)
+        m.on_token(rid, float(rid) + 2.0)
+        m.on_finish(rid, float(rid) + 2.0)
+    m.on_arrival(99, 0.0)
+    m.on_reject(99, 0.0)
+    s = m.summary()
+    assert s["requests_finished"] == 4
+    assert s["requests_rejected"] == 1
+    assert s["new_tokens"] == 8
+    assert s["ttft_p50"] == pytest.approx(1.0)
+    assert s["tok_latency_p50"] == pytest.approx(1.0)
+    assert s["clock_span"] == pytest.approx(5.0)    # first arrival 0 .. 5
+
+
+def test_metrics_empty_summary_is_none_not_nan():
+    s = ServeMetrics().summary()
+    assert s["requests_finished"] == 0
+    assert s["ttft_p50"] is None and s["tok_latency_p99"] is None
+    assert s["clock_span"] is None
+
+
+def test_metrics_percentile_helper():
+    assert ServeMetrics.percentile([], 99) is None
+    assert ServeMetrics.percentile([2.0], 50) == 2.0
+    vals = [1.0, 2.0, 3.0, 4.0]
+    assert ServeMetrics.percentile(vals, 50) == pytest.approx(2.5)
+    assert ServeMetrics.percentile(vals, 99) <= 4.0
