@@ -29,6 +29,14 @@ A key gates only the metrics present on BOTH sides; keys present on one
 side are reported but do not fail (a new benchmark must be able to land
 before its baseline).
 
+One more gate is self-contained in the CURRENT run: when both
+``continuous-share95`` and ``continuous-share0`` rows are present for an
+(arch, cache), the 95%-shared-prefix scenario must strictly beat the
+0%-sharing scenario on ``max_resident`` (requests resident per page
+pool) and ``prefill_tok_s_effective`` (prompt tokens served per prefill
+second) — the two wins prefix sharing exists to deliver.  No tolerance:
+sharing that doesn't help is a regression of the feature itself.
+
 Updating the baseline (after an intentional perf change or a new
 machine): re-run the benchmark writing straight to the baseline path and
 commit the result — see benchmarks/README.md ("Benchmark-regression
@@ -47,6 +55,7 @@ DEFAULT_TOLERANCE = 0.45
 DEFAULT_LAT_TOLERANCE = 0.8
 FLOOR_METRIC = "decode_tok_s"       # higher is better
 CEIL_METRIC = "tok_latency_p99_s"   # lower is better
+SHARE_METRICS = ("max_resident", "prefill_tok_s_effective")  # higher wins
 
 Key = Tuple[str, str, str]
 
@@ -58,7 +67,8 @@ def load_metrics(path) -> Dict[Key, Dict[str, float]]:
     for row in data.get("rows", []):
         key = (row.get("arch", "?"), row.get("cache", "?"),
                row.get("schedule", "phased"))
-        metrics = {m: float(row[m]) for m in (FLOOR_METRIC, CEIL_METRIC)
+        metrics = {m: float(row[m])
+                   for m in (FLOOR_METRIC, CEIL_METRIC) + SHARE_METRICS
                    if row.get(m) is not None}
         if metrics:
             out[key] = metrics
@@ -105,6 +115,30 @@ def compare(baseline: Dict[Key, Dict[str, float]],
     return failures, compared
 
 
+def compare_sharing(current: Dict[Key, Dict[str, float]]
+                    ) -> Tuple[List[str], int]:
+    """Prefix-sharing win gate, baseline-free: share95 must strictly beat
+    share0 (same arch/cache, same current run) on every SHARE_METRICS."""
+    failures, compared = [], 0
+    for arch, cache, schedule in sorted(current):
+        if schedule != "continuous-share95":
+            continue
+        lo_key = (arch, cache, "continuous-share0")
+        if lo_key not in current:
+            continue
+        hi, lo = current[(arch, cache, schedule)], current[lo_key]
+        for metric in SHARE_METRICS:
+            if metric not in hi or metric not in lo:
+                continue
+            compared += 1
+            if hi[metric] <= lo[metric]:
+                failures.append(
+                    f"{arch}/{cache}: share95 {metric} {hi[metric]:.2f} "
+                    f"<= share0 {lo[metric]:.2f} — prefix sharing "
+                    f"delivered no {metric} gain")
+    return failures, compared
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--baseline", default="results/BENCH_serve.json")
@@ -130,6 +164,9 @@ def main(argv=None) -> int:
         return 2
     failures, compared = compare(baseline, current, args.tolerance,
                                  args.lat_tolerance)
+    share_failures, share_compared = compare_sharing(current)
+    failures += share_failures
+    compared += share_compared
     for line in failures:
         print(f"REGRESSION: {line}")
     if failures:

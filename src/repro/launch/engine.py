@@ -53,10 +53,13 @@ class StepPlan:
 @dataclass
 class _PrefillState:
     """A slot's in-flight chunked prefill: page-padded prompt tokens,
-    the true prompt length, and the next chunk's offset."""
+    the true prompt length, and the next chunk's offset.  ``pos`` starts
+    at ``skipped`` when a prefix-cache hit covered the leading chunks
+    (their pages already hold valid K/V — nothing to compute)."""
     toks: np.ndarray
     ln: int
     pos: int = 0
+    skipped: int = 0
 
 
 class BatchPolicy:
@@ -70,6 +73,13 @@ class BatchPolicy:
     prefill parallelism comes from.  A budget smaller than one page
     still forces a chunk through when nothing is decoding, so admission
     can never livelock.
+
+    Decode-first precedence is strict: the running decode set is never
+    trimmed to fit the budget (stalling a mid-generation slot would just
+    move its token to the next iteration while holding its pages), so
+    when decodes alone meet or exceed the budget the remaining prefill
+    allowance clamps to zero rather than going negative — the budget
+    bounds *prefill admission*, decode cost is bounded by ``slots``.
     """
 
     def __init__(self, token_budget: int, page: int):
@@ -79,7 +89,7 @@ class BatchPolicy:
     def compose(self, running: List[int],
                 prefilling: List[Tuple[int, int]]) -> StepPlan:
         decode = list(running)
-        left = self.token_budget - len(decode)
+        left = max(0, self.token_budget - len(decode))
         chunks: List[Tuple[int, int]] = []
         for slot, start in prefilling:
             if left < self.page:
@@ -131,6 +141,7 @@ class StepExecutor:
         idle) ride along with a zero length and an all-trash table view,
         so their masked writes can never touch a live page."""
         sched = self.sched
+        sched.prepare_decode(decode_slots)   # copy-on-write sweep first
         mask = np.zeros((sched.slots,), bool)
         mask[decode_slots] = True
         lengths = np.where(mask, sched.lengths, 0).astype(np.int32)
@@ -173,6 +184,7 @@ class ContinuousEngine:
         self.done: List[Request] = []
         self.admission_order: List[int] = []
         self.iterations = 0
+        self.max_resident = 0
 
     # ------------------------------------------------------------- warmup
     def warmup(self) -> None:
@@ -204,9 +216,8 @@ class ContinuousEngine:
             sched.rejected += 1
             sched.rejected_requests.append(r)
             self.metrics.on_reject(r.rid, now)
-            self.log(f"[engine] rejecting request {r.rid}: needs "
-                     f"{sched.pages_needed(r)} pages "
-                     f"(> {sched.n_slot_pages}/slot or pool)")
+            self.log(f"[engine] rejecting request {r.rid}: "
+                     f"{sched._reject_reason(r)}")
         self.waiting = keep
         for slot in range(sched.slots):
             if not self.waiting:
@@ -217,11 +228,40 @@ class ContinuousEngine:
                 break                      # FCFS: never bypass the head
             r = self.waiting.pop(0)
             ln = len(r.prompt)
-            toks = np.zeros((-(-ln // sched.page) * sched.page,), np.int32)
-            toks[:ln] = r.prompt
-            self.states[slot] = _PrefillState(toks, ln)
+            shared = int(sched.shared_tokens[slot])
+            if shared >= ln:
+                # Fully covered by the prefix cache: every prompt position
+                # already has valid K/V in shared pages, so no prefill
+                # forward runs at all.  The slot goes straight to running
+                # with lengths = ln-1 and the last prompt token teacher-
+                # forced through the next batched decode — that decode's
+                # append lands mid-page in a shared page and copy-on-
+                # writes it (reserve stashed the spare page).
+                sched.lengths[slot] = ln - 1
+                self.cur[slot] = int(r.prompt[ln - 1])
+                self.states[slot] = None
+            else:
+                # Partial coverage is page-aligned (trie matches whole
+                # chunks), so prefill resumes at the first uncovered chunk.
+                toks = np.zeros((-(-ln // sched.page) * sched.page,),
+                                np.int32)
+                toks[:ln] = r.prompt
+                self.states[slot] = _PrefillState(toks, ln, pos=shared,
+                                                  skipped=shared)
             self.admission_order.append(r.rid)
             self.metrics.on_admit(r.rid, now)
+
+    def _maybe_truncate(self, r: Request, slot: int) -> None:
+        """Called at finish time: a request stopped by the context wall
+        rather than its own ``max_new`` is truncated — flagged, counted,
+        logged, never silent."""
+        r.truncated = len(r.out) < r.max_new
+        if r.truncated:
+            self.sched.truncated += 1
+            self.metrics.on_truncate(r.rid)
+            self.log(f"[engine] truncating request {r.rid} at the context "
+                     f"wall: {len(r.out)}/{r.max_new} tokens "
+                     f"(max_len={self.sched.max_len})")
 
     def _finish(self, slot: int, t: float) -> None:
         r = self.sched.active[slot]
@@ -241,6 +281,9 @@ class ContinuousEngine:
                 self.metrics.on_arrival(r.rid, r.arrival)
                 self.waiting.append(r)
         self._admit(now)
+        self.max_resident = max(
+            self.max_resident,
+            sum(1 for a in sched.active if a is not None))
 
         running = [i for i in range(sched.slots)
                    if sched.active[i] is not None and self.states[i] is None]
@@ -281,13 +324,16 @@ class ContinuousEngine:
             # last chunk: the first generated token is born (TTFT moment)
             r = sched.active[slot]
             sched.lengths[slot] = st.ln
-            sched.prefill_tokens += st.ln
+            sched.prefill_tokens += st.ln - st.skipped
+            sched.cache_prefix(slot, r.prompt)
             first = int(np.argmax(logits[row]))
             r.out.append(first)
             self.cur[slot] = first
             self.metrics.on_token(r.rid, t)
             self.states[slot] = None
-            if len(r.out) >= r.max_new:
+            if (len(r.out) >= r.max_new
+                    or int(sched.lengths[slot]) >= sched.max_len):
+                self._maybe_truncate(r, slot)
                 self._finish(slot, t)
             else:
                 sched._reclaim_slot(slot)   # long prompts outrun the window
@@ -300,7 +346,8 @@ class ContinuousEngine:
             self.cur[slot] = tok
             self.metrics.on_token(r.rid, t)
             if (len(r.out) >= r.max_new
-                    or int(sched.lengths[slot]) >= sched.max_len - 1):
+                    or int(sched.lengths[slot]) >= sched.max_len):
+                self._maybe_truncate(r, slot)
                 self._finish(slot, t)
             else:
                 sched._reclaim_slot(slot)

@@ -34,18 +34,33 @@ class Request:
     out: List[int] = field(default_factory=list)
     done: bool = False
     arrival: float = 0.0
+    truncated: bool = False    # finished by the context wall, not max_new
 
 
 def poisson_stream(n: int, *, rate: float, vocab_size: int,
                    prompt_len: int, max_new: int, seed: int = 0,
-                   prompt_jitter: int = 0, start_rid: int = 0
+                   prompt_jitter: int = 0, start_rid: int = 0,
+                   shared_prefix_len: int = 0, shared_frac: float = 0.0
                    ) -> List[Request]:
     """``n`` seeded Poisson arrivals at ``rate`` requests per clock unit.
 
     ``prompt_jitter`` adds a uniform 0..jitter extension to each prompt
     length (ragged traffic); ``rate == 0`` puts every arrival at t = 0.
+
+    ``shared_prefix_len`` > 0 models system/tool-prompt reuse: one common
+    prefix of that length is drawn once per stream, and each request
+    independently carries it with probability ``shared_frac`` (its unique
+    tokens fill the remaining ``prompt_len - shared_prefix_len``
+    positions).  The default (0, 0.0) draws exactly the same streams as
+    before — the extra rng calls only happen when a prefix is configured.
     """
+    if shared_prefix_len > prompt_len:
+        raise ValueError(
+            f"shared_prefix_len {shared_prefix_len} > prompt_len "
+            f"{prompt_len}")
     rng = np.random.default_rng(seed)
+    prefix = (rng.integers(0, vocab_size, shared_prefix_len)
+              if shared_prefix_len > 0 else None)
     t = 0.0
     reqs: List[Request] = []
     for i in range(n):
@@ -53,19 +68,24 @@ def poisson_stream(n: int, *, rate: float, vocab_size: int,
             t += float(rng.exponential(1.0 / rate))
         ln = prompt_len + (int(rng.integers(0, prompt_jitter + 1))
                            if prompt_jitter else 0)
-        reqs.append(Request(start_rid + i,
-                            rng.integers(0, vocab_size, ln),
-                            max_new, arrival=t))
+        if prefix is not None and float(rng.random()) < shared_frac:
+            tail = rng.integers(0, vocab_size, ln - shared_prefix_len)
+            prompt = np.concatenate([prefix, tail])
+        else:
+            prompt = rng.integers(0, vocab_size, ln)
+        reqs.append(Request(start_rid + i, prompt, max_new, arrival=t))
     return reqs
 
 
 def trace_stream(trace: Iterable[Mapping], *, vocab_size: int,
-                 seed: int = 0) -> List[Request]:
+                 seed: int = 0, start_rid: int = 0) -> List[Request]:
     """Trace-driven arrivals: one event per request.
 
     Each event is a mapping with ``t`` (arrival time, default 0.0),
     ``max_new``, and either explicit ``tokens`` or a ``prompt_len`` whose
-    tokens are drawn from the seeded rng.
+    tokens are drawn from the seeded rng.  ``start_rid`` offsets the
+    assigned rids so several streams can be mixed without collisions
+    (``ServeMetrics.timelines`` and :class:`ArrivalQueue` key on rid).
     """
     rng = np.random.default_rng(seed)
     reqs: List[Request] = []
@@ -74,7 +94,7 @@ def trace_stream(trace: Iterable[Mapping], *, vocab_size: int,
             prompt = np.asarray(ev["tokens"], np.int64)
         else:
             prompt = rng.integers(0, vocab_size, int(ev["prompt_len"]))
-        reqs.append(Request(i, prompt, int(ev["max_new"]),
+        reqs.append(Request(start_rid + i, prompt, int(ev["max_new"]),
                             arrival=float(ev.get("t", 0.0))))
     return reqs
 
@@ -91,6 +111,12 @@ class ArrivalQueue:
     def __init__(self, requests: Iterable[Request]):
         self._pending: List[Request] = sorted(requests,
                                               key=lambda r: r.arrival)
+        rids = [r.rid for r in self._pending]
+        if len(set(rids)) != len(rids):
+            dups = sorted({r for r in rids if rids.count(r) > 1})
+            raise ValueError(
+                f"duplicate request rids in stream: {dups} "
+                "(mixing streams? pass start_rid to the generators)")
         self._i = 0
 
     def __len__(self) -> int:

@@ -37,6 +37,7 @@ class ServeMetrics:
     def __init__(self):
         self.timelines: Dict[int, RequestTimeline] = {}
         self.rejected: List[int] = []
+        self.truncated: List[int] = []
 
     def _tl(self, rid: int, t: float = 0.0) -> RequestTimeline:
         if rid not in self.timelines:
@@ -61,6 +62,9 @@ class ServeMetrics:
     def on_reject(self, rid: int, t: float) -> None:
         self._tl(rid, t)
         self.rejected.append(rid)
+
+    def on_truncate(self, rid: int) -> None:
+        self.truncated.append(rid)
 
     # ----------------------------------------------------------- summaries
     def ttfts(self) -> List[float]:
@@ -93,6 +97,7 @@ class ServeMetrics:
         return {
             "requests_finished": len(finished),
             "requests_rejected": len(self.rejected),
+            "requests_truncated": len(self.truncated),
             "new_tokens": new_tokens,
             "ttft_p50": self.percentile(ttfts, 50),
             "ttft_p99": self.percentile(ttfts, 99),

@@ -48,6 +48,7 @@ from ..configs import get_arch
 from ..core.memory import DtypePolicy
 from ..models.transformer import ExecOptions, Model, paged_supported
 from .loadgen import Request  # noqa: F401  (re-export: the historical home)
+from .prefix import PrefixCache
 
 DEFAULT_PAGE_SIZE = 64
 
@@ -65,6 +66,9 @@ class Server:
         self.cache = model.init_cache(slots, max_len)
         self.active: List[Optional[Request]] = [None] * slots
         self.pos = 0
+        self.truncated = 0                # requests cut short at the wall
+        self.rejected = 0                 # unserved at the wall, counted
+        self.rejected_requests: List[Request] = []
         self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
 
     def _feed_batch(self, tokens: np.ndarray) -> Dict[str, jax.Array]:
@@ -107,10 +111,35 @@ class Server:
                     cur[i] = nxt[i]
                     if len(r.out) >= r.max_new or self.pos >= self.max_len - 1:
                         r.done = True
+                        r.truncated = len(r.out) < r.max_new
+                        if r.truncated:
+                            self.truncated += 1
                         done.append(r)
                         self.active[i] = None
             if self.pos >= self.max_len - 1:
                 break
+        # context wall: the shared ``pos`` hit max_len with work still in
+        # flight.  Requests caught mid-prompt (or mid-generation) are
+        # returned flagged — not silently dropped from ``active`` — and
+        # requests never admitted are counted as rejected, mirroring the
+        # paged scheduler's rejection accounting.
+        for i, r in enumerate(self.active):
+            if r is None:
+                continue
+            r.done = True
+            r.truncated = True
+            self.truncated += 1
+            done.append(r)
+            self.active[i] = None
+            self.log(f"[dense] truncating request {r.rid} at the "
+                     f"context wall (max_len={self.max_len}, "
+                     f"{len(r.out)} tokens out)")
+        for r in queue:
+            r.done = False
+            self.rejected += 1
+            self.rejected_requests.append(r)
+            self.log(f"[dense] rejecting request {r.rid}: context wall "
+                     f"reached before admission (max_len={self.max_len})")
         return done
 
 
@@ -119,29 +148,64 @@ class Server:
 # --------------------------------------------------------------------------
 
 class PageAllocator:
-    """Host-side free list over the shared page pool.
+    """Host-side refcounted free list over the shared page pool.
 
     Physical page 0 is reserved as the TRASH page: inactive slots' tables
     point every logical page at it, so their masked decode writes can
     never corrupt a live sequence.
+
+    Every live page carries a reference count: ``alloc`` hands out pages
+    at refcount 1, ``share`` adds a holder (another slot's table binding,
+    or the prefix cache), and ``release`` drops one — the page only
+    returns to the free list when its last holder lets go.  Without
+    sharing every page lives its whole life at refcount 1 and the
+    allocator behaves exactly as before.
     """
 
     def __init__(self, total_pages: int):
         self.total = total_pages
         self._free = list(range(total_pages - 1, 0, -1))
+        self.ref = [0] * total_pages
 
     def available(self) -> int:
         return len(self._free)
+
+    def held(self) -> int:
+        """Pages with at least one holder (excl. the trash page)."""
+        return sum(1 for p in range(1, self.total) if self.ref[p] > 0)
 
     def alloc(self, n: int) -> List[int]:
         if n > len(self._free):
             raise RuntimeError(
                 f"page pool exhausted: want {n}, have {len(self._free)}")
         got, self._free = self._free[-n:], self._free[:-n]
-        return got[::-1]
+        got = got[::-1]
+        for p in got:
+            assert self.ref[p] == 0, f"page {p} allocated while referenced"
+            self.ref[p] = 1
+        return got
+
+    def share(self, page: int) -> None:
+        assert self.ref[page] > 0, f"cannot share free page {page}"
+        self.ref[page] += 1
 
     def release(self, pages: List[int]) -> None:
-        self._free.extend(reversed(pages))
+        for p in reversed(pages):
+            assert self.ref[p] > 0, f"double free of page {p}"
+            self.ref[p] -= 1
+            if self.ref[p] == 0:
+                self._free.append(p)
+
+
+def _copy_cache_page(cache, src, dst):
+    """Copy one physical page across every layer's K/V pools (the
+    copy-on-write payload).  Pool leaves are (P, page, Hkv, hd); scanned
+    layer stacks carry a leading period axis."""
+    def cp(a):
+        if a.ndim == 5:
+            return a.at[:, dst].set(a[:, src])
+        return a.at[dst].set(a[src])
+    return jax.tree.map(cp, cache)
 
 
 def pick_page_size(backend: Optional[str] = None) -> int:
@@ -169,10 +233,21 @@ def pick_page_size(backend: Optional[str] = None) -> int:
 
 
 class PagedScheduler:
-    """Admission, chunked prefill, batched ragged decode, slot recycling."""
+    """Admission, chunked prefill, batched ragged decode, slot recycling.
+
+    With ``prefix_cache=True`` the scheduler also shares KV pages across
+    requests: finished prefills publish their full pages into a token-id
+    trie (``launch/prefix.PrefixCache``), ``reserve`` binds a new
+    request's leading table rows to matching cached pages (refcounted,
+    prefill skipped for covered chunks), and a decode append into a page
+    with other holders triggers copy-on-write.  The kernels are oblivious
+    — they resolve ``(slot, page_idx)`` through the same tables either
+    way — so sharing is zero kernel changes.
+    """
 
     def __init__(self, model: Model, params, *, slots: int, max_len: int,
-                 page_size: int = 0, total_pages: int = 0, log=print):
+                 page_size: int = 0, total_pages: int = 0,
+                 prefix_cache: bool = False, log=print):
         if not paged_supported(model.cfg):
             raise ValueError(
                 f"arch {model.cfg.name} has recurrent/stateful layers; "
@@ -205,19 +280,43 @@ class PagedScheduler:
         self.decode_tokens = 0
         self.rejected = 0                 # inadmissible requests, counted
         self.rejected_requests: List[Request] = []
+        self.truncated = 0                # finished early at max_len
+        # ---- prefix sharing (refcounted pages + copy-on-write) ----
+        self.prefix = PrefixCache(self.page) if prefix_cache else None
+        self.shared_tokens = np.zeros((slots,), np.int64)
+        self.shared_tokens_total = 0      # prompt tokens never prefilled
+        self.cow_copies = 0
+        # a fully-covered request's first decode appends into a shared
+        # page; its copy-on-write page is reserved at admission so the
+        # reserve-on-admit contract (never stall mid-decode) still holds
+        self.cow_stash: List[List[int]] = [[] for _ in range(slots)]
         self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
         self._prefill = jax.jit(model.prefill_step_paged,
                                 donate_argnums=(1,))
+        self._copy_page = jax.jit(_copy_cache_page, donate_argnums=(0,))
 
     # ------------------------------------------------------------ admission
     def pages_needed(self, r: Request) -> int:
-        return -(-(len(r.prompt) + r.max_new) // self.page)
+        """Lifetime page budget, clamped to the context window: positions
+        beyond ``max_len`` can never be written (the decode guard stops
+        there), so reserving pages for them would only waste pool."""
+        return -(-min(len(r.prompt) + r.max_new, self.max_len) // self.page)
 
     def admissible(self, r: Request) -> bool:
-        """Can this request EVER be admitted?  Its lifetime page budget
-        must fit one slot's table and the pool (minus the trash page)."""
-        return self.pages_needed(r) <= min(self.n_slot_pages,
-                                           self.alloc.total - 1)
+        """Can this request EVER be admitted?  Its prompt must leave room
+        to generate at least one token inside ``max_len``, and its
+        (max_len-clamped) lifetime page budget must fit one slot's table
+        and the pool (minus the trash page)."""
+        return (len(r.prompt) < self.max_len
+                and self.pages_needed(r) <= min(self.n_slot_pages,
+                                                self.alloc.total - 1))
+
+    def _reject_reason(self, r: Request) -> str:
+        if len(r.prompt) >= self.max_len:
+            return (f"prompt {len(r.prompt)} tokens >= max_len "
+                    f"{self.max_len}")
+        return (f"needs {self.pages_needed(r)} pages "
+                f"(> {self.n_slot_pages}/slot or pool)")
 
     def reserve(self, r: Request, slot: int) -> bool:
         """Reserve the request's whole-lifetime pages up front (admission
@@ -225,47 +324,141 @@ class PagedScheduler:
         list) and bind it to ``slot``.  Prefill is the caller's business:
         the static path prefills the whole prompt immediately
         (``try_admit``), the continuous engine spreads chunks across
-        iterations."""
+        iterations.
+
+        With a prefix cache, matching cached pages are bound shared
+        (refcounted) instead of allocated: ``shared_tokens[slot]`` tells
+        the caller how many leading prompt tokens already hold valid K/V
+        — prefill starts there.  When the cache covers the whole prompt
+        the request also reserves one copy-on-write page (its first
+        decode append lands mid-page in shared memory).
+        """
         need = self.pages_needed(r)
-        if need > self.n_slot_pages or self.alloc.available() < need:
+        if need > self.n_slot_pages:
             return False
-        pages = self.alloc.alloc(need)
+        shared: List[int] = []
+        covered = 0
+        if self.prefix is not None:
+            shared, covered = self.prefix.match(r.prompt)
+            # pin before any eviction below can free them out from under us
+            for p in shared:
+                self.alloc.share(p)
+        n_cow = 1 if covered >= len(r.prompt) else 0
+        n_priv = need - len(shared) + n_cow
+        if self.alloc.available() < n_priv and self.prefix is not None:
+            self.prefix.evict(n_priv - self.alloc.available(), self.alloc)
+        if self.alloc.available() < n_priv:
+            self.alloc.release(shared)     # unpin: admission failed
+            return False
+        pages = self.alloc.alloc(n_priv)
+        self.cow_stash[slot] = pages[need - len(shared):]
+        pages = shared + pages[:need - len(shared)]
         self.slot_pages[slot] = pages
         self.reclaimed[slot] = 0
         self.table[slot] = 0
         self.table[slot, :need] = pages
         self.lengths[slot] = 0
         self.active[slot] = r
+        self.shared_tokens[slot] = covered
+        self.shared_tokens_total += covered
+        self.check_page_accounting()
         return True
 
     def try_admit(self, r: Request, slot: int) -> bool:
         """Static-schedule admission: reserve, then chunk-prefill the
-        whole prompt to completion."""
+        (non-shared tail of the) prompt to completion.  A fully-covered
+        prompt skips prefill outright: the first token is born from one
+        masked ragged decode of the last prompt token (which is also the
+        copy-on-write moment for the shared partial page it lands in)."""
         if not self.reserve(r, slot):
             return False
-        first = self._prefill_prompt(r, slot)
-        self.lengths[slot] = len(r.prompt)
+        ln = len(r.prompt)
+        start = int(self.shared_tokens[slot])
+        if start >= ln:
+            self.lengths[slot] = ln - 1
+            first = self._first_token_via_decode(slot, int(r.prompt[ln - 1]))
+        else:
+            first = self._prefill_prompt(r, slot, start=start)
+        self.lengths[slot] = ln
+        self.cache_prefix(slot, r.prompt)
         r.out.append(first)
         self._reclaim_slot(slot)    # long prompts can outrun the window
         return True
 
-    def _prefill_prompt(self, r: Request, slot: int) -> int:
-        """Chunked prefill (chunk = one page); returns the first generated
-        token from the last real prompt position's logits."""
+    def _prefill_prompt(self, r: Request, slot: int, start: int = 0) -> int:
+        """Chunked prefill (chunk = one page) from page-aligned ``start``
+        (shared-covered leading chunks already hold valid K/V); returns
+        the first generated token from the last real prompt position's
+        logits."""
         ln = len(r.prompt)
         padded = -(-ln // self.page) * self.page
         toks = np.zeros((padded,), np.int32)
         toks[:ln] = r.prompt
         table_row = jnp.asarray(self.table[slot])
         logits = None
-        for t0 in range(0, ln, self.page):
+        for t0 in range(start, ln, self.page):
             last = min(ln, t0 + self.page) - 1 - t0
             logits, self.cache = self._prefill(
                 self.params, self.cache,
                 jnp.asarray(toks[t0:t0 + self.page])[None],
                 jnp.int32(t0), table_row, jnp.int32(last))
-        self.prefill_tokens += ln
+        self.prefill_tokens += ln - start
         return int(np.argmax(np.asarray(logits[0])))
+
+    def _first_token_via_decode(self, slot: int, token: int) -> int:
+        """One masked ragged decode advancing only ``slot`` (other slots'
+        ride-along writes land on the trash page): teacher-forces the
+        last prompt token at position ``lengths[slot]`` and returns the
+        argmax of its logits — the fully-covered admission path's TTFT
+        moment."""
+        self.prepare_decode([slot])
+        mask = np.zeros((self.slots,), bool)
+        mask[slot] = True
+        lengths = np.where(mask, self.lengths, 0).astype(np.int32)
+        table = np.where(mask[:, None], self.table, 0).astype(np.int32)
+        cur = np.zeros((self.slots,), np.int32)
+        cur[slot] = token
+        nxt = self.step(cur, view=(lengths, table))
+        return int(nxt[slot])
+
+    # --------------------------------------------------- prefix sharing
+    def cache_prefix(self, slot: int, prompt) -> None:
+        """Publish the slot's fully-prefilled prompt chunks into the
+        prefix trie (no-op without a cache).  Sound under window
+        reclamation too: reclaiming only drops the slot's own reference,
+        and a trie-held page keeps valid K/V for its prompt positions."""
+        if self.prefix is None:
+            return
+        self.prefix.insert(prompt, self.slot_pages[slot], self.alloc)
+        self.check_page_accounting()
+
+    def prepare_decode(self, slots: List[int]) -> None:
+        """Copy-on-write sweep before a batched decode step: any slot
+        whose next append position sits in a page with other holders
+        (prefix cache or sharer slots) gets a private copy first, so the
+        write can never corrupt a shared prefix."""
+        for slot in slots:
+            pos = int(self.lengths[slot])
+            idx = pos // self.page
+            if idx >= len(self.slot_pages[slot]):
+                continue                 # guard: decode loop ends the req
+            src = self.slot_pages[slot][idx]
+            if self.alloc.ref[src] <= 1:
+                continue
+            if self.cow_stash[slot]:
+                dst = self.cow_stash[slot].pop()
+            else:
+                need = 1 - self.alloc.available()
+                if need > 0 and self.prefix is not None:
+                    self.prefix.evict(need, self.alloc)
+                dst = self.alloc.alloc(1)[0]
+            self.cache = self._copy_page(self.cache, jnp.int32(src),
+                                         jnp.int32(dst))
+            self.slot_pages[slot][idx] = dst
+            self.table[slot, idx] = dst
+            self.alloc.release([src])
+            self.cow_copies += 1
+            self.check_page_accounting()
 
     def _reclaim_slot(self, slot: int) -> int:
         """Sliding-window page reclamation (delay buffering §2.2 applied
@@ -296,26 +489,43 @@ class PagedScheduler:
         return freed
 
     def held_pages(self) -> int:
-        """Physical pages currently held by slots (excl. trash page 0)."""
-        return sum(len(p) - r for p, r in zip(self.slot_pages,
-                                              self.reclaimed))
+        """Physical pages with at least one holder (excl. trash page 0).
+        A page shared by several slots and/or the prefix trie counts
+        once — holders are tracked by the allocator's refcounts."""
+        return self.alloc.held()
 
     def check_page_accounting(self) -> None:
-        """Invariant: every page is either free, held by a slot, or the
-        trash page — reclamation must never leak or double-free."""
+        """Invariant, refcount-aware: every page is either free, held
+        (refcount > 0), or the trash page — and the total reference count
+        equals the number of holders we can name: live slot bindings
+        (shared pages counted once per sharing slot), reserved
+        copy-on-write pages, and prefix-trie nodes.  Sharing, CoW,
+        reclamation, and recycling must never leak or double-free."""
         held = self.held_pages()
         free = self.alloc.available()
         assert held + free + 1 == self.alloc.total, (
             f"page accounting broken: held={held} free={free} "
             f"trash=1 != total={self.alloc.total}")
+        expected = (sum(len(p) - r for p, r in zip(self.slot_pages,
+                                                   self.reclaimed))
+                    + sum(len(s) for s in self.cow_stash)
+                    + (self.prefix.n_pages() if self.prefix else 0))
+        refs = sum(self.alloc.ref[1:])
+        assert refs == expected, (
+            f"refcount accounting broken: sum(ref)={refs} != "
+            f"slot bindings + cow stash + trie = {expected}")
 
     def _recycle(self, slot: int) -> None:
-        self.alloc.release(self.slot_pages[slot][self.reclaimed[slot]:])
+        self.alloc.release(self.slot_pages[slot][self.reclaimed[slot]:]
+                           + self.cow_stash[slot])
         self.slot_pages[slot] = []
+        self.cow_stash[slot] = []
         self.reclaimed[slot] = 0
         self.table[slot] = 0
         self.lengths[slot] = 0
+        self.shared_tokens[slot] = 0
         self.active[slot] = None
+        self.check_page_accounting()
 
     # --------------------------------------------------------------- decode
     def _feed_batch(self, tokens: np.ndarray,
@@ -367,8 +577,7 @@ class PagedScheduler:
                         self.rejected += 1
                         self.rejected_requests.append(r)
                         self.log(f"[paged] rejecting request {r.rid}: "
-                                 f"needs {self.pages_needed(r)} pages "
-                                 f"(> {self.n_slot_pages}/slot or pool)")
+                                 f"{self._reject_reason(r)}")
                     if not queue or not self.try_admit(queue[0], i):
                         blocked = True             # wait for free pages
                         break
@@ -389,6 +598,8 @@ class PagedScheduler:
                         "admission deadlock: empty batch but queued "
                         "requests cannot reserve pages")
                 break
+            self.prepare_decode([i for i, r in enumerate(self.active)
+                                 if r is not None])
             nxt = self.step(cur)
             for i, r in enumerate(self.active):
                 if r is None:
@@ -397,8 +608,14 @@ class PagedScheduler:
                 r.out.append(int(nxt[i]))
                 cur[i] = nxt[i]
                 if len(r.out) >= r.max_new \
-                        or int(self.lengths[i]) >= self.max_len - 1:
+                        or int(self.lengths[i]) >= self.max_len:
                     r.done = True
+                    r.truncated = len(r.out) < r.max_new
+                    if r.truncated:
+                        self.truncated += 1
+                        self.log(f"[paged] truncating request {r.rid} at "
+                                 f"max_len={self.max_len} "
+                                 f"({len(r.out)}/{r.max_new} tokens)")
                     done.append(r)
                     self._recycle(i)
                 else:
@@ -424,6 +641,16 @@ def main(argv=None):
     ap.add_argument("--total-pages", type=int, default=0,
                     help="page-pool size; 0 = full capacity "
                          "(slots x max_len); smaller oversubscribes")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="paged: share KV pages across requests with "
+                         "common prompt prefixes (refcounted pages, "
+                         "copy-on-write appends, prefill skipping)")
+    ap.add_argument("--shared-prefix-len", type=int, default=0,
+                    help="continuous loadgen: length of the common prompt "
+                         "prefix sharing requests start with")
+    ap.add_argument("--shared-frac", type=float, default=0.0,
+                    help="continuous loadgen: fraction of requests that "
+                         "carry the shared prefix (0..1)")
     ap.add_argument("--dispatch", default="auto",
                     choices=("auto", "kernels", "reference"),
                     help="kernel routing for every hot matmul/attention "
@@ -467,10 +694,12 @@ def main(argv=None):
         server = PagedScheduler(model, params, slots=args.slots,
                                 max_len=args.max_len,
                                 page_size=args.page_size,
-                                total_pages=args.total_pages)
+                                total_pages=args.total_pages,
+                                prefix_cache=args.prefix_cache)
         print(f"[paged] page_size={server.page} "
               f"pool={server.alloc.total} pages "
-              f"({server.n_slot_pages}/slot max)")
+              f"({server.n_slot_pages}/slot max, "
+              f"prefix_cache={'on' if args.prefix_cache else 'off'})")
     else:
         server = Server(model, params, slots=args.slots,
                         max_len=args.max_len)
@@ -483,7 +712,9 @@ def main(argv=None):
         reqs = poisson_stream(args.requests, rate=args.rate,
                               vocab_size=cfg.vocab_size,
                               prompt_len=args.prompt_len,
-                              max_new=args.max_new, seed=args.seed)
+                              max_new=args.max_new, seed=args.seed,
+                              shared_prefix_len=args.shared_prefix_len,
+                              shared_frac=args.shared_frac)
         engine = ContinuousEngine(server, token_budget=args.token_budget,
                                   clock=args.clock, tick=args.tick)
         # route counters tick at trace time, so reset BEFORE warmup: the
@@ -511,9 +742,17 @@ def main(argv=None):
               f"p50={fmt(s['tok_latency_p50'])} "
               f"p99={fmt(s['tok_latency_p99'])} ({args.clock} clock)")
     else:
+        if args.shared_prefix_len > args.prompt_len:
+            raise SystemExit("--shared-prefix-len exceeds --prompt-len")
         rng = np.random.default_rng(args.seed)
-        reqs = [Request(i, rng.integers(0, cfg.vocab_size, args.prompt_len),
-                        args.max_new) for i in range(args.requests)]
+        prefix = (rng.integers(0, cfg.vocab_size, args.shared_prefix_len)
+                  if args.shared_prefix_len > 0 else None)
+        reqs = []
+        for i in range(args.requests):
+            prompt = rng.integers(0, cfg.vocab_size, args.prompt_len)
+            if prefix is not None and float(rng.random()) < args.shared_frac:
+                prompt = np.concatenate([prefix, prompt[len(prefix):]])
+            reqs.append(Request(i, prompt, args.max_new))
         dispatch.reset_stats()
         t0 = time.time()
         done = server.run(reqs)
@@ -525,6 +764,17 @@ def main(argv=None):
     if args.cache == "paged" and server.window:
         print(f"[paged] reclaimed {server.pages_reclaimed} window-dead "
               f"page(s) (window={server.window})")
+    if args.cache == "paged":
+        if server.truncated or server.rejected:
+            print(f"[paged] truncated={server.truncated} "
+                  f"rejected={server.rejected}")
+        if server.prefix is not None:
+            print(f"[prefix] hits={server.prefix.hits} "
+                  f"misses={server.prefix.misses} "
+                  f"shared_tokens={server.shared_tokens_total} "
+                  f"cow_copies={server.cow_copies} "
+                  f"evictions={server.prefix.evictions} "
+                  f"cached_pages={server.prefix.n_pages()}")
     routes = dispatch.stats()
     for (op, route), n in sorted(routes.items()):
         print(f"[dispatch] {op:>16s} -> {route:<9s} x{n}")

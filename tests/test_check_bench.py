@@ -152,3 +152,55 @@ def test_latency_gate_env_var_override(tmp_path, monkeypatch):
     monkeypatch.setenv("REPRO_BENCH_LAT_TOL", "0.5")
     assert check_bench.main(["--baseline", str(base),
                              "--current", str(cur)]) == 1
+
+
+# ----------------------------------------------------------------- sharing
+
+
+def _share_report(res0, eff0, res95, eff95):
+    return {"rows": [
+        {"arch": "a", "cache": "paged", "schedule": "continuous-share0",
+         "decode_tok_s": 100.0, "max_resident": res0,
+         "prefill_tok_s_effective": eff0},
+        {"arch": "a", "cache": "paged", "schedule": "continuous-share95",
+         "decode_tok_s": 100.0, "max_resident": res95,
+         "prefill_tok_s_effective": eff95},
+    ]}
+
+
+def test_sharing_gate_passes_when_share95_wins(tmp_path):
+    report = _share_report(2, 500.0, 4, 1400.0)
+    base = _write(tmp_path, "base.json", report)
+    cur = _write(tmp_path, "cur.json", report)
+    assert check_bench.main(["--baseline", str(base),
+                             "--current", str(cur)]) == 0
+
+
+def test_sharing_gate_fails_when_sharing_delivers_nothing(tmp_path):
+    """share95 not strictly better than share0 on residency OR effective
+    prefill throughput is a feature regression — no tolerance applies."""
+    base = _write(tmp_path, "base.json", _share_report(2, 500.0, 4, 1400.0))
+    cur = _write(tmp_path, "cur.json", _share_report(2, 500.0, 2, 1400.0))
+    assert check_bench.main(["--baseline", str(base),
+                             "--current", str(cur)]) == 1
+    failures, compared = check_bench.compare_sharing(
+        check_bench.load_metrics(cur))
+    assert len(failures) == 1 and "max_resident" in failures[0]
+    assert compared == 2
+
+    worse = _write(tmp_path, "worse.json", _share_report(2, 500.0, 4, 400.0))
+    failures, _ = check_bench.compare_sharing(check_bench.load_metrics(worse))
+    assert len(failures) == 1 and "prefill_tok_s_effective" in failures[0]
+
+
+def test_sharing_gate_skips_without_both_scenarios(tmp_path):
+    """A run without the share scenarios (or only one of them) is not
+    gated on sharing — the classic gates still apply."""
+    only0 = {"rows": [
+        {"arch": "a", "cache": "paged", "schedule": "continuous-share0",
+         "decode_tok_s": 100.0, "max_resident": 2,
+         "prefill_tok_s_effective": 500.0}]}
+    p = _write(tmp_path, "only0.json", only0)
+    failures, compared = check_bench.compare_sharing(
+        check_bench.load_metrics(p))
+    assert failures == [] and compared == 0

@@ -42,6 +42,45 @@ def test_poisson_rate_zero_is_a_burst():
     assert all(r.arrival == 0.0 for r in reqs)
 
 
+def test_poisson_shared_prefix_stream_is_deterministic():
+    kw = dict(rate=0.0, vocab_size=100, prompt_len=10, max_new=2, seed=3,
+              shared_prefix_len=6, shared_frac=1.0)
+    reqs = poisson_stream(8, **kw)
+    prefix = list(reqs[0].prompt[:6])
+    assert all(list(r.prompt[:6]) == prefix for r in reqs)
+    assert all(len(r.prompt) == 10 for r in reqs)
+    assert len({tuple(r.prompt[6:]) for r in reqs}) == 8  # unique tails
+    for a, b in zip(reqs, poisson_stream(8, **kw)):
+        np.testing.assert_array_equal(a.prompt, b.prompt)
+
+
+def test_poisson_shared_prefix_frac_mixes_carriers():
+    reqs = poisson_stream(40, rate=0.0, vocab_size=100, prompt_len=8,
+                          max_new=2, seed=1, shared_prefix_len=4,
+                          shared_frac=0.5)
+    prefixes = [tuple(r.prompt[:4]) for r in reqs]
+    common = max(set(prefixes), key=prefixes.count)
+    assert 10 < prefixes.count(common) < 30     # ~half carry the prefix
+
+
+def test_poisson_shared_prefix_disabled_matches_legacy_stream():
+    """shared_prefix_len=0 must not perturb the rng draw sequence: the
+    stream is bit-identical to a call without the sharing kwargs."""
+    kw = dict(rate=2.0, vocab_size=50, prompt_len=6, max_new=2, seed=9)
+    a = poisson_stream(5, **kw)
+    b = poisson_stream(5, **kw, shared_prefix_len=0, shared_frac=0.9)
+    assert [r.arrival for r in a] == [r.arrival for r in b]
+    for ra, rb in zip(a, b):
+        np.testing.assert_array_equal(ra.prompt, rb.prompt)
+
+
+def test_poisson_shared_prefix_longer_than_prompt_rejected():
+    with pytest.raises(ValueError, match="shared_prefix_len"):
+        poisson_stream(2, rate=0.0, vocab_size=50, prompt_len=4,
+                       max_new=1, seed=0, shared_prefix_len=5,
+                       shared_frac=1.0)
+
+
 def test_trace_stream_parses_events():
     trace = [{"t": 1.5, "prompt_len": 3, "max_new": 2},
              {"tokens": [7, 8, 9, 10], "max_new": 5},

@@ -302,12 +302,13 @@ def test_paged_scheduler_instant_finish_readmits():
 
 
 def test_paged_scheduler_rejects_oversized_request():
-    """A request whose lifetime page budget can never fit must be
-    rejected (done=False, no output), not head-of-line block the queue."""
+    """A request that can never be admitted (prompt >= max_len leaves no
+    room to generate) must be rejected (done=False, no output), not
+    head-of-line block the queue."""
     from repro.launch.serve import Request
     sched, _ = _make_scheduler(slots=2, max_len=16, page=4)
     rng = np.random.default_rng(5)
-    big = Request(0, rng.integers(0, 128, 14), 8)   # 6 pages > 4/slot
+    big = Request(0, rng.integers(0, 128, 17), 8)   # prompt >= max_len
     ok = Request(1, rng.integers(0, 128, 5), 3)
     done = sched.run([big, ok])
     assert [r.rid for r in done] == [1]
@@ -537,7 +538,7 @@ def test_continuous_engine_rejects_and_counts():
     from repro.launch.loadgen import trace_stream
     logs = []
     engine, _ = _make_engine(slots=2, max_len=16, log=logs.append)
-    trace = [{"t": 0.0, "prompt_len": 14, "max_new": 8},  # 6 pages > 4/slot
+    trace = [{"t": 0.0, "prompt_len": 17, "max_new": 8},  # >= max_len
              {"t": 0.0, "prompt_len": 5, "max_new": 3}]
     done = engine.run(trace_stream(trace, vocab_size=128, seed=5))
     sched = engine.sched
@@ -556,7 +557,7 @@ def test_static_rejection_is_counted_and_logged(capsys):
     sched, _ = _make_scheduler(slots=2, max_len=16, page=4,
                                log=logs.append)
     rng = np.random.default_rng(5)
-    big = Request(0, rng.integers(0, 128, 14), 8)    # 6 pages > 4/slot
+    big = Request(0, rng.integers(0, 128, 17), 8)    # prompt >= max_len
     ok = Request(1, rng.integers(0, 128, 5), 3)
     done = sched.run([big, ok])
     assert [r.rid for r in done] == [1]

@@ -1,0 +1,307 @@
+"""Prefix-sharing copy-on-write KV page tests.
+
+Three layers, mirroring the tentpole's structure:
+
+1. unit — the refcounted ``PageAllocator`` and the ``PrefixCache`` trie
+   (match granularity, full-chunk-only publication, LRU eviction of
+   trie-only pages) with no model in the loop;
+2. differential — a scheduler WITH the prefix cache must emit exactly
+   the tokens a scheduler WITHOUT it emits (and the dense-equivalence
+   suite already ties the latter to the dense forward), including the
+   copy-on-write divergence case where a fully-covered request appends
+   mid-page into shared memory;
+3. runtime properties — refcounted recycling under an oversubscribed
+   pool, sliding-window reclamation on shared pages, and the engine's
+   prefill-skip accounting.  ``check_page_accounting`` (held + free +
+   trash == total AND sum(refs) == nameable holders) asserts inside
+   every scheduler mutation, so each run here exercises it throughout.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.archs import ARCHS
+from repro.core.memory import DtypePolicy
+from repro.launch.prefix import PrefixCache
+from repro.launch.serve import PageAllocator, PagedScheduler, Request
+from repro.models.transformer import ExecOptions, Model
+
+
+def _tiny_cfg(name, **overrides):
+    cfg = ARCHS[name].smoke()
+    return dataclasses.replace(
+        cfg, d_model=32, n_heads=2, n_kv_heads=1, head_dim=16, d_ff=64,
+        vocab_size=128, n_experts=min(cfg.n_experts, 4) or 0,
+        **overrides)
+
+
+def _make_scheduler(slots=2, max_len=32, page=4, total_pages=0,
+                    arch="gemma-2b", prefix_cache=False, log=None):
+    cfg = _tiny_cfg(arch, dispatch="reference")
+    model = Model(cfg, dt=DtypePolicy(compute=jnp.float32),
+                  opts=ExecOptions(mode="run"))
+    params = model.init(jax.random.key(0))
+    return PagedScheduler(model, params, slots=slots, max_len=max_len,
+                          page_size=page, total_pages=total_pages,
+                          prefix_cache=prefix_cache,
+                          log=log or (lambda *a, **k: None))
+
+
+# ------------------------------------------------------------------- units
+def test_allocator_refcounts():
+    alloc = PageAllocator(6)               # page 0 = trash
+    pages = alloc.alloc(3)
+    assert sorted(pages) == [1, 2, 3]
+    assert all(alloc.ref[p] == 1 for p in pages)
+    assert alloc.held() == 3 and alloc.available() == 2
+
+    alloc.share(pages[0])
+    assert alloc.ref[pages[0]] == 2
+    alloc.release([pages[0]])              # one holder left: stays held
+    assert alloc.ref[pages[0]] == 1
+    assert alloc.held() == 3 and alloc.available() == 2
+    alloc.release(pages)                   # last holders: all freed
+    assert alloc.held() == 0 and alloc.available() == 5
+
+    with pytest.raises(AssertionError, match="double free"):
+        alloc.release([pages[0]])
+    with pytest.raises(AssertionError, match="free page"):
+        alloc.share(pages[0])
+
+
+def test_allocator_alloc_never_hands_out_referenced_pages():
+    alloc = PageAllocator(4)
+    a = alloc.alloc(3)
+    alloc.share(a[1])
+    alloc.release(a)                       # a[1] still referenced
+    got = alloc.alloc(2)                   # must be the two ref == 0 pages
+    assert a[1] not in got
+    with pytest.raises(RuntimeError, match="exhausted"):
+        alloc.alloc(1)
+
+
+def test_prefix_trie_full_chunk_publication_and_match():
+    alloc = PageAllocator(8)
+    trie = PrefixCache(4)
+    toks = list(range(10))                 # 2 full chunks + 2-token tail
+    pages = alloc.alloc(3)
+    added = trie.insert(toks, pages, alloc)
+    assert added == 2 and trie.n_pages() == 2   # tail chunk NOT published
+    assert alloc.ref[pages[0]] == alloc.ref[pages[1]] == 2
+    assert alloc.ref[pages[2]] == 1             # partial page stays private
+
+    # page-aligned coverage: one full chunk + a diverging second chunk
+    got, covered = trie.match(list(range(4)) + [99, 98, 97, 96])
+    assert got == [pages[0]] and covered == 4
+    # fully covered: a partial prefix of a PUBLISHED page matches too
+    got, covered = trie.match(list(range(6)))
+    assert got == [pages[0], pages[1]] and covered == 6
+    # the unpublished tail can never be matched
+    got, covered = trie.match(toks)
+    assert got == [pages[0], pages[1]] and covered == 8
+    assert trie.hits == 3
+    got, covered = trie.match([55, 56, 57, 58])
+    assert got == [] and covered == 0 and trie.misses == 1
+
+
+def test_prefix_trie_evicts_lru_trie_only_pages():
+    alloc = PageAllocator(8)
+    trie = PrefixCache(2)
+    pa = alloc.alloc(2)
+    pb = alloc.alloc(1)
+    trie.insert([1, 2, 3, 4], pa, alloc)   # chain: [1,2] -> [3,4]
+    trie.insert([5, 6], pb, alloc)
+    alloc.release(pa + pb)                 # slots retired: trie-only now
+    trie.match([5, 6])                     # refresh pb: pa chain is LRU
+
+    # interior node [1,2] is not evictable while its child lives, so the
+    # first eviction takes the chain leaf [3,4], the second its parent
+    assert trie.evict(2, alloc) == 2
+    assert trie.n_pages() == 1
+    assert alloc.ref[pa[0]] == 0 and alloc.ref[pa[1]] == 0
+    assert alloc.ref[pb[0]] == 1           # recently used: survived
+
+    alloc.share(pb[0])                     # a slot re-binds the page
+    assert trie.evict(1, alloc) == 0       # ref > 1: never stolen
+    alloc.release([pb[0]])
+    assert trie.evict(1, alloc) == 1 and trie.n_pages() == 0
+
+
+def test_prefix_trie_flush_releases_everything():
+    alloc = PageAllocator(8)
+    trie = PrefixCache(2)
+    pages = alloc.alloc(3)
+    trie.insert([1, 2, 3, 4, 5, 6], pages, alloc)
+    alloc.release(pages)
+    assert trie.flush(alloc) == 3
+    assert trie.n_pages() == 0 and alloc.available() == 7
+
+
+# ----------------------------------------------------------- differentials
+def test_sharing_matches_unshared_scheduler_exactly():
+    """The sharing scheduler's tokens must equal the non-sharing
+    scheduler's, while actually sharing (hits, skipped prefill): full
+    repeat (fully covered), page-aligned partial overlap, and a cold
+    miss, served back-to-back through one slot."""
+    rng = np.random.default_rng(11)
+    base = rng.integers(0, 128, 16)
+    prompts = [base,                              # publisher
+               base.copy(),                       # fully covered repeat
+               np.concatenate([base[:8], rng.integers(0, 128, 4)]),
+               rng.integers(0, 128, 12)]          # cold miss
+
+    def serve(prefix_cache):
+        sched = _make_scheduler(slots=1, max_len=32, page=4,
+                                prefix_cache=prefix_cache)
+        done = sched.run([Request(i, p, 4) for i, p in enumerate(prompts)])
+        return {r.rid: list(r.out) for r in done}, sched
+
+    want, cold = serve(False)
+    got, shared = serve(True)
+    assert got == want
+    assert shared.prefix.hits >= 2
+    assert shared.shared_tokens_total == 16 + 8   # repeat + aligned overlap
+    # skipped prompt tokens never hit the prefill kernel
+    assert shared.prefill_tokens == cold.prefill_tokens - 24
+    assert shared.cow_copies >= 1                 # the fully-covered repeat
+
+
+def test_cow_divergence_mid_page_preserves_shared_pages():
+    """A fully-covered sharer appends into a shared partial page: the
+    append must copy-on-write (its tokens match a fresh unshared run) and
+    must NOT corrupt the published page — a later full-prompt repeat
+    still matches the original publisher's tokens."""
+    rng = np.random.default_rng(3)
+    base = rng.integers(0, 128, 16)
+    mid = base[:10]                    # ends mid-page (page = 4)
+
+    sched = _make_scheduler(slots=1, max_len=32, page=4, prefix_cache=True)
+    a, b, c = sched.run([Request(0, base, 4), Request(1, mid, 4),
+                         Request(2, base.copy(), 4)])
+
+    # request 1 was fully covered (10 of 10 tokens: 2 full chunks + a
+    # partial match of the published third chunk) and diverged mid-page
+    assert sched.shared_tokens_total == 10 + 16
+    assert sched.cow_copies >= 2       # request 1's append + request 2's
+
+    solo = _make_scheduler(slots=1, max_len=32, page=4, prefix_cache=False)
+    want_mid = solo.run([Request(0, mid.copy(), 4)])[0]
+    assert list(b.out) == list(want_mid.out), "CoW path diverged"
+    assert list(c.out) == list(a.out), "shared pages were corrupted"
+
+
+def test_refcounted_recycling_under_oversubscription():
+    """An oversubscribed pool (less than slots x slot-capacity) with
+    sharing on: admission blocks, recycles, trie evictions, and CoW all
+    interleave, the accounting invariant asserts on every mutation, and
+    every request still completes with the unshared token streams."""
+    rng = np.random.default_rng(7)
+    base = rng.integers(0, 128, 8)
+    prompts = []
+    for i in range(6):
+        tail = rng.integers(0, 128, 4)
+        prompts.append(np.concatenate([base, tail]) if i % 2 == 0
+                       else rng.integers(0, 128, 12))
+
+    def serve(prefix_cache):
+        sched = _make_scheduler(slots=2, max_len=16, page=4,
+                                total_pages=7, prefix_cache=prefix_cache)
+        done = sched.run([Request(i, p.copy(), 3)
+                          for i, p in enumerate(prompts)])
+        return {r.rid: list(r.out) for r in done}, sched
+
+    want, _ = serve(False)
+    got, sched = serve(True)
+    assert got == want and len(got) == 6
+    assert sched.rejected == 0
+    assert sched.prefix.hits >= 2
+    # drained: every page is free again except those the trie still holds
+    sched.check_page_accounting()
+    assert (sched.alloc.available()
+            == sched.alloc.total - 1 - sched.prefix.n_pages())
+
+
+def test_window_reclamation_and_refcounts_interact_soundly():
+    """Fully-windowed stacks reclaim pages mid-request; with sharing the
+    slot's release must only drop ITS reference — trie-held prefix pages
+    survive reclamation with valid K/V and still serve later sharers."""
+    page, window, max_len = 4, 8, 32
+    cfg = _tiny_cfg("gemma3-4b", window=window, dispatch="reference")
+    cfg = dataclasses.replace(
+        cfg, n_layers=2, prefix=(("swa", "mlp"), ("swa", "mlp")),
+        pattern=())
+    model = Model(cfg, dt=DtypePolicy(compute=jnp.float32),
+                  opts=ExecOptions(mode="run"))
+    params = model.init(jax.random.key(0))
+    sched = PagedScheduler(model, params, slots=1, max_len=max_len,
+                           page_size=page, prefix_cache=True,
+                           log=lambda *a, **k: None)
+    assert sched.window == window
+    rng = np.random.default_rng(9)
+    prompt = rng.integers(0, 128, 12)
+    a, b = sched.run([Request(0, prompt, 14), Request(1, prompt.copy(), 14)])
+    assert sched.pages_reclaimed > 0           # window freed pages mid-run
+    assert sched.prefix.hits >= 1              # request 1 reused the prefix
+    assert sched.shared_tokens_total == 12
+    assert list(a.out) == list(b.out)          # reclaimed sharer == owner
+
+
+def test_engine_sharing_differential_and_prefill_skip():
+    """Continuous engine: a shared-prefix stream served with the prefix
+    cache emits the same tokens as without it, while skipping prefill
+    work and tracking residency."""
+    from repro.launch.engine import ContinuousEngine
+    from repro.launch.loadgen import poisson_stream
+
+    def serve(prefix_cache):
+        sched = _make_scheduler(slots=2, max_len=32, page=4,
+                                prefix_cache=prefix_cache)
+        engine = ContinuousEngine(sched, clock="tick",
+                                  log=lambda *a, **k: None)
+        reqs = poisson_stream(6, rate=0.0, vocab_size=128, prompt_len=12,
+                              max_new=4, seed=5, shared_prefix_len=8,
+                              shared_frac=1.0)
+        done = engine.run(reqs)
+        return {r.rid: list(r.out) for r in done}, sched, engine
+
+    want, cold, _ = serve(False)
+    got, shared, engine = serve(True)
+    assert got == want and len(got) == 6
+    assert shared.prefix.hits >= 4             # burst admits 2 cold, rest hit
+    assert shared.prefill_tokens < cold.prefill_tokens
+    assert shared.shared_tokens_total >= 4 * 8
+    assert engine.max_resident == 2
+    shared.check_page_accounting()
+
+
+def test_engine_fully_covered_admission_skips_prefill_entirely():
+    """A fully-covered engine request runs zero prefill chunks: its first
+    token is born through the batched decode path (CoW against the
+    shared partial page) and the stream still matches the cold run."""
+    from repro.launch.engine import ContinuousEngine
+    from repro.launch.loadgen import trace_stream
+
+    rng = np.random.default_rng(13)
+    base = list(rng.integers(0, 128, 12))
+    trace = [{"t": 0.0, "tokens": base, "max_new": 3},
+             {"t": 6.0, "tokens": base[:10], "max_new": 3}]
+
+    def serve(prefix_cache):
+        sched = _make_scheduler(slots=1, max_len=32, page=4,
+                                prefix_cache=prefix_cache)
+        engine = ContinuousEngine(sched, clock="tick",
+                                  log=lambda *a, **k: None)
+        done = engine.run(trace_stream(trace, vocab_size=128, seed=0))
+        return {r.rid: list(r.out) for r in done}, sched, engine
+
+    want, _, _ = serve(False)
+    got, sched, engine = serve(True)
+    assert got == want
+    assert sched.cow_copies >= 1
+    # the covered request contributed nothing to prefill: only the
+    # publisher's 12 tokens ever hit the prefill kernel
+    assert sched.prefill_tokens == 12
+    assert engine.executor.prefill_chunks == 3   # ceil(12 / 4), once

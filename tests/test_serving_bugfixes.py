@@ -1,0 +1,187 @@
+"""Regression tests for the serving-correctness bugfix sweep.
+
+Each test pins one previously-silent failure mode of the request
+lifecycle:
+
+* dense ``Server.run`` dropped in-flight/queued requests when the shared
+  position hit the context wall — now they come back flagged + counted;
+* the paged paths admitted ``n_slot_pages * page`` tokens (> ``max_len``
+  when ``max_len`` is not page-divisible) and truncated at the wall with
+  ``done=True`` and no signal — admissibility now clamps to ``max_len``
+  and wall-stopped requests carry ``Request.truncated``;
+* ``BatchPolicy.compose`` let the prefill allowance go negative when the
+  running decode set alone exceeded the token budget;
+* ``trace_stream`` hardcoded rids so mixed streams collided keys in
+  ``ServeMetrics.timelines`` — now ``start_rid`` offsets them and
+  ``ArrivalQueue`` refuses duplicates outright.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.archs import ARCHS
+from repro.core.memory import DtypePolicy
+from repro.launch.loadgen import ArrivalQueue, Request, trace_stream
+from repro.launch.serve import PagedScheduler, Server
+from repro.models.transformer import ExecOptions, Model
+
+
+def _tiny_cfg(name="gemma-2b", **overrides):
+    cfg = ARCHS[name].smoke()
+    return dataclasses.replace(
+        cfg, d_model=32, n_heads=2, n_kv_heads=1, head_dim=16, d_ff=64,
+        vocab_size=128, n_experts=min(cfg.n_experts, 4) or 0,
+        **overrides)
+
+
+def _model_params():
+    model = Model(_tiny_cfg(), dt=DtypePolicy(compute=jnp.float32),
+                  opts=ExecOptions(mode="run"))
+    return model, model.init(jax.random.key(0))
+
+
+# --------------------------------------------------------- dense wall drop
+def test_dense_wall_returns_flagged_requests_not_silence():
+    """Shared-position context wall with work still in flight: every
+    request is accounted for — finished normally, returned truncated, or
+    counted rejected.  None vanish."""
+    model, params = _model_params()
+    logs = []
+    srv = Server(model, params, slots=2, max_len=12, log=logs.append)
+    rng = np.random.default_rng(1)
+    reqs = [Request(i, rng.integers(0, 128, 6), 4) for i in range(5)]
+    done = srv.run(list(reqs))
+
+    assert len(done) + srv.rejected == 5           # nothing dropped
+    assert all(r is None for r in srv.active)      # nothing left behind
+    by_rid = {r.rid: r for r in done}
+    # slots 0/1 finish inside the wall (6 prompt + 4 out = 10 <= 12)
+    assert not by_rid[0].truncated and len(by_rid[0].out) == 4
+    assert not by_rid[1].truncated and len(by_rid[1].out) == 4
+    # the wall catches the second wave mid-prompt: flagged, not dropped
+    wall = [r for r in done if r.truncated]
+    assert wall and srv.truncated == len(wall)
+    assert all(r.done for r in wall)
+    # never-admitted requests are rejections, with done=False
+    assert srv.rejected == len(srv.rejected_requests)
+    assert all(not r.done for r in srv.rejected_requests)
+    assert srv.rejected > 0
+    assert any("truncating" in m for m in logs)
+    assert any("rejecting" in m for m in logs)
+
+
+# ----------------------------------------- paged max_len clamp + truncation
+def test_paged_admission_clamps_to_max_len():
+    """max_len NOT page-divisible: page capacity (4 pages x 4 = 16) used
+    to shadow max_len=14.  The budget now clamps, so a request whose
+    lifetime exceeds max_len still admits (it will truncate, flagged)
+    while a prompt >= max_len can never admit."""
+    model, params = _model_params()
+    sched = PagedScheduler(model, params, slots=1, max_len=14, page_size=4,
+                           log=lambda *a, **k: None)
+    rng = np.random.default_rng(2)
+    over = Request(0, rng.integers(0, 128, 5), 20)    # 5 + 20 > 14
+    assert sched.pages_needed(over) == 4              # ceil(14/4), clamped
+    assert sched.admissible(over)
+    full = Request(1, rng.integers(0, 128, 14), 2)    # prompt == max_len
+    assert not sched.admissible(full)
+    assert "max_len" in sched._reject_reason(full)
+
+
+def test_paged_static_truncates_with_flag_at_the_wall():
+    model, params = _model_params()
+    logs = []
+    sched = PagedScheduler(model, params, slots=1, max_len=14, page_size=4,
+                           log=logs.append)
+    rng = np.random.default_rng(2)
+    fits = Request(1, rng.integers(0, 128, 4), 3)
+    over = Request(0, rng.integers(0, 128, 5), 20)
+    done = sched.run([over, fits])
+    by_rid = {r.rid: r for r in done}
+    assert by_rid[0].truncated and by_rid[0].done
+    # stored tokens never exceed max_len: 5 prompt + 9 appended = 14,
+    # plus the final token predicted from the full window
+    assert len(by_rid[0].out) == 14 - 5 + 1
+    assert not by_rid[1].truncated and len(by_rid[1].out) == 3
+    assert sched.truncated == 1
+    assert any("truncating" in m for m in logs)
+
+
+def test_paged_continuous_truncates_with_flag_at_the_wall():
+    """Same wall, continuous schedule: the engine decode guard and the
+    (defensive) prefill-born guard stop at max_len with the flag set and
+    the metrics summary counting it."""
+    from repro.launch.engine import ContinuousEngine
+    model, params = _model_params()
+    sched = PagedScheduler(model, params, slots=1, max_len=14, page_size=4,
+                           log=lambda *a, **k: None)
+    engine = ContinuousEngine(sched, clock="tick", log=lambda *a, **k: None)
+    trace = [{"t": 0.0, "prompt_len": 5, "max_new": 20},
+             {"t": 0.0, "prompt_len": 4, "max_new": 3}]
+    done = engine.run(trace_stream(trace, vocab_size=128, seed=2))
+    by_rid = {r.rid: r for r in done}
+    assert by_rid[0].truncated and len(by_rid[0].out) == 14 - 5 + 1
+    assert not by_rid[1].truncated and len(by_rid[1].out) == 3
+    assert sched.truncated == 1
+    assert engine.metrics.summary()["requests_truncated"] == 1
+
+
+def test_static_and_continuous_agree_at_the_wall():
+    """Differential: both schedules must emit the same (truncated) token
+    stream for the same wall-limited request."""
+    from repro.launch.engine import ContinuousEngine
+    rng = np.random.default_rng(6)
+    prompt = rng.integers(0, 128, 5)
+
+    model, params = _model_params()
+    s1 = PagedScheduler(model, params, slots=1, max_len=14, page_size=4,
+                        log=lambda *a, **k: None)
+    a = s1.run([Request(0, prompt.copy(), 20)])[0]
+
+    model2, params2 = _model_params()
+    s2 = PagedScheduler(model2, params2, slots=1, max_len=14, page_size=4,
+                        log=lambda *a, **k: None)
+    engine = ContinuousEngine(s2, clock="tick", log=lambda *a, **k: None)
+    b = engine.run([Request(0, prompt.copy(), 20)])[0]
+    assert a.truncated and b.truncated
+    assert list(a.out) == list(b.out)
+
+
+# ------------------------------------------------- BatchPolicy budget clamp
+def test_compose_never_overruns_budget_with_decode_backlog():
+    from repro.launch.engine import BatchPolicy
+    policy = BatchPolicy(token_budget=2, page=4)
+    # decode set alone exceeds the budget: prefill allowance must clamp
+    # to zero, not go negative (negative `left` admitted no chunks only
+    # by accident of the comparison; pin the clamp explicitly)
+    plan = policy.compose(running=[0, 1, 2], prefilling=[(3, 0)])
+    assert plan.decode == [0, 1, 2]        # decode-first: never trimmed
+    assert plan.prefill == []
+    # with headroom, chunks admit up to the budget, one per slot
+    plan = BatchPolicy(9, 4).compose([0], [(1, 0), (2, 4), (3, 0)])
+    assert plan.decode == [0] and plan.prefill == [(1, 0), (2, 4)]
+    # nothing decoding, budget below one page: forced progress, no stall
+    plan = BatchPolicy(2, 4).compose([], [(1, 0)])
+    assert plan.prefill == [(1, 0)]
+
+
+# ------------------------------------------------------ loadgen rid hygiene
+def test_trace_stream_start_rid_offsets_ids():
+    trace = [{"t": 0.0, "prompt_len": 3, "max_new": 2},
+             {"t": 1.0, "prompt_len": 2, "max_new": 1}]
+    a = trace_stream(trace, vocab_size=32, seed=0)
+    b = trace_stream(trace, vocab_size=32, seed=1, start_rid=len(a))
+    assert [r.rid for r in a] == [0, 1]
+    assert [r.rid for r in b] == [2, 3]
+    q = ArrivalQueue(a + b)                # mixed streams: no collision
+    assert len(q) == 4
+
+
+def test_arrival_queue_rejects_duplicate_rids():
+    reqs = [Request(0, np.array([1]), 1), Request(1, np.array([1]), 1),
+            Request(0, np.array([2]), 1)]
+    with pytest.raises(ValueError, match="duplicate request rids.*\\[0\\]"):
+        ArrivalQueue(reqs)
