@@ -569,12 +569,8 @@ def run_serve_continuous(args) -> None:
     # (max_resident) and effective prefill throughput
     # (prompt tokens served / prefill wall time — skipped chunks are
     # served work that cost no compute).
-    share_rows = []
-    print("\narch,schedule,shared_frac,max_resident,"
-          "prefill_tok_s_effective,shared_tokens,cow_copies,total_tok_s")
-    for frac in (0.0, 0.5, 0.95):
-        tag = f"continuous-share{int(frac * 100)}"
-        sh = PagedScheduler(model, params, slots=4, max_len=64,
+    def share_run(model_, params_, frac, tag, kv_dtype):
+        sh = PagedScheduler(model_, params_, slots=4, max_len=64,
                             page_size=8, total_pages=11,
                             prefix_cache=True, log=None)
         eng = ContinuousEngine(sh, clock="wall", log=None)
@@ -596,13 +592,14 @@ def run_serve_continuous(args) -> None:
             "arch": cfg.name, "cache": "paged", "schedule": tag,
             "dispatch": args.serve_dispatch, "slots": 4, "page_size": 8,
             "total_pages": 11, "requests": 12, "shared_frac": frac,
-            "shared_prefix_len": 16,
+            "shared_prefix_len": 16, "kv_dtype": kv_dtype,
             "decode_tok_s": round(
                 sh.decode_tokens / max(eng.executor.t_decode, 1e-9), 2),
             "total_tok_s": round(
                 sum(len(r.out) for r in sdone) / max(sdt, 1e-9), 2),
             "prefill_tok_s_effective": round(eff, 2),
             "max_resident": eng.max_resident,
+            "max_resident_kv_bytes": eng.max_resident_kv_bytes,
             "shared_tokens": sh.shared_tokens_total,
             "cow_copies": sh.cow_copies,
             "prefix_hits": sh.prefix.hits,
@@ -613,17 +610,46 @@ def run_serve_continuous(args) -> None:
             "rejected": sh.rejected, "truncated": sh.truncated,
             "backend": jax.default_backend(),
         }
-        share_rows.append(row)
         print(f"{cfg.name},{tag},{frac},{row['max_resident']},"
+              f"{row['max_resident_kv_bytes']},"
               f"{row['prefill_tok_s_effective']},{row['shared_tokens']},"
               f"{row['cow_copies']},{row['total_tok_s']}", flush=True)
+        return row
+
+    share_rows = []
+    print("\narch,schedule,shared_frac,max_resident,max_resident_kv_bytes,"
+          "prefill_tok_s_effective,shared_tokens,cow_copies,total_tok_s")
+    for frac in (0.0, 0.5, 0.95):
+        share_rows.append(share_run(
+            model, params, frac, f"continuous-share{int(frac * 100)}",
+            cfg.kv_dtype or "compute"))
     hi = share_rows[-1]
     lo = share_rows[0]
     print(f"# share95/share0: resident {lo['max_resident']} -> "
           f"{hi['max_resident']}, effective prefill "
           f"{hi['prefill_tok_s_effective'] / max(lo['prefill_tok_s_effective'], 1e-9):.2f}x")
+
+    # ------------------------------------- quantized-KV scenarios
+    # Same oversubscribed shared-prefix workload with the pool stored as
+    # int8 (per-(page, kv-head) f32 scales, in-kernel dequant): the
+    # capacity lever is BYTES, so the rows carry max_resident_kv_bytes
+    # and check_bench gates int8-share0 strictly below share0 on bytes
+    # while holding decode throughput within tolerance.  Params are the
+    # same tree — kv_dtype only changes cache storage, which is exactly
+    # why the rows are comparable.
+    cfg8 = dataclasses.replace(cfg, kv_dtype="int8")
+    model8 = Model(cfg8, dt=DtypePolicy(param=jnp.bfloat16),
+                   opts=ExecOptions(mode="run"))
+    int8_rows = [share_run(model8, params, frac,
+                           f"continuous-int8-share{int(frac * 100)}", "int8")
+                 for frac in (0.0, 0.95)]
+    b0, b8 = share_rows[0], int8_rows[0]
+    print(f"# int8-share0/share0: kv bytes {b0['max_resident_kv_bytes']} "
+          f"-> {b8['max_resident_kv_bytes']} "
+          f"({b8['max_resident_kv_bytes'] / max(b0['max_resident_kv_bytes'], 1): .2f}x), "
+          f"decode {b0['decode_tok_s']} -> {b8['decode_tok_s']} tok/s")
     _merge_serve_rows(args.serve_out,
-                      [cont_row, static_row] + share_rows)
+                      [cont_row, static_row] + share_rows + int8_rows)
 
 
 def run_progression() -> None:

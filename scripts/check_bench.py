@@ -5,12 +5,12 @@ committed baseline and fail on throughput OR latency regressions.
 Usage (what ``scripts/ci.sh bench`` runs)::
 
     python benchmarks/run.py --serve --serve-dispatch kernels \
-        --serve-out results/BENCH_serve_current.json
+        --serve-out results/scratch/BENCH_serve_current.json
     python benchmarks/run.py --serve-continuous --serve-dispatch kernels \
-        --serve-out results/BENCH_serve_current.json
+        --serve-out results/scratch/BENCH_serve_current.json
     python scripts/check_bench.py \
         --baseline results/BENCH_serve.json \
-        --current  results/BENCH_serve_current.json
+        --current  results/scratch/BENCH_serve_current.json
 
 Rows are keyed ``(arch, cache, schedule)`` — legacy rows without a
 schedule field are the phased (``--serve``) rows.  Two gates per key:
@@ -37,6 +37,13 @@ pool) and ``prefill_tok_s_effective`` (prompt tokens served per prefill
 second) — the two wins prefix sharing exists to deliver.  No tolerance:
 sharing that doesn't help is a regression of the feature itself.
 
+Likewise baseline-free: when ``continuous-int8-share0`` rides alongside
+``continuous-share0``, the int8 KV pool must land STRICTLY below the
+default-dtype pool on ``max_resident_kv_bytes`` (byte-denominated
+residency is the entire point of quantizing the cache) while holding
+``decode_tok_s`` within the throughput tolerance — capacity won by
+giving back throughput beyond the noise band is not a win.
+
 Updating the baseline (after an intentional perf change or a new
 machine): re-run the benchmark writing straight to the baseline path and
 commit the result — see benchmarks/README.md ("Benchmark-regression
@@ -56,6 +63,7 @@ DEFAULT_LAT_TOLERANCE = 0.8
 FLOOR_METRIC = "decode_tok_s"       # higher is better
 CEIL_METRIC = "tok_latency_p99_s"   # lower is better
 SHARE_METRICS = ("max_resident", "prefill_tok_s_effective")  # higher wins
+BYTES_METRIC = "max_resident_kv_bytes"  # lower wins (int8 vs default KV)
 
 Key = Tuple[str, str, str]
 
@@ -68,7 +76,8 @@ def load_metrics(path) -> Dict[Key, Dict[str, float]]:
         key = (row.get("arch", "?"), row.get("cache", "?"),
                row.get("schedule", "phased"))
         metrics = {m: float(row[m])
-                   for m in (FLOOR_METRIC, CEIL_METRIC) + SHARE_METRICS
+                   for m in ((FLOOR_METRIC, CEIL_METRIC, BYTES_METRIC)
+                             + SHARE_METRICS)
                    if row.get(m) is not None}
         if metrics:
             out[key] = metrics
@@ -139,10 +148,48 @@ def compare_sharing(current: Dict[Key, Dict[str, float]]
     return failures, compared
 
 
+def compare_kv_dtype(current: Dict[Key, Dict[str, float]],
+                     tolerance: float = DEFAULT_TOLERANCE
+                     ) -> Tuple[List[str], int]:
+    """Quantized-KV win gate, baseline-free: the int8 pool must be
+    strictly cheaper in bytes than the default-dtype pool on the SAME
+    0%-sharing workload (no tolerance — the byte ratio is a layout
+    constant, not a timing), without giving back decode throughput
+    beyond the ordinary noise tolerance."""
+    failures, compared = [], 0
+    for arch, cache, schedule in sorted(current):
+        if schedule != "continuous-int8-share0":
+            continue
+        base_key = (arch, cache, "continuous-share0")
+        if base_key not in current:
+            continue
+        q, base = current[(arch, cache, schedule)], current[base_key]
+        if BYTES_METRIC in q and BYTES_METRIC in base:
+            compared += 1
+            if q[BYTES_METRIC] >= base[BYTES_METRIC]:
+                failures.append(
+                    f"{arch}/{cache}: int8-share0 {BYTES_METRIC} "
+                    f"{q[BYTES_METRIC]:.0f} >= share0 "
+                    f"{base[BYTES_METRIC]:.0f} — quantizing the pool "
+                    f"saved no bytes")
+        if FLOOR_METRIC in q and FLOOR_METRIC in base:
+            compared += 1
+            floor = base[FLOOR_METRIC] * (1.0 - tolerance)
+            if q[FLOOR_METRIC] < floor:
+                failures.append(
+                    f"{arch}/{cache}: int8-share0 {FLOOR_METRIC} "
+                    f"{q[FLOOR_METRIC]:.2f} < floor {floor:.2f} "
+                    f"(share0 {base[FLOOR_METRIC]:.2f}, tolerance "
+                    f"{tolerance:.0%}) — int8 capacity won by giving "
+                    f"back decode throughput")
+    return failures, compared
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--baseline", default="results/BENCH_serve.json")
-    ap.add_argument("--current", default="results/BENCH_serve_current.json")
+    ap.add_argument("--current",
+                    default="results/scratch/BENCH_serve_current.json")
     ap.add_argument("--tolerance", type=float,
                     default=float(os.environ.get("REPRO_BENCH_TOL",
                                                  DEFAULT_TOLERANCE)),
@@ -167,6 +214,9 @@ def main(argv=None) -> int:
     share_failures, share_compared = compare_sharing(current)
     failures += share_failures
     compared += share_compared
+    q_failures, q_compared = compare_kv_dtype(current, args.tolerance)
+    failures += q_failures
+    compared += q_compared
     for line in failures:
         print(f"REGRESSION: {line}")
     if failures:

@@ -62,6 +62,19 @@ lint() {
          "(route through repro.kernels.dispatch):"
     echo "$bad"; exit 1
   fi
+  # 4. int8 KV pools are born in ONE place (transformer.layer_cache_init_
+  #    paged, following cfg.kv_dtype) so scale leaves can never be missing
+  #    or mis-sized — model/launch code must not construct int8 buffers
+  #    directly (repro.core.quant owns the quantize/dequantize math)
+  bad=$(grep -rnE 'jnp\.(zeros|empty|full)\([^)]*jnp\.int8' \
+        src/repro/models src/repro/launch --include='*.py' \
+        | grep -v 'models/transformer.py' || true)
+  if [ -n "$bad" ]; then
+    echo "lint: int8 KV buffer constructed outside" \
+         "models/transformer.layer_cache_init_paged (route kv storage" \
+         "through cfg.kv_dtype + repro.core.quant):"
+    echo "$bad"; exit 1
+  fi
   echo "lint: OK"
 }
 
@@ -82,14 +95,17 @@ case "${1:-smoke}" in
     python benchmarks/run.py --prefill
     ;;
   bench)
-    rm -f results/BENCH_serve_current.json
+    # scratch outputs live under gitignored results/scratch/ so a bench
+    # run can never leave stray artifacts in the committed results/
+    mkdir -p results/scratch
+    rm -f results/scratch/BENCH_serve_current.json
     python benchmarks/run.py --serve --serve-dispatch kernels \
-      --serve-out results/BENCH_serve_current.json
+      --serve-out results/scratch/BENCH_serve_current.json
     python benchmarks/run.py --serve-continuous --serve-dispatch kernels \
-      --serve-out results/BENCH_serve_current.json
+      --serve-out results/scratch/BENCH_serve_current.json
     python scripts/check_bench.py \
       --baseline results/BENCH_serve.json \
-      --current results/BENCH_serve_current.json
+      --current results/scratch/BENCH_serve_current.json
     ;;
   *) echo "usage: $0 {smoke|full|lint|tune|serve|bench}" >&2; exit 2 ;;
 esac

@@ -64,6 +64,15 @@ class ArchConfig:
     # page size for the paged layout; 0 = pick from tuned decode plans
     # (falls back to 64 when no tuned entry matches)
     kv_page_size: int = 0
+    # paged KV-cache storage dtype: "" = model compute dtype; "int8"
+    # stores pages as symmetric int8 with per-(page, kv-head) f32 scales
+    # (quantize-on-write; the ragged kernels dequantize at tile load) —
+    # --kv-dtype on launch/serve.py
+    kv_dtype: str = ""
+    # projection/MLP weight GEMMs: "" = float weights through
+    # dispatch.matmul; "int8" = per-channel quantized weights through
+    # dispatch.quantized_matmul (inference only)
+    weights_dtype: str = ""
     notes: str = ""
 
     # ------------------------------------------------------------------

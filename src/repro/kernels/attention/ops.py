@@ -142,20 +142,22 @@ def flash_attention_bwd(q: jax.Array, k: jax.Array, v: jax.Array,
 
 @functools.partial(jax.jit, static_argnames=("window", "level",
                                              "pages_per_tile", "interpret"))
-def _decode_attention(q, k_pages, v_pages, table, lengths, *, window: int,
-                      level: Level, pages_per_tile: int,
-                      interpret: bool) -> jax.Array:
+def _decode_attention(q, k_pages, v_pages, table, lengths, k_scale,
+                      v_scale, *, window: int, level: Level,
+                      pages_per_tile: int, interpret: bool) -> jax.Array:
     if level in (Level.T0_NAIVE, Level.T1_PIPELINED):
         return ref.decode_attention_ref(q, k_pages, v_pages, table, lengths,
-                                        window=window)
+                                        k_scale, v_scale, window=window)
     return decode_attention_pallas(q, k_pages, v_pages, table, lengths,
-                                   window=window,
+                                   k_scale, v_scale, window=window,
                                    pages_per_tile=pages_per_tile,
                                    interpret=interpret)
 
 
 def decode_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
-                     table: jax.Array, lengths: jax.Array, *,
+                     table: jax.Array, lengths: jax.Array,
+                     k_scale: Optional[jax.Array] = None,
+                     v_scale: Optional[jax.Array] = None, *,
                      window: int = 0,
                      level: Level = Level.T3_REPLICATED,
                      pages_per_tile: Optional[int] = None,
@@ -166,12 +168,15 @@ def decode_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     q (B, H, hd) — one query token per slot; k_pages / v_pages (P, page,
     Hkv, hd) shared page pools; table (B, n_pages) int32 logical->physical
     page ids; lengths (B,) int32 valid tokens per slot (0 = inactive slot,
-    output 0).  Returns (B, H, hd) f32.  T0/T1 gather pages to a dense
-    masked reference; T2+ run the scalar-prefetch Pallas kernel.
+    output 0).  int8 pools additionally take ``k_scale`` / ``v_scale``
+    (P, Hkv) f32 per-page per-kv-head scales (in-kernel dequant, §4.4).
+    Returns (B, H, hd) f32.  T0/T1 gather pages to a dense masked
+    reference; T2+ run the scalar-prefetch Pallas kernel.
 
     ``plan`` selects the KV-tile geometry: ``"heuristic"`` (the
     ``pages_per_tile`` argument, default ~512-row tiles), ``"tuned"``
-    (autotuner cache keyed on (B, H, n_pages, page, hd); heuristic on a
+    (autotuner cache keyed on (B, H, n_pages, page, hd) and the POOL dtype
+    — the dtype axis of the serving-cache design space; heuristic on a
     miss), or a tuned kwargs dict (``pages_per_tile``, optional ``level``;
     ``page_size`` / ``prefetch_depth`` entries are layout / feasibility
     knobs and are ignored at call time).
@@ -182,33 +187,36 @@ def decode_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     _, page, _, _ = k_pages.shape
     n_pages = table.shape[1]
     shape = (b, h, n_pages, page, hd)
-    level, kw = resolve_plan("decode_attention", shape, q.dtype, level, plan)
+    level, kw = resolve_plan("decode_attention", shape, k_pages.dtype,
+                             level, plan)
     if kw:
         pages_per_tile = kw.get("pages_per_tile", pages_per_tile)
     if pages_per_tile is None:
         pages_per_tile = heuristic_pages_per_tile(n_pages, page)
     return _decode_attention(q, k_pages, v_pages, table, lengths,
-                             window=window, level=level,
+                             k_scale, v_scale, window=window, level=level,
                              pages_per_tile=int(pages_per_tile),
                              interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("window", "level",
                                              "pages_per_tile", "interpret"))
-def _prefill_attention(q, k_pages, v_pages, table, starts, *, window: int,
-                       level: Level, pages_per_tile: int,
-                       interpret: bool) -> jax.Array:
+def _prefill_attention(q, k_pages, v_pages, table, starts, k_scale,
+                       v_scale, *, window: int, level: Level,
+                       pages_per_tile: int, interpret: bool) -> jax.Array:
     if level in (Level.T0_NAIVE, Level.T1_PIPELINED):
         return ref.prefill_attention_ref(q, k_pages, v_pages, table, starts,
-                                         window=window)
+                                         k_scale, v_scale, window=window)
     return prefill_attention_pallas(q, k_pages, v_pages, table, starts,
-                                    window=window,
+                                    k_scale, v_scale, window=window,
                                     pages_per_tile=pages_per_tile,
                                     interpret=interpret)
 
 
 def prefill_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
-                      table: jax.Array, starts: jax.Array, *,
+                      table: jax.Array, starts: jax.Array,
+                      k_scale: Optional[jax.Array] = None,
+                      v_scale: Optional[jax.Array] = None, *,
                       window: int = 0,
                       level: Level = Level.T3_REPLICATED,
                       pages_per_tile: Optional[int] = None,
@@ -220,13 +228,15 @@ def prefill_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     written into the pools; k_pages / v_pages (P, page, Hkv, hd) shared
     page pools; table (B, n_pages) int32 page ids; starts (B,) int32
     page-aligned chunk offsets (slot b's queries sit at positions
-    ``starts[b] + [0, C)``).  Returns (B, C, H, hd) f32.  T0/T1 gather
-    pages to a dense causally-masked reference; T2+ run the scalar-
-    prefetch Pallas kernel with causal intra-chunk masking.
+    ``starts[b] + [0, C)``).  int8 pools additionally take ``k_scale`` /
+    ``v_scale`` (P, Hkv) f32 per-page per-kv-head scales (in-kernel
+    dequant, §4.4).  Returns (B, C, H, hd) f32.  T0/T1 gather pages to a
+    dense causally-masked reference; T2+ run the scalar-prefetch Pallas
+    kernel with causal intra-chunk masking.
 
     ``plan`` selects the KV-tile geometry under kernel key
-    ``prefill_attention`` (shape key (B, C, H, n_pages, page, hd)); same
-    semantics as ``decode_attention``.
+    ``prefill_attention`` (shape key (B, C, H, n_pages, page, hd) plus the
+    pool dtype); same semantics as ``decode_attention``.
     """
     if interpret is None:
         interpret = interpret_default()
@@ -234,14 +244,14 @@ def prefill_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     _, page, _, _ = k_pages.shape
     n_pages = table.shape[1]
     shape = (b, c, h, n_pages, page, hd)
-    level, kw = resolve_plan("prefill_attention", shape, q.dtype, level,
-                             plan)
+    level, kw = resolve_plan("prefill_attention", shape, k_pages.dtype,
+                             level, plan)
     if kw:
         pages_per_tile = kw.get("pages_per_tile", pages_per_tile)
     if pages_per_tile is None:
         pages_per_tile = heuristic_pages_per_tile(n_pages, page)
     return _prefill_attention(q, k_pages, v_pages, table, starts,
-                              window=window, level=level,
+                              k_scale, v_scale, window=window, level=level,
                               pages_per_tile=int(pages_per_tile),
                               interpret=interpret)
 
@@ -359,16 +369,18 @@ def attention_blockwise_reference(q, k, v, *, causal, window, softcap,
     return jnp.moveaxis(out, 1, 2)               # (b, sq, h, hd)
 
 
-def decode_attention_reference(q, k_pages, v_pages, table, lengths, *,
+def decode_attention_reference(q, k_pages, v_pages, table, lengths,
+                               k_scale=None, v_scale=None, *,
                                window, softcap, accum_dtype, out_dtype):
-    """Paged ragged decode reference: gather pages to a dense view, mask by
+    """Paged ragged decode reference: gather pages to a dense view
+    (dequantizing int8 pools through the per-page scales), mask by
     per-slot length (and window), softmax in ``accum_dtype``.  The einsum
     lowering the paged serve path uses when the kernel route is off."""
     b, h, hd = q.shape
     _, page, hkv, _ = k_pages.shape
     grp = h // hkv
-    k = k_pages[table].reshape(b, -1, hkv, hd)
-    v = v_pages[table].reshape(b, -1, hkv, hd)
+    k = ref._gather_pages(k_pages, table, k_scale)
+    v = ref._gather_pages(v_pages, table, v_scale)
     if grp > 1:
         k = jnp.broadcast_to(k[:, :, :, None, :],
                              k.shape[:3] + (grp, hd)).reshape(b, -1, h, hd)
@@ -390,19 +402,21 @@ def decode_attention_reference(q, k_pages, v_pages, table, lengths, *,
                      jnp.zeros((), out.dtype))
 
 
-def prefill_attention_reference(q, k_pages, v_pages, table, starts, *,
+def prefill_attention_reference(q, k_pages, v_pages, table, starts,
+                                k_scale=None, v_scale=None, *,
                                 window, softcap, accum_dtype, out_dtype):
-    """Paged ragged prefill reference: gather pages to a dense view, mask
-    causally against each chunk's positions (and the sliding window),
-    softmax in ``accum_dtype`` — numerically identical to the gather +
+    """Paged ragged prefill reference: gather pages to a dense view
+    (dequantizing int8 pools through the per-page scales), mask causally
+    against each chunk's positions (and the sliding window), softmax in
+    ``accum_dtype`` — numerically identical to the gather +
     naive-attention path chunked prefill took before this op existed."""
     b, c, h, hd = q.shape
     _, page, hkv, _ = k_pages.shape
     grp = h // hkv
     registry.assert_no_dense_scores("prefill_attention_reference",
                                     c, table.shape[1] * page)
-    k = k_pages[table].reshape(b, -1, hkv, hd)
-    v = v_pages[table].reshape(b, -1, hkv, hd)
+    k = ref._gather_pages(k_pages, table, k_scale)
+    v = ref._gather_pages(v_pages, table, v_scale)
     if grp > 1:
         k = jnp.broadcast_to(k[:, :, :, None, :],
                              k.shape[:3] + (grp, hd)).reshape(b, -1, h, hd)
@@ -531,31 +545,57 @@ def _attention_bad_example():
     return (q, k, v), {}
 
 
-def _decode_eligible(st, q, k_pages, v_pages, table, lengths) -> bool:
+def _paged_pools_ok(q, k_pages, v_pages, k_scale, v_scale) -> bool:
+    """Pool dtype contract shared by decode/prefill eligibility: floating
+    pools with no scales, or int8 pools with floating (P, Hkv) scales."""
+    if not jnp.issubdtype(q.dtype, jnp.floating):
+        return False
+    if k_scale is None:
+        return all(jnp.issubdtype(t.dtype, jnp.floating)
+                   for t in (k_pages, v_pages))
+    if v_scale is None:
+        return False
+    expect = (k_pages.shape[0], k_pages.shape[2])
+    return (all(t.dtype == jnp.int8 for t in (k_pages, v_pages))
+            and all(jnp.issubdtype(s.dtype, jnp.floating)
+                    and s.shape == expect for s in (k_scale, v_scale)))
+
+
+def _decode_eligible(st, q, k_pages, v_pages, table, lengths,
+                     k_scale=None, v_scale=None) -> bool:
     if st["softcap"] > 0:
         return False
     if q.shape[1] % k_pages.shape[2]:
         return False              # GQA group must divide evenly
-    return all(jnp.issubdtype(t.dtype, jnp.floating)
-               for t in (q, k_pages, v_pages))
+    return _paged_pools_ok(q, k_pages, v_pages, k_scale, v_scale)
 
 
-def _decode_plan_shape(st, q, k_pages, v_pages, table, lengths):
+def _decode_plan_shape(st, q, k_pages, v_pages, table, lengths,
+                       k_scale=None, v_scale=None):
     return (q.shape[0], q.shape[1], table.shape[1], k_pages.shape[1],
             q.shape[2])
 
 
-def _decode_ref_lowering(ctx, q, k_pages, v_pages, table, lengths):
+def _paged_plan_dtype(st, q, k_pages, *rest):
+    # tuned plans key on the POOL dtype (the KV-cache dtype axis): an int8
+    # pool's larger feasible tiles must never transplant onto a bf16 pool
+    return k_pages.dtype
+
+
+def _decode_ref_lowering(ctx, q, k_pages, v_pages, table, lengths,
+                         k_scale=None, v_scale=None):
     kw = ctx.kw
     return decode_attention_reference(
-        q, k_pages, v_pages, table, lengths, window=kw["window"],
-        softcap=kw["softcap"], accum_dtype=kw["accum_dtype"],
-        out_dtype=kw["out_dtype"])
+        q, k_pages, v_pages, table, lengths, k_scale, v_scale,
+        window=kw["window"], softcap=kw["softcap"],
+        accum_dtype=kw["accum_dtype"], out_dtype=kw["out_dtype"])
 
 
-def _decode_kernel_lowering(ctx, q, k_pages, v_pages, table, lengths):
+def _decode_kernel_lowering(ctx, q, k_pages, v_pages, table, lengths,
+                            k_scale=None, v_scale=None):
     kw = ctx.kw
     out = decode_attention(q, k_pages, v_pages, table, lengths,
+                           k_scale, v_scale,
                            window=kw["window"], plan=ctx.ops_plan())
     return out.astype(kw["out_dtype"])
 
@@ -587,31 +627,35 @@ def _decode_bad_example():
     return (q, kp, vp, table, lengths), {"softcap": 5.0}
 
 
-def _prefill_eligible(st, q, k_pages, v_pages, table, starts) -> bool:
+def _prefill_eligible(st, q, k_pages, v_pages, table, starts,
+                      k_scale=None, v_scale=None) -> bool:
     if st["softcap"] > 0:
         return False
     if q.shape[2] % k_pages.shape[2]:
         return False              # GQA group must divide evenly
-    return all(jnp.issubdtype(t.dtype, jnp.floating)
-               for t in (q, k_pages, v_pages))
+    return _paged_pools_ok(q, k_pages, v_pages, k_scale, v_scale)
 
 
-def _prefill_plan_shape(st, q, k_pages, v_pages, table, starts):
+def _prefill_plan_shape(st, q, k_pages, v_pages, table, starts,
+                        k_scale=None, v_scale=None):
     return (q.shape[0], q.shape[1], q.shape[2], table.shape[1],
             k_pages.shape[1], q.shape[3])
 
 
-def _prefill_ref_lowering(ctx, q, k_pages, v_pages, table, starts):
+def _prefill_ref_lowering(ctx, q, k_pages, v_pages, table, starts,
+                          k_scale=None, v_scale=None):
     kw = ctx.kw
     return prefill_attention_reference(
-        q, k_pages, v_pages, table, starts, window=kw["window"],
-        softcap=kw["softcap"], accum_dtype=kw["accum_dtype"],
-        out_dtype=kw["out_dtype"])
+        q, k_pages, v_pages, table, starts, k_scale, v_scale,
+        window=kw["window"], softcap=kw["softcap"],
+        accum_dtype=kw["accum_dtype"], out_dtype=kw["out_dtype"])
 
 
-def _prefill_kernel_lowering(ctx, q, k_pages, v_pages, table, starts):
+def _prefill_kernel_lowering(ctx, q, k_pages, v_pages, table, starts,
+                             k_scale=None, v_scale=None):
     kw = ctx.kw
     out = prefill_attention(q, k_pages, v_pages, table, starts,
+                            k_scale, v_scale,
                             window=kw["window"], plan=ctx.ops_plan())
     return out.astype(kw["out_dtype"])
 
@@ -660,21 +704,36 @@ def _flash_bwd_tune_call(args, plan):
     return flash_attention_bwd(*args, plan=plan)
 
 
+def _tune_pool(key, pool, page, hkv, hd, dtype):
+    """One tune-cell page pool at ``dtype``; int8 returns (pool, scales)
+    through the same abs-max quantizer the serve path writes with."""
+    vals = jax.random.normal(key, (pool, page, hkv, hd), jnp.float32)
+    if jnp.dtype(dtype) == jnp.int8:
+        from ...core.quant import quantize_pages
+        return quantize_pages(vals)
+    return vals.astype(dtype), None
+
+
 def _decode_tune_inputs(shape, dtype):
     """Paged ragged-decode cell: a shared pool with page 0 reserved, a
     shuffled (deterministic) page table, and staggered per-slot lengths so
-    the sweep times the masked-tail path the serve loop actually runs."""
+    the sweep times the masked-tail path the serve loop actually runs.
+    ``dtype`` is the POOL dtype (the cache's dtype axis): int8 cells build
+    quantized pools + scales with bf16 queries."""
     b, h, n_pages, page, hd = shape
     hkv = max(1, h // 2)                       # exercise GQA grouping
     pool = 1 + b * n_pages
     ks = jax.random.split(jax.random.key(0), 3)
-    q = jax.random.normal(ks[0], (b, h, hd), dtype)
-    k_pages = jax.random.normal(ks[1], (pool, page, hkv, hd), dtype)
-    v_pages = jax.random.normal(ks[2], (pool, page, hkv, hd), dtype)
+    q_dtype = jnp.bfloat16 if jnp.dtype(dtype) == jnp.int8 else dtype
+    q = jax.random.normal(ks[0], (b, h, hd), q_dtype)
+    k_pages, k_scale = _tune_pool(ks[1], pool, page, hkv, hd, dtype)
+    v_pages, v_scale = _tune_pool(ks[2], pool, page, hkv, hd, dtype)
     perm = jax.random.permutation(jax.random.key(3), pool - 1) + 1
     table = perm[:b * n_pages].reshape(b, n_pages).astype(jnp.int32)
     lengths = ((jnp.arange(b) + 1) * (n_pages * page) // b).astype(jnp.int32)
-    return (q, k_pages, v_pages, table, lengths)
+    if k_scale is None:
+        return (q, k_pages, v_pages, table, lengths)
+    return (q, k_pages, v_pages, table, lengths, k_scale, v_scale)
 
 
 def _decode_tune_call(args, plan):
@@ -683,20 +742,24 @@ def _decode_tune_call(args, plan):
 
 def _prefill_tune_inputs(shape, dtype):
     """Paged ragged-prefill cell: staggered page-aligned chunk offsets so
-    the sweep times the tile-skip path (early chunks see few live tiles)."""
+    the sweep times the tile-skip path (early chunks see few live tiles).
+    ``dtype`` is the POOL dtype; int8 cells quantize pools + carry scales."""
     b, c, h, n_pages, page, hd = shape
     hkv = max(1, h // 2)                       # exercise GQA grouping
     pool = 1 + b * n_pages
     ks = jax.random.split(jax.random.key(0), 3)
-    q = jax.random.normal(ks[0], (b, c, h, hd), dtype)
-    k_pages = jax.random.normal(ks[1], (pool, page, hkv, hd), dtype)
-    v_pages = jax.random.normal(ks[2], (pool, page, hkv, hd), dtype)
+    q_dtype = jnp.bfloat16 if jnp.dtype(dtype) == jnp.int8 else dtype
+    q = jax.random.normal(ks[0], (b, c, h, hd), q_dtype)
+    k_pages, k_scale = _tune_pool(ks[1], pool, page, hkv, hd, dtype)
+    v_pages, v_scale = _tune_pool(ks[2], pool, page, hkv, hd, dtype)
     perm = jax.random.permutation(jax.random.key(3), pool - 1) + 1
     table = perm[:b * n_pages].reshape(b, n_pages).astype(jnp.int32)
     max_start = (n_pages * page - c) // page
     starts = ((jnp.arange(b) * max(max_start, 0)) // max(b - 1, 1)
               * page).astype(jnp.int32)
-    return (q, k_pages, v_pages, table, starts)
+    if k_scale is None:
+        return (q, k_pages, v_pages, table, starts)
+    return (q, k_pages, v_pages, table, starts, k_scale, v_scale)
 
 
 def _prefill_tune_call(args, plan):
@@ -769,6 +832,7 @@ registry.register(registry.OpSpec(
     kernel=_decode_kernel_lowering,
     eligible=_decode_eligible,
     plan_shape=_decode_plan_shape,
+    plan_dtype=_paged_plan_dtype,
     tune=_TUNE["decode_attention"],
     example=_decode_example,
     bad_example=_decode_bad_example,
@@ -780,6 +844,7 @@ registry.register(registry.OpSpec(
     kernel=_prefill_kernel_lowering,
     eligible=_prefill_eligible,
     plan_shape=_prefill_plan_shape,
+    plan_dtype=_paged_plan_dtype,
     tune=_TUNE["prefill_attention"],
     example=_prefill_example,
     bad_example=_prefill_bad_example,

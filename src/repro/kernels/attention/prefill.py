@@ -44,15 +44,33 @@ from jax.experimental.pallas import tpu as pltpu
 from ..common import tpu_compiler_params
 
 
-def _prefill_kernel(starts_ref, table_ref, q_ref, *refs, n_tiles: int,
+def _prefill_kernel(starts_ref, table_ref, *rest, n_tiles: int,
                     page: int, ppt: int, grp: int, chunk: int, window: int,
-                    scale: float):
+                    scale: float, quantized: bool):
+    if quantized:
+        k_scale_ref, v_scale_ref, q_ref, *refs = rest
+    else:
+        k_scale_ref = v_scale_ref = None
+        q_ref, *refs = rest
     k_refs = refs[:ppt]
     v_refs = refs[ppt:2 * ppt]
     o_ref = refs[2 * ppt]
     m_ref, l_ref, acc_ref = refs[2 * ppt + 1:]
     b = pl.program_id(0)
+    hh = pl.program_id(1)
     j = pl.program_id(2)
+
+    def load_tile(refs_, scale_ref):
+        # int8 pools dequantize per page stream at load time (§4.4): the
+        # (page, hd) tile is widened to f32 and multiplied by its page's
+        # per-kv-head scale, fetched through the same scalar-prefetch path
+        # that resolved the physical page id (§4.1)
+        if scale_ref is None:
+            return jnp.concatenate([r[0, :, 0] for r in refs_], axis=0)
+        tiles = [r[0, :, 0].astype(jnp.float32)
+                 * scale_ref[table_ref[b, j * ppt + i], hh]
+                 for i, r in enumerate(refs_)]
+        return jnp.concatenate(tiles, axis=0)
 
     @pl.when(j == 0)
     def _init():
@@ -74,8 +92,8 @@ def _prefill_kernel(starts_ref, table_ref, q_ref, *refs, n_tiles: int,
     @pl.when(live)
     def _step():
         q = q_ref[0, 0]                                   # (C*grp, hd)
-        k = jnp.concatenate([r[0, :, 0] for r in k_refs], axis=0)
-        v = jnp.concatenate([r[0, :, 0] for r in v_refs], axis=0)
+        k = load_tile(k_refs, k_scale_ref)
+        v = load_tile(v_refs, v_scale_ref)
         s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
         # row r of the flattened (C*grp) query axis is token r // grp
         qpos = start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // grp
@@ -102,11 +120,18 @@ def _prefill_kernel(starts_ref, table_ref, q_ref, *refs, n_tiles: int,
 
 def prefill_attention_pallas(q: jax.Array, k_pages: jax.Array,
                              v_pages: jax.Array, table: jax.Array,
-                             starts: jax.Array, *, window: int = 0,
+                             starts: jax.Array,
+                             k_scale: jax.Array = None,
+                             v_scale: jax.Array = None, *, window: int = 0,
                              pages_per_tile: int = 1,
                              interpret: bool = False) -> jax.Array:
     """q (B, C, H, hd); k/v_pages (P, page, Hkv, hd); table (B, n_pages);
-    starts (B,) page-aligned chunk offsets.  Returns (B, C, H, hd) f32."""
+    starts (B,) page-aligned chunk offsets.  Returns (B, C, H, hd) f32.
+
+    int8 pools additionally take ``k_scale`` / ``v_scale`` (P, Hkv) f32
+    per-page per-kv-head scales; they ride the scalar-prefetch path next
+    to ``table`` and the page tiles dequantize at load time."""
+    quantized = k_scale is not None
     b, c, h, hd = q.shape
     _, page, hkv, _ = k_pages.shape
     n_pages = table.shape[1]
@@ -128,28 +153,32 @@ def prefill_attention_pallas(q: jax.Array, k_pages: jax.Array,
 
     kernel = functools.partial(
         _prefill_kernel, n_tiles=n_tiles, page=page, ppt=ppt, grp=grp,
-        chunk=c, window=window, scale=1.0 / math.sqrt(hd))
+        chunk=c, window=window, scale=1.0 / math.sqrt(hd),
+        quantized=quantized)
 
+    # int8 pools prefetch two extra scalar operands (the scale tables), so
+    # every index map takes a *prefetch tail of 2 or 4 refs
     def page_spec(i):
         # the i-th page stream of a KV tile: tile j holds logical pages
         # [j*ppt, (j+1)*ppt); the scalar-prefetched table resolves the
         # logical -> physical page id inside the index map (§4.1)
         return pl.BlockSpec(
             (1, page, 1, hd),
-            lambda bb, hh, jj, starts, tab, i=i: (tab[bb, jj * ppt + i],
-                                                  0, hh, 0))
+            lambda bb, hh, jj, st, tab, *_sc, i=i: (tab[bb, jj * ppt + i],
+                                                    0, hh, 0))
 
+    q_spec = pl.BlockSpec((1, 1, rows, hd),
+                          lambda bb, hh, jj, st, tab, *_sc: (bb, hh, 0, 0))
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=4 if quantized else 2,
         grid=(b, hkv, n_tiles),
         in_specs=[
-            pl.BlockSpec((1, 1, rows, hd),
-                         lambda bb, hh, jj, starts, tab: (bb, hh, 0, 0)),
+            q_spec,
             *[page_spec(i) for i in range(ppt)],
             *[page_spec(i) for i in range(ppt)],
         ],
         out_specs=pl.BlockSpec((1, 1, rows, hd),
-                               lambda bb, hh, jj, starts, tab:
+                               lambda bb, hh, jj, st, tab, *_sc:
                                (bb, hh, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((rows, 1), jnp.float32),     # running max
@@ -157,6 +186,10 @@ def prefill_attention_pallas(q: jax.Array, k_pages: jax.Array,
             pltpu.VMEM((rows, hd), jnp.float32),    # weighted-V acc
         ],
     )
+    prefetch = (starts.astype(jnp.int32), table)
+    if quantized:
+        prefetch += (k_scale.astype(jnp.float32),
+                     v_scale.astype(jnp.float32))
     out = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
@@ -164,7 +197,6 @@ def prefill_attention_pallas(q: jax.Array, k_pages: jax.Array,
         compiler_params=tpu_compiler_params(
             ("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(starts.astype(jnp.int32), table, qg,
-      *([k_pages] * ppt), *([v_pages] * ppt))
+    )(*prefetch, qg, *([k_pages] * ppt), *([v_pages] * ppt))
     return out.reshape(b, hkv, c, grp, hd).transpose(0, 2, 1, 3, 4) \
         .reshape(b, c, h, hd)

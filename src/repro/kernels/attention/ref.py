@@ -7,18 +7,34 @@ import jax
 import jax.numpy as jnp
 
 
+def _gather_pages(pages: jax.Array, table: jax.Array,
+                  scale: jax.Array) -> jax.Array:
+    """Gather a pool's pages per slot; int8 pools (scale (P, Hkv) f32
+    per-page per-kv-head) dequantize to f32 at gather time — the oracle
+    twin of the kernels' in-tile dequant."""
+    b = table.shape[0]
+    hkv, hd = pages.shape[2], pages.shape[3]
+    g = pages[table]                       # (B, n_pages, page, Hkv, hd)
+    if scale is not None:
+        g = g.astype(jnp.float32) * scale[table][:, :, None, :, None]
+    return g.reshape(b, -1, hkv, hd)
+
+
 def decode_attention_ref(q: jax.Array, k_pages: jax.Array,
                          v_pages: jax.Array, table: jax.Array,
-                         lengths: jax.Array, *,
+                         lengths: jax.Array,
+                         k_scale: jax.Array = None,
+                         v_scale: jax.Array = None, *,
                          window: int = 0) -> jax.Array:
     """Oracle for paged ragged decode: gather pages to a dense (B, S, Hkv,
-    hd) view, mask key positions past each slot's length (and older than
-    its window), f32 softmax.  q (B, H, hd) -> (B, H, hd) f32."""
+    hd) view (dequantizing int8 pools through ``k_scale`` / ``v_scale``),
+    mask key positions past each slot's length (and older than its
+    window), f32 softmax.  q (B, H, hd) -> (B, H, hd) f32."""
     b, h, hd = q.shape
     _, page, hkv, _ = k_pages.shape
     grp = h // hkv
-    k = k_pages[table].reshape(b, -1, hkv, hd)       # (B, n_pages*page, ...)
-    v = v_pages[table].reshape(b, -1, hkv, hd)
+    k = _gather_pages(k_pages, table, k_scale)       # (B, n_pages*page, ...)
+    v = _gather_pages(v_pages, table, v_scale)
     if grp > 1:                                      # GQA group broadcast
         k = jnp.broadcast_to(k[:, :, :, None, :],
                              k.shape[:3] + (grp, hd)).reshape(b, -1, h, hd)
@@ -40,18 +56,21 @@ def decode_attention_ref(q: jax.Array, k_pages: jax.Array,
 
 def prefill_attention_ref(q: jax.Array, k_pages: jax.Array,
                           v_pages: jax.Array, table: jax.Array,
-                          starts: jax.Array, *,
+                          starts: jax.Array,
+                          k_scale: jax.Array = None,
+                          v_scale: jax.Array = None, *,
                           window: int = 0) -> jax.Array:
     """Oracle for paged ragged multi-token prefill: gather pages to a
-    dense (B, S, Hkv, hd) view, mask causally against each chunk's own
+    dense (B, S, Hkv, hd) view (dequantizing int8 pools through
+    ``k_scale`` / ``v_scale``), mask causally against each chunk's own
     positions (``starts[b] + [0, C)``; the chunk's own keys are already in
     the pool) and by the sliding window, f32 softmax.
     q (B, C, H, hd) -> (B, C, H, hd) f32."""
     b, c, h, hd = q.shape
     _, page, hkv, _ = k_pages.shape
     grp = h // hkv
-    k = k_pages[table].reshape(b, -1, hkv, hd)       # (B, n_pages*page, ...)
-    v = v_pages[table].reshape(b, -1, hkv, hd)
+    k = _gather_pages(k_pages, table, k_scale)       # (B, n_pages*page, ...)
+    v = _gather_pages(v_pages, table, v_scale)
     if grp > 1:                                      # GQA group broadcast
         k = jnp.broadcast_to(k[:, :, :, None, :],
                              k.shape[:3] + (grp, hd)).reshape(b, -1, h, hd)

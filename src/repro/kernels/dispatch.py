@@ -201,7 +201,9 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
 
 def decode_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
-                     table: jax.Array, lengths: jax.Array, *,
+                     table: jax.Array, lengths: jax.Array,
+                     k_scale: Optional[jax.Array] = None,
+                     v_scale: Optional[jax.Array] = None, *,
                      window: int = 0, softcap: float = 0.0,
                      accum_dtype: Any = jnp.float32,
                      out_dtype: Any = None,
@@ -211,20 +213,28 @@ def decode_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     q (B, H, hd) one query token per slot; k_pages / v_pages (P, page,
     Hkv, hd) shared pools; table (B, n_pages) logical->physical page ids;
     lengths (B,) valid tokens per slot (0 = inactive -> zero output).
+    int8 pools additionally pass ``k_scale`` / ``v_scale`` (P, Hkv) f32
+    per-page per-kv-head scales (both or neither); the kernel dequantizes
+    page tiles at load time, the reference at gather time.
     Returns (B, H, hd) in ``out_dtype`` (default q's dtype).  Inference
     only — no custom VJP; the kernel route consults the tuned-plan cache
-    for KV-tile geometry.
+    for KV-tile geometry (keyed on the POOL dtype).
     """
     out_dtype = q.dtype if out_dtype is None else out_dtype
+    args = (q, k_pages, v_pages, table, lengths)
+    if k_scale is not None:
+        args += (k_scale, v_scale)
     return _call(
-        "decode_attention", q, k_pages, v_pages, table, lengths,
+        "decode_attention", *args,
         statics=dict(window=int(window), softcap=float(softcap),
                      accum_dtype=accum_dtype, out_dtype=out_dtype),
         policy=policy)
 
 
 def prefill_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
-                      table: jax.Array, starts: jax.Array, *,
+                      table: jax.Array, starts: jax.Array,
+                      k_scale: Optional[jax.Array] = None,
+                      v_scale: Optional[jax.Array] = None, *,
                       window: int = 0, softcap: float = 0.0,
                       accum_dtype: Any = jnp.float32,
                       out_dtype: Any = None,
@@ -236,13 +246,33 @@ def prefill_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     chunk offsets — slot b's queries sit at positions ``starts[b] +
     [0, C)`` and attend causally over the cached history plus the chunk
     itself (padded tail positions are hidden by causality).  Returns
-    (B, C, H, hd) in ``out_dtype`` (default q's dtype).  Inference only —
-    no custom VJP; the first op registered end-to-end through the registry
-    (kernel, oracle, tune space, plan key: one ``OpSpec``).
+    (B, C, H, hd) in ``out_dtype`` (default q's dtype).  int8 pools pass
+    ``k_scale`` / ``v_scale`` (P, Hkv) f32 scales like ``decode_attention``.
+    Inference only — no custom VJP; the first op registered end-to-end
+    through the registry (kernel, oracle, tune space, plan key: one
+    ``OpSpec``).
     """
     out_dtype = q.dtype if out_dtype is None else out_dtype
+    args = (q, k_pages, v_pages, table, starts)
+    if k_scale is not None:
+        args += (k_scale, v_scale)
     return _call(
-        "prefill_attention", q, k_pages, v_pages, table, starts,
+        "prefill_attention", *args,
         statics=dict(window=int(window), softcap=float(softcap),
                      accum_dtype=accum_dtype, out_dtype=out_dtype),
         policy=policy)
+
+
+def quantized_matmul(x: jax.Array, w_q: jax.Array, w_scale: jax.Array, *,
+                     policy: PolicyLike = None) -> jax.Array:
+    """Int8-weight matmul with per-output-channel dequant (§4.4 demotion).
+
+    x: (..., K) floating activations; w_q: (K, N) int8 weights; w_scale:
+    (N,) f32 per-channel scales (``core.quant.quantize_channelwise``
+    layout).  The kernel folds the dequant into the MXU loop — int8
+    weights widen in-register and the channel scale is applied ONCE at the
+    K-flush (it factors out of the K contraction); the reference lowering
+    dequantizes then einsums.  Returns x.shape[:-1] + (N,) f32.  Inference
+    only — no custom VJP (the int8 weight is not differentiable).
+    """
+    return _call("quantized_matmul", x, w_q, w_scale, policy=policy)

@@ -21,7 +21,7 @@ from ...tune.cache import resolve_plan
 from .. import registry
 from ..common import interpret_default
 from . import ref
-from .matmul import matmul_pallas
+from .matmul import matmul_pallas, quantized_matmul_pallas
 
 
 @functools.partial(jax.jit, static_argnames=("level", "plan", "interpret"))
@@ -81,6 +81,54 @@ def matmul(a: jax.Array, b: jax.Array, *,
                 m, n, k, min(kw["bm"], m), min(kw["bn"], n),
                 min(kw["bk"], k), in_bytes=a.dtype.itemsize)
     return _matmul(a, b, level=level, plan=tile_plan, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("level", "plan", "interpret"))
+def _quantized_matmul(a: jax.Array, b_q: jax.Array, b_scale: jax.Array, *,
+                      level: Level, plan: Optional[TilePlan],
+                      interpret: bool) -> jax.Array:
+    if level in (Level.T0_NAIVE, Level.T1_PIPELINED):
+        return ref.quantized_matmul_ref(a, b_q, b_scale)
+    m, k = a.shape
+    _, n = b_q.shape
+    if plan is None:
+        if level == Level.T2_VECTORIZED:
+            plan = TilePlan(128, 128, 128, 0, (m // 128, n // 128, k // 128),
+                            0.0, 0.0)
+        else:
+            plan = TilePlanner().plan_matmul(
+                m, n, k, in_bytes=a.dtype.itemsize)
+    return quantized_matmul_pallas(a, b_q, b_scale, plan,
+                                   interpret=interpret)
+
+
+def quantized_matmul(a: jax.Array, b_q: jax.Array, b_scale: jax.Array, *,
+                     level: Level = Level.T3_REPLICATED,
+                     plan: Union[str, dict, TilePlan, None] = "heuristic",
+                     interpret: Optional[bool] = None) -> jax.Array:
+    """C = A @ dequant(B) with int8 B and per-column f32 scales (§4.4).
+
+    Same staging/plan contract as :func:`matmul`; plans live in their own
+    ``"quantized_matmul"`` namespace (the int8 B tile halves the VMEM cost
+    of a given geometry, so matmul entries don't transplant)."""
+    if interpret is None:
+        interpret = interpret_default()
+    m, k = a.shape
+    _, n = b_q.shape
+    tile_plan: Optional[TilePlan] = None
+    if isinstance(plan, TilePlan):
+        tile_plan = plan
+    else:
+        level, kw = resolve_plan("quantized_matmul", (m, k, n), a.dtype,
+                                 level, plan)
+        if kw:
+            planner = TilePlanner(
+                double_buffer=kw.get("prefetch_depth", 2) >= 2)
+            tile_plan = planner.plan_from_tiles(
+                m, n, k, min(kw["bm"], m), min(kw["bn"], n),
+                min(kw["bk"], k), in_bytes=a.dtype.itemsize)
+    return _quantized_matmul(a, b_q, b_scale, level=level, plan=tile_plan,
+                             interpret=interpret)
 
 
 # --------------------------------------------------------------------------
@@ -211,6 +259,84 @@ def _grouped_bad_example():
     return (x, w), {}
 
 
+def _quantized_eligible(statics, x, w_q, w_scale) -> bool:
+    if x.ndim < 2 or w_q.ndim != 2 or w_scale.ndim != 1:
+        return False
+    if x.shape[-1] != w_q.shape[0] or w_scale.shape[0] != w_q.shape[1]:
+        return False
+    if not (jnp.issubdtype(x.dtype, jnp.floating)
+            and w_q.dtype == jnp.int8
+            and jnp.issubdtype(w_scale.dtype, jnp.floating)):
+        return False
+    m = math.prod(x.shape[:-1])
+    k, n = w_q.shape
+    if min(m, k, n) < 1:
+        return False
+    try:
+        TilePlanner().plan_matmul(m, n, k, in_bytes=x.dtype.itemsize)
+    except ValueError:
+        return False
+    return True
+
+
+def _quantized_plan_shape(statics, x, w_q, w_scale):
+    return (math.prod(x.shape[:-1]), x.shape[-1], w_q.shape[1])
+
+
+def _quantized_reference(ctx, x, w_q, w_scale):
+    k = x.shape[-1]
+    out = ref.quantized_matmul_ref(x.reshape(-1, k), w_q, w_scale)
+    return out.reshape(x.shape[:-1] + (w_q.shape[1],))
+
+
+def _quantized_kernel_lowering(ctx, x, w_q, w_scale):
+    k = x.shape[-1]
+    out = quantized_matmul(x.reshape(-1, k), w_q, w_scale,
+                           plan=ctx.ops_plan())
+    return out.reshape(x.shape[:-1] + (w_q.shape[1],))
+
+
+def _quantized_example(dtype):
+    from ...core.quant import quantize_channelwise
+    x = jax.random.normal(jax.random.key(0), (2, 16, 32), dtype)
+    w = jax.random.normal(jax.random.key(1), (32, 24), jnp.float32)
+    w_q, w_scale = quantize_channelwise(w)
+    return (x, w_q, w_scale), {}
+
+
+def _quantized_bad_example():
+    # float weights: the point of this op is the int8 B operand — anything
+    # else must route to plain ``matmul``, so eligibility rejects floats
+    x = jax.random.normal(jax.random.key(0), (8, 32), jnp.float32)
+    w = jax.random.normal(jax.random.key(1), (32, 24), jnp.float32)
+    scale = jnp.ones((24,), jnp.float32)
+    return (x, w, scale), {}
+
+
+def _quantized_tune_inputs(shape, dtype):
+    from ...core.quant import quantize_channelwise
+    m, k, n = shape
+    a = jax.random.normal(jax.random.key(0), (m, k), dtype)
+    w = jax.random.normal(jax.random.key(1), (k, n), jnp.float32)
+    w_q, w_scale = quantize_channelwise(w)
+    return (a, w_q, w_scale)
+
+
+def _quantized_tune_call(args, plan):
+    return quantized_matmul(*args, plan=plan)
+
+
+def _quantized_tune_spec():
+    from ...tune.space import quantized_matmul_space
+    return registry.TuneSpec(
+        space=quantized_matmul_space,
+        make_inputs=_quantized_tune_inputs,
+        call=_quantized_tune_call,
+        default_dtype=jnp.float32,
+        default_shapes=((256, 256, 256), (384, 128, 512)),
+    )
+
+
 def _matmul_tune_inputs(shape, dtype):
     m, k, n = shape
     a = jax.random.normal(jax.random.key(0), (m, k), dtype)
@@ -244,6 +370,19 @@ registry.register(registry.OpSpec(
     tune=_matmul_tune_spec(),
     example=_matmul_example,
     bad_example=_matmul_bad_example,
+))
+
+registry.register(registry.OpSpec(
+    name="quantized_matmul",
+    reference=_quantized_reference,
+    kernel=_quantized_kernel_lowering,
+    eligible=_quantized_eligible,
+    plan_shape=_quantized_plan_shape,
+    tune=_quantized_tune_spec(),
+    example=_quantized_example,
+    bad_example=_quantized_bad_example,
+    # no VJP: the int8 weight operand is not differentiable — training
+    # keeps float weights and routes through ``matmul``
 ))
 
 registry.register(registry.OpSpec(

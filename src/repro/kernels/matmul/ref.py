@@ -17,6 +17,14 @@ def matmul_ref(a: jax.Array, b: jax.Array,
         .astype(acc_dtype)
 
 
+def quantized_matmul_ref(a: jax.Array, b_q: jax.Array,
+                         b_scale: jax.Array) -> jax.Array:
+    """Oracle for the int8-weight matmul: dequantize B to f32 (per-output-
+    channel scales), then the usual f32-accumulated dot."""
+    b = b_q.astype(jnp.float32) * b_scale.astype(jnp.float32)[None, :]
+    return matmul_ref(a, b)
+
+
 def matmul_t0_naive(a: jax.Array, b: jax.Array) -> jax.Array:
     """Paper Lst. 1a: K-loop with a loop-carried accumulation dependency.
     On TPU this lowers to a sequential fori_loop of rank-1 updates — the

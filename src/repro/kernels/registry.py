@@ -95,6 +95,9 @@ class OpSpec:
     eligible: Optional[Callable] = None      # (statics, *args) -> bool
     plan_shape: Optional[Callable] = None    # (statics, *args) -> key shape
     plan_kernel: Optional[str] = None        # tuned-plan namespace (default: name)
+    plan_dtype: Optional[Callable] = None    # (statics, *args) -> key dtype
+    #   (default: args[0].dtype; paged-attention ops key on the POOL dtype
+    #   so int8-cache plans never transplant onto bf16 pools)
     vjp_fwd: Optional[Callable] = None       # (ctx, *args) -> (out, residuals)
     vjp_bwd: Optional[Callable] = None       # (ctx, residuals, g) -> grads
     tune: Optional[TuneSpec] = None
@@ -316,8 +319,10 @@ def call(name: str, *args, statics: Optional[Dict[str, Any]] = None,
     source: Optional[str] = None
     if use_kernel and spec.plan_shape is not None:
         shape = spec.plan_shape(st_dict, *args)
+        key_dtype = (spec.plan_dtype(st_dict, *args)
+                     if spec.plan_dtype is not None else args[0].dtype)
         level, kw, source = resolve_plan_source(
-            spec.plan_kernel or name, shape, args[0].dtype, level, "tuned")
+            spec.plan_kernel or name, shape, key_dtype, level, "tuned")
         plan_kw = dict(kw or {})
         if level in (Level.T0_NAIVE, Level.T1_PIPELINED):
             # the tuned entry says the reference lowering wins here:

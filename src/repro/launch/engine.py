@@ -185,6 +185,11 @@ class ContinuousEngine:
         self.admission_order: List[int] = []
         self.iterations = 0
         self.max_resident = 0
+        # peak BYTES of live KV pool (pages x per-page bytes at the
+        # active storage dtype, scales included) — the residency metric
+        # that stays comparable across kv_dtype, unlike max_resident
+        # (request count) or held pages (dtype-blind)
+        self.max_resident_kv_bytes = 0
 
     # ------------------------------------------------------------- warmup
     def warmup(self) -> None:
@@ -284,6 +289,8 @@ class ContinuousEngine:
         self.max_resident = max(
             self.max_resident,
             sum(1 for a in sched.active if a is not None))
+        self.max_resident_kv_bytes = max(
+            self.max_resident_kv_bytes, sched.kv_bytes_resident())
 
         running = [i for i in range(sched.slots)
                    if sched.active[i] is not None and self.states[i] is None]

@@ -166,6 +166,13 @@ class PageAllocator:
         self.total = total_pages
         self._free = list(range(total_pages - 1, 0, -1))
         self.ref = [0] * total_pages
+        # single choke point for owners that must react to page reuse:
+        # called with the page list every ``alloc`` hands out.  The paged
+        # scheduler resets quantization scale rows here — a recycled
+        # page's stale scales must never leak into its next sequence.
+        # Copy-on-write copies its payload AFTER alloc, so copied scales
+        # survive the reset.
+        self.on_alloc = None
 
     def available(self) -> int:
         return len(self._free)
@@ -183,6 +190,8 @@ class PageAllocator:
         for p in got:
             assert self.ref[p] == 0, f"page {p} allocated while referenced"
             self.ref[p] = 1
+        if got and self.on_alloc is not None:
+            self.on_alloc(got)
         return got
 
     def share(self, page: int) -> None:
@@ -199,13 +208,55 @@ class PageAllocator:
 
 def _copy_cache_page(cache, src, dst):
     """Copy one physical page across every layer's K/V pools (the
-    copy-on-write payload).  Pool leaves are (P, page, Hkv, hd); scanned
-    layer stacks carry a leading period axis."""
+    copy-on-write payload).  Pool leaves are (P, page, Hkv, hd) and, for
+    quantized pools, (P, Hkv) scale rows; scanned layer stacks carry a
+    leading period axis (ndim 5 / 3).  Scales ride the same copy so a
+    CoW'd page dequantizes identically to its source."""
     def cp(a):
-        if a.ndim == 5:
+        if a.ndim in (3, 5):
             return a.at[:, dst].set(a[:, src])
         return a.at[dst].set(a[src])
     return jax.tree.map(cp, cache)
+
+
+def _reset_page_scales(cache, pages):
+    """Zero the quantization scale rows of freshly-allocated pages.
+
+    A recycled page still holds its previous sequence's int8 payload and
+    scales; ``append_token_quantized`` treats scale 0 as "empty page" and
+    wipes the stale payload on the first write, so resetting the scale
+    row here is what makes page reuse sound under quantization.  No-op
+    for float pools (no ``*_scale`` leaves)."""
+    def walk(node):
+        if isinstance(node, dict):
+            out = {}
+            for k, v in node.items():
+                if isinstance(k, str) and k.endswith("_scale"):
+                    out[k] = (v.at[:, pages].set(0.0) if v.ndim == 3
+                              else v.at[pages].set(0.0))
+                else:
+                    out[k] = walk(v)
+            return out
+        if isinstance(node, list):
+            return [walk(v) for v in node]
+        return node
+    return walk(cache)
+
+
+def _page_bytes(cache) -> int:
+    """Bytes ONE physical page occupies across every cache leaf — K/V
+    pools at the active storage dtype plus any scale rows.  Pool axis is
+    0 for per-layer leaves ((P, page, Hkv, hd) pools, (P, Hkv) scales)
+    and 1 for scanned stacks with a leading period axis."""
+    total = 0
+    for leaf in jax.tree.leaves(cache):
+        pool_axis = 1 if leaf.ndim in (3, 5) else 0
+        per_page = 1
+        for i, s in enumerate(leaf.shape):
+            if i != pool_axis:
+                per_page *= s
+        total += per_page * jnp.dtype(leaf.dtype).itemsize
+    return total
 
 
 def pick_page_size(backend: Optional[str] = None) -> int:
@@ -264,6 +315,13 @@ class PagedScheduler:
         self.alloc = PageAllocator(total)
         self.cache = model.init_paged_cache(slots, max_len, self.page,
                                             total_pages=total)
+        # quantized pools carry per-page scale rows; their lifecycle is
+        # slaved to the allocator via on_alloc (reset-on-reuse)
+        self._has_scales = any(
+            leaf.ndim in (2, 3) for leaf in jax.tree.leaves(self.cache))
+        self._page_bytes = _page_bytes(self.cache)
+        if self._has_scales:
+            self.alloc.on_alloc = self._reset_scales
         self.table = np.zeros((slots, self.n_slot_pages), np.int32)
         self.lengths = np.zeros((slots,), np.int32)
         self.active: List[Optional[Request]] = [None] * slots
@@ -488,11 +546,25 @@ class PagedScheduler:
             self.check_page_accounting()
         return freed
 
+    def _reset_scales(self, pages: List[int]) -> None:
+        """Allocator ``on_alloc`` hook: zero the scale rows of every page
+        the allocator just handed out (see ``_reset_page_scales``)."""
+        self.cache = _reset_page_scales(
+            self.cache, jnp.asarray(pages, jnp.int32))
+
     def held_pages(self) -> int:
         """Physical pages with at least one holder (excl. trash page 0).
         A page shared by several slots and/or the prefix trie counts
         once — holders are tracked by the allocator's refcounts."""
         return self.alloc.held()
+
+    def kv_bytes_resident(self) -> int:
+        """Bytes of KV pool held by live pages, at the ACTIVE storage
+        dtype (pools + scale rows): the byte-denominated residency that
+        makes fp32/bf16/int8 serving directly comparable — int8 halves
+        bf16's per-page cost and quarters fp32's, minus the small scale
+        overhead."""
+        return self.held_pages() * self._page_bytes
 
     def check_page_accounting(self) -> None:
         """Invariant, refcount-aware: every page is either free, held
@@ -514,6 +586,32 @@ class PagedScheduler:
         assert refs == expected, (
             f"refcount accounting broken: sum(ref)={refs} != "
             f"slot bindings + cow stash + trie = {expected}")
+        # quantized pools: every int8 pages leaf must carry a companion
+        # scale leaf sized to the same pool — scales are allocated with
+        # their pages and recycled with them (reset via on_alloc), so a
+        # missing or mis-sized scale buffer means a leak in that lockstep
+        self._check_scale_lockstep()
+
+    def _check_scale_lockstep(self) -> None:
+        def walk(node):
+            if isinstance(node, list):
+                for v in node:
+                    walk(v)
+                return
+            if not isinstance(node, dict):
+                return
+            for k, v in node.items():
+                if isinstance(v, (dict, list)):
+                    walk(v)
+                elif k in ("k_pages", "v_pages") and v.dtype == jnp.int8:
+                    s = node.get(k[0] + "_scale")
+                    assert s is not None, (
+                        f"int8 pool {k} has no companion {k[0]}_scale")
+                    pool = v.shape[1] if v.ndim == 5 else v.shape[0]
+                    spool = s.shape[1] if s.ndim == 3 else s.shape[0]
+                    assert spool == pool, (
+                        f"scale pool {spool} != page pool {pool} for {k}")
+        walk(self.cache)
 
     def _recycle(self, slot: int) -> None:
         self.alloc.release(self.slot_pages[slot][self.reclaimed[slot]:]
@@ -641,6 +739,16 @@ def main(argv=None):
     ap.add_argument("--total-pages", type=int, default=0,
                     help="page-pool size; 0 = full capacity "
                          "(slots x max_len); smaller oversubscribes")
+    ap.add_argument("--kv-dtype", default="",
+                    choices=("", "fp32", "bf16", "int8"),
+                    help="paged KV pool storage dtype ('' = model compute "
+                         "dtype); int8 stores symmetric-quantized pages "
+                         "with per-(page, kv-head) f32 scales and the "
+                         "ragged kernels dequantize at tile load")
+    ap.add_argument("--weights-dtype", default="", choices=("", "int8"),
+                    help="projection/MLP weight GEMMs: int8 routes through "
+                         "dispatch.quantized_matmul (per-channel scales, "
+                         "fused dequant, f32 accumulate)")
     ap.add_argument("--prefix-cache", action="store_true",
                     help="paged: share KV pages across requests with "
                          "common prompt prefixes (refcounted pages, "
@@ -683,7 +791,9 @@ def main(argv=None):
         cfg = cfg.smoke()
     cfg = dataclasses.replace(cfg, dispatch=args.dispatch,
                               kv_cache=args.cache,
-                              kv_page_size=args.page_size)
+                              kv_page_size=args.page_size,
+                              kv_dtype=args.kv_dtype,
+                              weights_dtype=args.weights_dtype)
     print(f"[dispatch] policy={args.dispatch}")
     if cfg.input_mode == "embeddings":
         raise SystemExit("serving demo drives token-mode archs")
@@ -699,6 +809,8 @@ def main(argv=None):
         print(f"[paged] page_size={server.page} "
               f"pool={server.alloc.total} pages "
               f"({server.n_slot_pages}/slot max, "
+              f"kv_dtype={args.kv_dtype or 'compute'}, "
+              f"page_bytes={server._page_bytes}, "
               f"prefix_cache={'on' if args.prefix_cache else 'off'})")
     else:
         server = Server(model, params, slots=args.slots,

@@ -23,6 +23,7 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..core import quant
 from ..core.memory import DtypePolicy
 from ..kernels import dispatch
 
@@ -122,6 +123,27 @@ class AttnSpec:
     # kernel-routing policy ("kernels" | "reference" | "auto"), copied from
     # ArchConfig.dispatch by the model builder
     dispatch: str = "auto"
+    # "" = float weight GEMMs (dispatch.matmul); "int8" = per-channel
+    # quantized projections through dispatch.quantized_matmul (§4.4),
+    # copied from ArchConfig.weights_dtype by the model builder
+    weights_dtype: str = ""
+
+
+def project(x: jax.Array, w: jax.Array, *, policy: str = "auto",
+            weights_dtype: str = "") -> jax.Array:
+    """Contract x (..., K) with w (K, ...) at the configured weight dtype.
+
+    ``"int8"`` quantizes the weight per output channel and routes through
+    ``dispatch.quantized_matmul`` (fused in-kernel dequant); under jit the
+    quantization is constant-folded against the weight, so the GEMM itself
+    streams int8 from HBM.  Anything else is a plain ``dispatch.matmul``.
+    """
+    if weights_dtype == "int8":
+        k = w.shape[0]
+        w_q, w_scale = quant.quantize_channelwise(w.reshape(k, -1))
+        out = dispatch.quantized_matmul(x, w_q, w_scale, policy=policy)
+        return out.reshape(x.shape[:-1] + w.shape[1:]).astype(x.dtype)
+    return dispatch.matmul(x, w, policy=policy)
 
 
 def attention_init(key, s: AttnSpec) -> Params:
@@ -145,9 +167,11 @@ def _qkv(p: Params, s: AttnSpec, x: jax.Array, positions: jax.Array,
     cdt = dt.compute
     # (b,s,d) x (d,h,k) -> (b,s,h,k): dispatch contracts last-vs-first, so
     # the weight tensors pass through un-reshaped
-    q = dispatch.matmul(x, p["wq"].astype(cdt), policy=s.dispatch)
-    k = dispatch.matmul(x, p["wk"].astype(cdt), policy=s.dispatch)
-    v = dispatch.matmul(x, p["wv"].astype(cdt), policy=s.dispatch)
+    mm = functools.partial(project, policy=s.dispatch,
+                           weights_dtype=s.weights_dtype)
+    q = mm(x, p["wq"].astype(cdt))
+    k = mm(x, p["wk"].astype(cdt))
+    v = mm(x, p["wv"].astype(cdt))
     if s.qkv_bias:
         q = q + p["bq"].astype(cdt)
         k = k + p["bk"].astype(cdt)
@@ -174,10 +198,10 @@ def _out_proj(p: Params, s: AttnSpec, out: jax.Array,
     """(B, S, H, hd) -> (B, S, d) via wo (H, hd, d)."""
     b, sq = out.shape[:2]
     wo = p["wo"].astype(dt.compute)
-    return dispatch.matmul(
+    return project(
         out.reshape(b, sq, s.n_heads * s.head_dim),
         wo.reshape(s.n_heads * s.head_dim, s.d_model),
-        policy=s.dispatch)
+        policy=s.dispatch, weights_dtype=s.weights_dtype)
 
 
 def attention_naive(p: Params, s: AttnSpec, x: jax.Array,
@@ -272,15 +296,22 @@ def attention_decode_paged(p: Params, s: AttnSpec, x: jax.Array,
                            lengths: jax.Array, table: jax.Array,
                            k_pages: jax.Array, v_pages: jax.Array,
                            dt: DtypePolicy,
+                           k_scale: Optional[jax.Array] = None,
+                           v_scale: Optional[jax.Array] = None,
                            positions_override: Optional[jax.Array] = None
-                           ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+                           ) -> Tuple[jax.Array, jax.Array, jax.Array,
+                                      Optional[jax.Array],
+                                      Optional[jax.Array]]:
     """One-token ragged decode against the paged KV cache.
 
     x: (B, 1, d).  lengths: (B,) int32 tokens already cached per slot —
     the new token lands at position ``lengths[b]`` (the scheduler must
     have a page allocated there; inactive slots point at the trash page).
     table: (B, n_pages) int32 logical->physical page ids into the shared
-    (P, page, Hkv, hd) pools.  Returns (out (B,1,d), k_pages, v_pages).
+    (P, page, Hkv, hd) pools.  int8 pools additionally carry ``k_scale`` /
+    ``v_scale`` (P, Hkv) f32: the append runs the running-max requantize
+    (``core.quant``) and the scales ride into the kernel's scalar-prefetch
+    path.  Returns (out (B,1,d), k_pages, v_pages, k_scale, v_scale).
     """
     b = x.shape[0]
     page = k_pages.shape[1]
@@ -291,23 +322,41 @@ def attention_decode_paged(p: Params, s: AttnSpec, x: jax.Array,
     # slot's table maps position lengths[b] to — no rectangle to reshape
     pid = table[jnp.arange(b), lengths // page]
     off = lengths % page
-    k_pages = k_pages.at[pid, off].set(k[:, 0].astype(k_pages.dtype))
-    v_pages = v_pages.at[pid, off].set(v[:, 0].astype(v_pages.dtype))
+    if k_scale is not None:
+        # quantize-on-write: gather the B target pages, append with the
+        # running-max rescale, scatter pages + scales back (slots are
+        # distinct; inactive slots all hit the never-read trash page)
+        pk, sk = quant.append_token_quantized(
+            k_pages[pid], k_scale[pid], k[:, 0], off)
+        pv, sv = quant.append_token_quantized(
+            v_pages[pid], v_scale[pid], v[:, 0], off)
+        k_pages = k_pages.at[pid].set(pk)
+        v_pages = v_pages.at[pid].set(pv)
+        k_scale = k_scale.at[pid].set(sk)
+        v_scale = v_scale.at[pid].set(sv)
+    else:
+        k_pages = k_pages.at[pid, off].set(k[:, 0].astype(k_pages.dtype))
+        v_pages = v_pages.at[pid, off].set(v[:, 0].astype(v_pages.dtype))
     # GQA grouping happens inside the decode kernel/reference, so the
     # pools stay at Hkv heads end-to-end (no expanded copy in HBM)
     out = dispatch.decode_attention(
-        q[:, 0], k_pages, v_pages, table, lengths + 1,
+        q[:, 0], k_pages, v_pages, table, lengths + 1, k_scale, v_scale,
         window=s.window, softcap=s.softcap, accum_dtype=dt.accum,
         out_dtype=dt.compute, policy=s.dispatch)
-    return _out_proj(p, s, out[:, None], dt), k_pages, v_pages
+    return (_out_proj(p, s, out[:, None], dt), k_pages, v_pages,
+            k_scale, v_scale)
 
 
 def attention_prefill_paged(p: Params, s: AttnSpec, x: jax.Array,
                             starts: jax.Array, tables: jax.Array,
                             k_pages: jax.Array, v_pages: jax.Array,
                             dt: DtypePolicy,
+                            k_scale: Optional[jax.Array] = None,
+                            v_scale: Optional[jax.Array] = None,
                             positions_override: Optional[jax.Array] = None
-                            ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+                            ) -> Tuple[jax.Array, jax.Array, jax.Array,
+                                       Optional[jax.Array],
+                                       Optional[jax.Array]]:
     """Chunked prefill: one page-aligned chunk each from B DISTINCT slots.
 
     x: (B, C, d) with C == page_size (each chunk fills exactly one page;
@@ -317,7 +366,9 @@ def attention_prefill_paged(p: Params, s: AttnSpec, x: jax.Array,
     each slot's page ids.  Chunk b's queries sit at ``starts[b] + [0, C)``
     and attend causally over that slot's cached history plus the chunk
     itself.  Slots must be distinct (each chunk writes its own physical
-    page).  Returns (out (B,C,d), pools).
+    page).  int8 pools carry ``k_scale`` / ``v_scale`` (P, Hkv) f32: a
+    whole-page write gets a clean abs-max scale (``quant.quantize_pages``).
+    Returns (out (B,C,d), k_pages, v_pages, k_scale, v_scale).
     """
     b, c, _ = x.shape
     page = k_pages.shape[1]
@@ -326,17 +377,25 @@ def attention_prefill_paged(p: Params, s: AttnSpec, x: jax.Array,
                        ).astype(jnp.int32))
     q, k, v = _qkv(p, s, x, positions, dt)
     pid = tables[jnp.arange(b), starts // page]
-    k_pages = k_pages.at[pid].set(k.astype(k_pages.dtype))
-    v_pages = v_pages.at[pid].set(v.astype(v_pages.dtype))
+    if k_scale is not None:
+        pk, sk = quant.quantize_pages(k)       # k (B, C=page, Hkv, hd)
+        pv, sv = quant.quantize_pages(v)
+        k_pages = k_pages.at[pid].set(pk)
+        v_pages = v_pages.at[pid].set(pv)
+        k_scale = k_scale.at[pid].set(sk)
+        v_scale = v_scale.at[pid].set(sv)
+    else:
+        k_pages = k_pages.at[pid].set(k.astype(k_pages.dtype))
+        v_pages = v_pages.at[pid].set(v.astype(v_pages.dtype))
     # multi-token ragged prefill through dispatch: each chunk's queries
     # attend causally over the cached history plus the chunk itself (just
     # written into its page); GQA grouping happens inside the kernel /
     # reference, so the pools stay at Hkv heads end-to-end
     out = dispatch.prefill_attention(
-        q, k_pages, v_pages, tables, starts,
+        q, k_pages, v_pages, tables, starts, k_scale, v_scale,
         window=s.window, softcap=s.softcap, accum_dtype=dt.accum,
         out_dtype=dt.compute, policy=s.dispatch)
-    return _out_proj(p, s, out, dt), k_pages, v_pages
+    return _out_proj(p, s, out, dt), k_pages, v_pages, k_scale, v_scale
 
 
 # --------------------------------------------------------------------------
@@ -353,9 +412,11 @@ def mlp_init(key, d: int, ff: int, activation: str) -> Params:
 
 
 def mlp_apply(p: Params, x: jax.Array, activation: str,
-              dt: DtypePolicy, *, policy: str = "auto") -> jax.Array:
+              dt: DtypePolicy, *, policy: str = "auto",
+              weights_dtype: str = "") -> jax.Array:
     cdt = dt.compute
-    mm = functools.partial(dispatch.matmul, policy=policy)
+    mm = functools.partial(project, policy=policy,
+                           weights_dtype=weights_dtype)
     if activation in ("swiglu", "geglu"):
         g = mm(x, p["wg"].astype(cdt))
         u = mm(x, p["wu"].astype(cdt))

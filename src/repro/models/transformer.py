@@ -95,7 +95,8 @@ def _attn_spec(cfg: ArchConfig, mixer: str) -> layers.AttnSpec:
         n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
         window=cfg.window if mixer == "swa" else 0,
         rope_theta=cfg.rope_theta, mrope_sections=cfg.mrope_sections,
-        qkv_bias=cfg.qkv_bias, dispatch=cfg.dispatch)
+        qkv_bias=cfg.qkv_bias, dispatch=cfg.dispatch,
+        weights_dtype=cfg.weights_dtype)
 
 
 def _moe_spec(cfg: ArchConfig, pad_to: int = 1) -> moe.MoESpec:
@@ -178,7 +179,8 @@ def layer_apply(p: Params, cfg: ArchConfig, kind: LayerKind, x: jax.Array,
     h = layers.rmsnorm(p["ln2"], x)
     if ffn == "mlp":
         h = layers.mlp_apply(p["mlp"], h, cfg.activation, dt,
-                             policy=cfg.dispatch)
+                             policy=cfg.dispatch,
+                             weights_dtype=cfg.weights_dtype)
     elif ffn == "moe":
         spec = _moe_spec(cfg, opts.expert_pad)
         if opts.moe_mesh is not None:
@@ -230,11 +232,14 @@ def layer_decode(p: Params, cfg: ArchConfig, kind: LayerKind, x: jax.Array,
         spec = _attn_spec(cfg, mixer)
         if paged is not None:
             lengths, table = paged
-            h, new_cache["k_pages"], new_cache["v_pages"] = \
-                layers.attention_decode_paged(
-                    p["attn"], spec, h, lengths, table,
-                    cache["k_pages"], cache["v_pages"], dt,
-                    positions_override=positions_override)
+            h, kp, vp, ks, vs = layers.attention_decode_paged(
+                p["attn"], spec, h, lengths, table,
+                cache["k_pages"], cache["v_pages"], dt,
+                cache.get("k_scale"), cache.get("v_scale"),
+                positions_override=positions_override)
+            new_cache["k_pages"], new_cache["v_pages"] = kp, vp
+            if ks is not None:
+                new_cache["k_scale"], new_cache["v_scale"] = ks, vs
         else:
             h, new_cache["k"], new_cache["v"] = layers.attention_decode(
                 p["attn"], spec, h, pos, cache["k"], cache["v"], dt,
@@ -251,7 +256,8 @@ def layer_decode(p: Params, cfg: ArchConfig, kind: LayerKind, x: jax.Array,
     h = layers.rmsnorm(p["ln2"], x)
     if ffn == "mlp":
         h = layers.mlp_apply(p["mlp"], h, cfg.activation, dt,
-                             policy=cfg.dispatch)
+                             policy=cfg.dispatch,
+                             weights_dtype=cfg.weights_dtype)
     elif ffn == "moe":
         spec = _moe_spec(cfg, opts.expert_pad if opts else 1)
         if opts is not None and opts.moe_mesh is not None:
@@ -279,14 +285,31 @@ def layer_cache_init_paged(cfg: ArchConfig, kind: LayerKind, slots: int,
         shape = (total_pages, page_size, cfg.n_kv_heads, cfg.head_dim)
         cache["k_pages"] = jnp.zeros(shape, dtype)
         cache["v_pages"] = jnp.zeros(shape, dtype)
+        if jnp.dtype(dtype) == jnp.int8:
+            # per-(page, kv-head) f32 scales ride next to the pools; a
+            # zero scale marks a clean page (the running-max append wipes
+            # any stale payload on first write — see core.quant)
+            cache["k_scale"] = jnp.zeros((total_pages, cfg.n_kv_heads),
+                                         jnp.float32)
+            cache["v_scale"] = jnp.zeros((total_pages, cfg.n_kv_heads),
+                                         jnp.float32)
     elif mixer == "rwkv":
-        cache.update(rwkv.rwkv_cache_init(slots, _rwkv_spec(cfg), dtype))
+        cache.update(rwkv.rwkv_cache_init(slots, _rwkv_spec(cfg),
+                                          _state_dtype(dtype)))
     elif mixer == "rglru":
         cache.update(griffin.griffin_cache_init(slots, _griffin_spec(cfg),
-                                                dtype))
+                                                _state_dtype(dtype)))
     if ffn == "rwkv_cm" and "cm_xprev" not in cache:
-        cache["cm_xprev"] = jnp.zeros((slots, cfg.d_model), dtype)
+        cache["cm_xprev"] = jnp.zeros((slots, cfg.d_model),
+                                      _state_dtype(dtype))
     return cache
+
+
+def _state_dtype(pool_dtype):
+    """Recurrent carried state never quantizes — int8 pools keep bf16
+    state (paged serving requires attention-only stacks anyway, see
+    ``paged_supported``)."""
+    return jnp.bfloat16 if jnp.dtype(pool_dtype) == jnp.int8 else pool_dtype
 
 
 def layer_prefill_paged(p: Params, cfg: ArchConfig, kind: LayerKind,
@@ -307,11 +330,14 @@ def layer_prefill_paged(p: Params, cfg: ArchConfig, kind: LayerKind,
     h = layers.rmsnorm(p["ln1"], x)
     if mixer in ("attn", "swa"):
         spec = _attn_spec(cfg, mixer)
-        h, new_cache["k_pages"], new_cache["v_pages"] = \
-            layers.attention_prefill_paged(
-                p["attn"], spec, h, starts, tables,
-                cache["k_pages"], cache["v_pages"], dt,
-                positions_override=positions_override)
+        h, kp, vp, ks, vs = layers.attention_prefill_paged(
+            p["attn"], spec, h, starts, tables,
+            cache["k_pages"], cache["v_pages"], dt,
+            cache.get("k_scale"), cache.get("v_scale"),
+            positions_override=positions_override)
+        new_cache["k_pages"], new_cache["v_pages"] = kp, vp
+        if ks is not None:
+            new_cache["k_scale"], new_cache["v_scale"] = ks, vs
     else:
         raise ValueError(
             f"paged chunked prefill requires attention mixers, got {mixer}")
@@ -319,7 +345,8 @@ def layer_prefill_paged(p: Params, cfg: ArchConfig, kind: LayerKind,
     h = layers.rmsnorm(p["ln2"], x)
     if ffn == "mlp":
         h = layers.mlp_apply(p["mlp"], h, cfg.activation, dt,
-                             policy=cfg.dispatch)
+                             policy=cfg.dispatch,
+                             weights_dtype=cfg.weights_dtype)
     elif ffn == "moe":
         spec = _moe_spec(cfg, opts.expert_pad if opts else 1)
         h, _ = moe.moe_apply(p["moe"], spec, h, dt)
@@ -605,25 +632,30 @@ class Model:
         capacity (every slot can reach ``max_len``); pass something
         smaller to oversubscribe — serve capacity then scales with the
         page pool, not with slots x longest-sequence.
+
+        The pool storage dtype follows ``cfg.kv_dtype`` ("" = the model
+        compute dtype; "int8" adds per-(page, kv-head) f32 scale leaves —
+        type demotion §4.4 applied to the dominant serving residency).
         """
+        from ..core import quant
         cfg, lay = self.cfg, self.layout
+        pool_dtype = quant.kv_dtype_of(cfg.kv_dtype, self.dt.compute)
         if total_pages is None:
             total_pages = 1 + slots * (-(-max_len // page_size))
         out: Dict[str, Any] = {"prefix": [], "stack": [], "tail": []}
         for kind in lay.prefix:
             out["prefix"].append(layer_cache_init_paged(
-                cfg, kind, slots, total_pages, page_size, self.dt.compute))
+                cfg, kind, slots, total_pages, page_size, pool_dtype))
         if lay.n_periods:
             for kind in lay.period:
                 one = layer_cache_init_paged(
-                    cfg, kind, slots, total_pages, page_size,
-                    self.dt.compute)
+                    cfg, kind, slots, total_pages, page_size, pool_dtype)
                 out["stack"].append(jax.tree.map(
                     lambda a: jnp.broadcast_to(
                         a[None], (lay.n_periods,) + a.shape), one))
         for kind in lay.tail:
             out["tail"].append(layer_cache_init_paged(
-                cfg, kind, slots, total_pages, page_size, self.dt.compute))
+                cfg, kind, slots, total_pages, page_size, pool_dtype))
         return out
 
     def prefill_step_paged(self, params: Params, cache,

@@ -73,6 +73,20 @@ def matmul_space(shape: Sequence[int], dtype_bytes: int = 4, *,
     return _dedup(cands, max_candidates)
 
 
+def quantized_matmul_space(shape: Sequence[int], dtype_bytes: int = 4, *,
+                           hw: HardwareSpec = TPU_V5E,
+                           max_candidates: int = MAX_CANDIDATES
+                           ) -> List[PlanDict]:
+    """shape = (m, k, n) — the int8-weight matmul's own plan namespace.
+
+    Same geometry axes as ``matmul_space``; ``dtype_bytes`` is the
+    ACTIVATION width, and charging the int8 B tile at that width is a
+    conservative over-estimate, so every emitted candidate stays feasible
+    under the plain-matmul VMEM arithmetic the cache reuses."""
+    return matmul_space(shape, dtype_bytes, hw=hw,
+                        max_candidates=max_candidates)
+
+
 def stencil_space(shape: Sequence[int], dtype_bytes: int = 4, *,
                   hw: HardwareSpec = TPU_V5E,
                   max_candidates: int = MAX_CANDIDATES) -> List[PlanDict]:
@@ -296,6 +310,7 @@ def prefill_attention_space(shape: Sequence[int], dtype_bytes: int = 2, *,
 
 SPACES = {
     "matmul": matmul_space,
+    "quantized_matmul": quantized_matmul_space,
     "stencil": stencil_space,
     "attention": attention_space,
     "flash_attention_bwd": flash_attention_bwd_space,
@@ -322,6 +337,10 @@ def plan_feasible(kernel: str, shape: Sequence[int], plan: PlanDict, *,
     if level is not None and level != int(Level.T3_REPLICATED):
         return True
     budget = TilePlanner(hw).budget
+    if kernel == "quantized_matmul":
+        # int8 B only shrinks the working set vs the plain-matmul charge
+        return plan_feasible("matmul", shape, plan,
+                             dtype_bytes=dtype_bytes, hw=hw)
     if kernel == "matmul":
         m, k, n = shape
         bm = min(plan["bm"], m)

@@ -132,6 +132,66 @@ def test_decode_attention_pages_per_tile_invariant():
         _assert_close(got, base, "float32")
 
 
+# Accuracy bound for the int8 KV path: symmetric per-(page, kv-head)
+# quantization of ~N(0, 0.5) K/V keeps the attention output within this
+# max-abs-error of the fp32 oracle (measured ~1e-2 on these geometries;
+# 5e-2 leaves noise headroom while still failing a wrong-scale bug by
+# orders of magnitude).  The kernel's in-tile dequant vs the dequantizing
+# reference is a SAME-MATH differential and runs at the fp32 tolerance.
+INT8_KV_MAX_ABS_ERR = 5e-2
+
+
+def _quantized_pools(kp, vp):
+    from repro.core import quant
+    kq, ks = quant.quantize_pages(kp)
+    vq, vs = quant.quantize_pages(vp)
+    return kq, ks, vq, vs
+
+
+def _check_decode_int8(cfg, window):
+    q, kp, vp, table = _paged_inputs(cfg.n_heads, cfg.n_kv_heads,
+                                     cfg.head_dim, jnp.float32)
+    kq, ks, vq, vs = _quantized_pools(kp, vp)
+    with dispatch.stats_scope() as stats:
+        for lens in RAGGED_LENGTHS:
+            lengths = jnp.asarray(lens, jnp.int32)
+            got = dispatch.decode_attention(
+                q, kq, vq, table, lengths, ks, vs, window=window,
+                policy="kernels")
+            oracle = dispatch.decode_attention(
+                q, kq, vq, table, lengths, ks, vs, window=window,
+                policy="reference")
+            _assert_close(got, oracle, "float32")
+            full = dispatch.decode_attention(
+                q, kp, vp, table, lengths, window=window,
+                policy="reference")
+            err = float(jnp.max(jnp.abs(got - full)))
+            assert err < INT8_KV_MAX_ABS_ERR, (
+                f"int8 decode error {err} exceeds bound "
+                f"{INT8_KV_MAX_ABS_ERR} (lengths={lens})")
+        s = stats()
+    assert s[("decode_attention", "kernel")] == len(RAGGED_LENGTHS)
+
+
+def test_decode_attention_int8_differential(empty_plan_cache):
+    """int8 pools + per-page scales: the kernel's in-tile dequant agrees
+    with the dequantizing reference at fp32 tolerance, and both stay
+    within the documented quantization-noise bound of the fp32 oracle."""
+    _check_decode_int8(ARCHS["gemma-2b"].smoke(), 0)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_decode_attention_int8_all_archs(arch, empty_plan_cache):
+    """The int8 decode differential swept over every attention arch's own
+    geometry (GQA groups, windows)."""
+    cfg = ARCHS[arch].smoke()
+    mixers = {m for m, _ in cfg.layer_kinds()}
+    if not ({"attn", "swa"} & mixers):
+        pytest.skip("attention-free arch")
+    _check_decode_int8(cfg, cfg.window if "swa" in mixers else 0)
+
+
 def test_decode_tuned_plan_consumed(tmp_path, monkeypatch):
     """A seeded exact-shape decode plan is picked up by the kernel route
     (lookup counters prove the cache was consulted)."""
@@ -241,9 +301,10 @@ def test_paged_prefill_decode_matches_dense_forward(arch, policy, layout):
 
 # --------------------------------------------------- scheduler properties
 def _make_scheduler(slots=2, max_len=32, page=4, total_pages=0,
-                    arch="gemma-2b", dispatch="reference", log=print):
+                    arch="gemma-2b", dispatch="reference", kv_dtype="",
+                    log=print):
     from repro.launch.serve import PagedScheduler
-    cfg = _tiny_cfg(arch, dispatch=dispatch)
+    cfg = _tiny_cfg(arch, dispatch=dispatch, kv_dtype=kv_dtype)
     model = Model(cfg, dt=DtypePolicy(compute=jnp.float32),
                   opts=ExecOptions(mode="run"))
     params = model.init(jax.random.key(0))
@@ -425,11 +486,13 @@ def test_no_reclamation_for_global_or_mixed_attention():
 
 # ------------------------------------------------ continuous-batching engine
 def _make_engine(slots=2, max_len=32, page=4, total_pages=0,
-                 dispatch="reference", token_budget=0, log=None):
+                 dispatch="reference", kv_dtype="", token_budget=0,
+                 log=None):
     from repro.launch.engine import ContinuousEngine
     sched, cfg = _make_scheduler(slots=slots, max_len=max_len, page=page,
                                  total_pages=total_pages,
-                                 dispatch=dispatch, log=log)
+                                 dispatch=dispatch, kv_dtype=kv_dtype,
+                                 log=log)
     return ContinuousEngine(sched, token_budget=token_budget,
                             clock="tick", log=log), cfg
 
@@ -588,3 +651,76 @@ def test_paged_serve_executes_through_dispatch():
     assert s.get(("decode_attention", "kernel"), 0) > 0
     assert s.get(("matmul", "kernel"), 0) > 0
     assert dispatch.stats() == outside       # scope did not leak
+
+
+# ------------------------------------------------------- int8 KV serving
+def test_paged_scheduler_int8_greedy_matches_fp32():
+    """Quantization noise must not flip greedy decisions on the smoke
+    arch: an int8-pool scheduler emits token-for-token the fp32 streams
+    (same prompts, same seeds) — the end-to-end accuracy gate."""
+    from repro.launch.serve import Request
+    rng = np.random.default_rng(8)
+    prompts = [rng.integers(0, 128, rng.integers(3, 9)) for _ in range(4)]
+
+    def run(kv_dtype):
+        sched, _ = _make_scheduler(slots=2, kv_dtype=kv_dtype)
+        done = sched.run([Request(i, p, 5) for i, p in enumerate(prompts)])
+        assert len(done) == 4
+        return {r.rid: list(r.out) for r in done}
+
+    assert run("int8") == run("")
+
+
+def test_int8_scale_lockstep_and_byte_residency():
+    """int8 pools carry per-page scale leaves whose lifecycle is slaved
+    to the page allocator: check_page_accounting's lockstep invariant
+    holds through a full serve, byte residency drains to zero with the
+    pages (no scale leak on recycle), and reallocated pages come back
+    with their scale rows reset."""
+    from repro.launch.serve import Request
+    sched8, _ = _make_scheduler(slots=2, kv_dtype="int8")
+    sched32, _ = _make_scheduler(slots=2)
+    assert sched8._page_bytes < sched32._page_bytes
+    assert sched8.kv_bytes_resident() == 0
+
+    rng = np.random.default_rng(9)
+    done = sched8.run([Request(i, rng.integers(0, 128, 6), 4)
+                       for i in range(3)])
+    assert len(done) == 3
+    sched8.check_page_accounting()          # incl. scale-lockstep check
+    assert sched8.kv_bytes_resident() == 0  # all pages back, none leaked
+
+    # retired sequences leave stale scale rows behind; the allocator's
+    # on_alloc hook must wipe them before the page is reused
+    stale = [leaf for leaf in jax.tree.leaves(sched8.cache)
+             if leaf.ndim in (2, 3)]
+    assert stale and any(float(jnp.abs(s).max()) > 0 for s in stale)
+    got = sched8.alloc.alloc(sched8.alloc.available())
+    for leaf in (l for l in jax.tree.leaves(sched8.cache)
+                 if l.ndim in (2, 3)):
+        rows = leaf[:, jnp.asarray(got)] if leaf.ndim == 3 \
+            else leaf[jnp.asarray(got)]
+        assert float(jnp.abs(rows).max()) == 0.0
+    sched8.alloc.release(got)
+    sched8.check_page_accounting()
+
+
+def test_continuous_engine_tracks_kv_byte_residency():
+    """The engine's max_resident_kv_bytes is the dtype-aware residency
+    peak: positive under load, and strictly smaller for an int8 pool
+    than for the fp32 pool on the same workload (the capacity win the
+    quantized cache exists to deliver); the token streams still agree."""
+    from repro.launch.loadgen import poisson_stream
+
+    def run(kv_dtype):
+        engine, _ = _make_engine(slots=2, kv_dtype=kv_dtype)
+        done = engine.run(poisson_stream(
+            4, rate=0.0, vocab_size=128, prompt_len=6, max_new=4, seed=13))
+        assert len(done) == 4
+        return engine.max_resident_kv_bytes, \
+            {r.rid: list(r.out) for r in done}
+
+    bytes8, out8 = run("int8")
+    bytes32, out32 = run("")
+    assert 0 < bytes8 < bytes32
+    assert out8 == out32

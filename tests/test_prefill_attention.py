@@ -101,6 +101,40 @@ def test_prefill_attention_differential(arch, dtype_name, empty_plan_cache):
     assert s[("prefill_attention", "reference")] == 1
 
 
+# Accuracy bound for the int8 KV path (see test_paged_decode.py for the
+# decode twin): prefill attends over up to a whole table of quantized
+# history, so its noise bound is the same documented 5e-2 — measured
+# ~2e-2 on these geometries, still orders of magnitude below any
+# wrong-scale bug.
+INT8_KV_MAX_ABS_ERR = 5e-2
+
+
+def test_prefill_attention_int8_differential(empty_plan_cache):
+    """int8 pools + per-page scales through the ragged prefill kernel:
+    in-tile dequant agrees with the dequantizing reference at fp32
+    tolerance; both stay within the quantization-noise bound of the
+    fp32 oracle."""
+    from repro.core import quant
+    cfg = ARCHS["gemma-2b"].smoke()
+    q, kp, vp, table, starts = _prefill_inputs(
+        cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, jnp.float32)
+    kq, ks = quant.quantize_pages(kp)
+    vq, vs = quant.quantize_pages(vp)
+    with dispatch.stats_scope() as stats:
+        got = dispatch.prefill_attention(q, kq, vq, table, starts, ks, vs,
+                                         policy="kernels")
+        oracle = dispatch.prefill_attention(q, kq, vq, table, starts,
+                                            ks, vs, policy="reference")
+        s = stats()
+    _assert_close(got, oracle, "float32")
+    full = dispatch.prefill_attention(q, kp, vp, table, starts,
+                                      policy="reference")
+    err = float(jnp.max(jnp.abs(got - full)))
+    assert err < INT8_KV_MAX_ABS_ERR, (
+        f"int8 prefill error {err} exceeds bound {INT8_KV_MAX_ABS_ERR}")
+    assert s[("prefill_attention", "kernel")] == 1
+
+
 def test_prefill_pages_per_tile_invariant():
     """KV-tile geometry is a pure performance knob: every pages_per_tile
     (incl. non-divisors of n_pages -> padded tail tiles) agrees."""
