@@ -652,6 +652,118 @@ def run_serve_continuous(args) -> None:
                       [cont_row, static_row] + share_rows + int8_rows)
 
 
+def run_serve_sharded(args) -> None:
+    """--serve-sharded: tensor-parallel serving rows (continuous-tp{1,2}).
+
+    Differential-first: every row's headline field is
+    ``tokens_match_oracle`` — the sharded continuous engine's greedy
+    streams compared token-for-token against the unsharded single-device
+    oracle on the same seeded request stream.  tp=1 runs on a degenerate
+    1-device mesh (must be BIT-identical); tp=2 runs when >= 2 devices are
+    visible (``XLA_FLAGS=--xla_force_host_platform_device_count=2`` on
+    CPU) and additionally carries ``kernels_match_reference`` (the same
+    sharded mesh with ``--dispatch reference`` produces the same tokens —
+    the collectives are dispatch-route-invariant) and ``tp_ops_in_region``
+    (distinct ops the tp route counters saw inside the shard_map body).
+    ``scripts/check_bench.py compare_tp`` gates these fields baseline-free.
+    Throughput columns are CPU-interpret numbers; the verdicts carry.
+    """
+    from repro.configs import get_arch
+    from repro.core.memory import DtypePolicy
+    from repro.kernels import dispatch, registry
+    from repro.launch.engine import ContinuousEngine
+    from repro.launch.loadgen import poisson_stream
+    from repro.launch.mesh import make_serving_mesh
+    from repro.launch.serve import PagedScheduler
+    from repro.models.transformer import ExecOptions, Model
+    from repro.runtime import tp as tp_mod
+    from repro.tune.cache import preload as preload_tuned
+
+    preload_tuned()
+    base_cfg = get_arch(args.serve_arch).smoke()
+    slots, prompt_len, max_new, max_len = 2, 12, 8, 64
+    n_req = args.serve_requests
+
+    def build(dispatch_policy):
+        cfg = dataclasses.replace(base_cfg, dispatch=dispatch_policy)
+        model = Model(cfg, dt=DtypePolicy(param=jnp.bfloat16),
+                      opts=ExecOptions(mode="run"))
+        return cfg, model, model.init(jax.random.key(0))
+
+    def stream(vocab):
+        return poisson_stream(n_req, rate=0.0, vocab_size=vocab,
+                              prompt_len=prompt_len, max_new=max_new,
+                              seed=0)
+
+    def drive(model, params, mesh):
+        """Run the continuous engine once; return (streams, row core)."""
+        sched = PagedScheduler(model, params, slots=slots, max_len=max_len,
+                               page_size=args.serve_page_size, mesh=mesh,
+                               log=None)
+        engine = ContinuousEngine(sched, clock="wall", log=None)
+        dispatch.reset_stats()
+        engine.warmup()
+        t0 = time.perf_counter()
+        done = engine.run(stream(model.cfg.vocab_size))
+        dt = time.perf_counter() - t0
+        if len(done) != n_req:
+            raise RuntimeError(
+                f"sharded serve finished {len(done)}/{n_req} requests")
+        streams = [list(r.out)
+                   for r in sorted(done, key=lambda r: r.rid)]
+        core = {
+            "decode_tok_s": round(
+                sched.decode_tokens
+                / max(engine.executor.t_decode, 1e-9), 2),
+            "total_tok_s": round(
+                sum(len(s) for s in streams) / max(dt, 1e-9), 2),
+            "tp_ops_in_region": len({op for op, _
+                                     in registry.tp_stats()}),
+        }
+        return streams, core
+
+    cfgk, modelk, paramsk = build(args.serve_dispatch)
+    n_dev = len(jax.devices())
+    print(f"# {cfgk.name}: n_heads={cfgk.n_heads} "
+          f"n_kv_heads={cfgk.n_kv_heads}, {n_dev} device(s) visible")
+    oracle, _ = drive(modelk, paramsk, None)
+
+    rows = []
+    print("arch,schedule,tp,dispatch,tokens_match_oracle,"
+          "kernels_match_reference,tp_ops_in_region,total_tok_s")
+    tps = [1] + ([2] if n_dev >= 2 else [])
+    if n_dev < 2:
+        print("# only 1 device visible: skipping the tp=2 row (set "
+              "XLA_FLAGS=--xla_force_host_platform_device_count=2)")
+    for tp in tps:
+        mesh = make_serving_mesh(tp)
+        streams, core = drive(modelk, paramsk, mesh)
+        row = {
+            "arch": cfgk.name, "cache": "paged",
+            "schedule": f"continuous-tp{tp}",
+            "dispatch": args.serve_dispatch, "slots": slots,
+            "page_size": args.serve_page_size, "requests": n_req,
+            "tp": tp, "devices": n_dev,
+            "kv_sharded": tp_mod.kv_sharded(cfgk, tp),
+            "tokens_match_oracle": streams == oracle,
+            "backend": jax.default_backend(),
+            **core,
+        }
+        if tp >= 2 and args.serve_dispatch != "reference":
+            # route-invariance on the mesh itself: reference lowerings
+            # under the SAME shard_map + collectives give the same tokens
+            _, modelr, paramsr = build("reference")
+            ref_streams, _ = drive(modelr, paramsr, mesh)
+            row["kernels_match_reference"] = streams == ref_streams
+        rows.append(row)
+        print(f"{cfgk.name},continuous-tp{tp},{tp},{args.serve_dispatch},"
+              f"{row['tokens_match_oracle']},"
+              f"{row.get('kernels_match_reference', '')},"
+              f"{row['tp_ops_in_region']},{row['total_tok_s']}",
+              flush=True)
+    _merge_serve_rows(args.serve_out, rows)
+
+
 def run_progression() -> None:
     print("name,us_per_call,derived")
     bench_stencil()
@@ -721,6 +833,11 @@ def main(argv=None) -> None:
     ap.add_argument("--serve-token-budget", type=int, default=0,
                     help="continuous per-iteration token budget "
                          "(0 = slots x page_size)")
+    ap.add_argument("--serve-sharded", action="store_true",
+                    help="tensor-parallel serving rows: continuous-tp1 "
+                         "(degenerate mesh, bit-identical) and, with >= 2 "
+                         "visible devices, continuous-tp2 (sharded heads + "
+                         "KV pools vs the single-device oracle)")
     args = ap.parse_args(argv)
     if args.tune:
         run_tune(args)
@@ -732,6 +849,8 @@ def main(argv=None) -> None:
         run_serve(args)
     elif args.serve_continuous:
         run_serve_continuous(args)
+    elif args.serve_sharded:
+        run_serve_sharded(args)
     else:
         run_progression()
 

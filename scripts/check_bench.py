@@ -44,6 +44,15 @@ residency is the entire point of quantizing the cache) while holding
 ``decode_tok_s`` within the throughput tolerance — capacity won by
 giving back throughput beyond the noise band is not a win.
 
+Sharded serving (``continuous-tp*`` rows, from ``--serve-sharded``) is
+gated baseline-free on its CORRECTNESS verdicts rather than throughput:
+``tokens_match_oracle`` must be true (tp=1 is bit-identical to the
+unsharded scheduler; tp>=2 matches the single-device oracle),
+``tp_ops_in_region >= 3`` proves matmul + decode_attention +
+prefill_attention all dispatched through ``registry.call`` inside the
+shard_map region, and ``kernels_match_reference`` (present on tp>=2
+kernel rows) must be true.  Correctness has no tolerance knob.
+
 Updating the baseline (after an intentional perf change or a new
 machine): re-run the benchmark writing straight to the baseline path and
 commit the result — see benchmarks/README.md ("Benchmark-regression
@@ -185,6 +194,50 @@ def compare_kv_dtype(current: Dict[Key, Dict[str, float]],
     return failures, compared
 
 
+def load_rows(path) -> List[dict]:
+    """Raw rows (verdict fields included — booleans never survive
+    ``load_metrics``' float coercion)."""
+    return json.loads(Path(path).read_text()).get("rows", [])
+
+
+def compare_tp(rows: List[dict]) -> Tuple[List[str], int]:
+    """Sharded-serving correctness gate, baseline-free: every
+    ``continuous-tp*`` row in the CURRENT run must carry a truthy
+    ``tokens_match_oracle`` (the sharded engine reproduced the
+    single-device oracle's greedy streams — bit-identical at tp=1),
+    ``tp_ops_in_region`` >= 3 (matmul + decode_attention +
+    prefill_attention all routed through registry.call INSIDE the
+    shard_map region), and, when present, a truthy
+    ``kernels_match_reference`` (sharded kernels vs sharded reference
+    agree token-for-token).  Correctness has no tolerance knob."""
+    failures, compared = [], 0
+    for row in rows:
+        sched = row.get("schedule", "")
+        if not sched.startswith("continuous-tp"):
+            continue
+        name = f"{row.get('arch', '?')}/{row.get('cache', '?')}/{sched}"
+        compared += 1
+        if not row.get("tokens_match_oracle"):
+            failures.append(
+                f"{name}: tokens_match_oracle="
+                f"{row.get('tokens_match_oracle')!r} — sharded streams "
+                f"diverged from the single-device oracle")
+        compared += 1
+        if int(row.get("tp_ops_in_region", 0)) < 3:
+            failures.append(
+                f"{name}: tp_ops_in_region="
+                f"{row.get('tp_ops_in_region')!r} < 3 — serving ops did "
+                f"not all route through registry.call inside shard_map")
+        if "kernels_match_reference" in row:
+            compared += 1
+            if not row["kernels_match_reference"]:
+                failures.append(
+                    f"{name}: kernels_match_reference="
+                    f"{row['kernels_match_reference']!r} — sharded kernel "
+                    f"and reference routes disagree")
+    return failures, compared
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--baseline", default="results/BENCH_serve.json")
@@ -217,6 +270,9 @@ def main(argv=None) -> int:
     q_failures, q_compared = compare_kv_dtype(current, args.tolerance)
     failures += q_failures
     compared += q_compared
+    tp_failures, tp_compared = compare_tp(load_rows(args.current))
+    failures += tp_failures
+    compared += tp_compared
     for line in failures:
         print(f"REGRESSION: {line}")
     if failures:

@@ -15,13 +15,18 @@
 #                           jax.make_mesh(..., axis_types=...) outside
 #                           launch/mesh.py, no direct kernel-family imports
 #                           from models/ or launch/ — everything routes
-#                           through kernels.dispatch / kernels.registry)
+#                           through kernels.dispatch / kernels.registry —
+#                           and shard_map / mesh construction only via
+#                           runtime/compat.py + launch/mesh.py)
 #   scripts/ci.sh tune    — design-space sweep; writes results/tuned_plans.json
 #   scripts/ci.sh serve   — paged-serving smoke: interpret-mode ragged
 #                           prefill + decode through dispatch for a few
 #                           steps (static AND continuous schedules), plus
 #                           BENCH_serve.json throughput/latency rows and
-#                           BENCH_prefill.json kernel-vs-reference rows
+#                           BENCH_prefill.json kernel-vs-reference rows,
+#                           plus a forced-2-device sharded smoke (--mesh 2
+#                           CLI + --serve-sharded bench) gated by
+#                           check_bench's baseline-free compare_tp
 #   scripts/ci.sh bench   — benchmark-regression gate: re-run both serve
 #                           benchmark modes and fail if decode throughput
 #                           dropped or p99 per-token latency rose more than
@@ -75,6 +80,25 @@ lint() {
          "through cfg.kv_dtype + repro.core.quant):"
     echo "$bad"; exit 1
   fi
+  # 5. shard_map enters the codebase through ONE shim
+  #    (runtime/compat.shard_map handles the jax.shard_map vs
+  #    jax.experimental.shard_map + check_vma/check_rep rename) and mesh
+  #    construction through launch/mesh.py — sharded serving must not
+  #    fork new version-feature-detection sites
+  bad=$(grep -rnE 'jax\.shard_map|experimental(\.| +import +)shard_map' \
+        src --include='*.py' | grep -v 'runtime/compat.py' || true)
+  if [ -n "$bad" ]; then
+    echo "lint: shard_map used outside runtime/compat.py" \
+         "(call repro.runtime.compat.shard_map):"
+    echo "$bad"; exit 1
+  fi
+  bad=$(grep -rnE 'jax\.make_mesh|sharding\.Mesh\(' src --include='*.py' \
+        | grep -v 'launch/mesh.py' || true)
+  if [ -n "$bad" ]; then
+    echo "lint: mesh constructed outside launch/mesh.py" \
+         "(use repro.launch.mesh.make_mesh / make_serving_mesh):"
+    echo "$bad"; exit 1
+  fi
   echo "lint: OK"
 }
 
@@ -93,6 +117,20 @@ case "${1:-smoke}" in
     python benchmarks/run.py --serve --serve-dispatch kernels
     python benchmarks/run.py --serve-continuous --serve-dispatch kernels
     python benchmarks/run.py --prefill
+    # sharded smoke: force a 2-device host mesh and run the tensor-parallel
+    # paged path end-to-end — the CLI on gemma (MQA, replicated pools) and
+    # the bench on codeqwen (GQA, sharded pools).  The bench rows carry the
+    # correctness verdicts (tokens_match_oracle, kernels_match_reference,
+    # tp_ops_in_region) that check_bench's compare_tp gates baseline-free.
+    XLA_FLAGS="--xla_force_host_platform_device_count=2" \
+      python -m repro.launch.serve --arch gemma-2b --smoke --cache paged \
+      --dispatch kernels --mesh 2 --slots 2 --requests 3 --prompt-len 6 \
+      --max-new 4 --max-len 32 --page-size 8
+    XLA_FLAGS="--xla_force_host_platform_device_count=2" \
+      python benchmarks/run.py --serve-sharded --serve-dispatch kernels
+    python scripts/check_bench.py \
+      --baseline results/BENCH_serve.json \
+      --current results/BENCH_serve.json
     ;;
   bench)
     # scratch outputs live under gitignored results/scratch/ so a bench
@@ -102,6 +140,9 @@ case "${1:-smoke}" in
     python benchmarks/run.py --serve --serve-dispatch kernels \
       --serve-out results/scratch/BENCH_serve_current.json
     python benchmarks/run.py --serve-continuous --serve-dispatch kernels \
+      --serve-out results/scratch/BENCH_serve_current.json
+    XLA_FLAGS="--xla_force_host_platform_device_count=2" \
+      python benchmarks/run.py --serve-sharded --serve-dispatch kernels \
       --serve-out results/scratch/BENCH_serve_current.json
     python scripts/check_bench.py \
       --baseline results/BENCH_serve.json \

@@ -836,6 +836,18 @@ registry.register(registry.OpSpec(
     tune=_TUNE["decode_attention"],
     example=_decode_example,
     bad_example=_decode_bad_example,
+    tp={
+        # heads are the sharded axis: q (B, H, hd) on dim 1, K/V pools
+        # (P, page, Hkv, hd) on dim 2, per-page scales (P, Hkv) on dim 1;
+        # table/lengths are host metadata, replicated. Each shard attends
+        # its own heads against its own pool slice, then the per-shard
+        # (B, H/tp, hd) outputs all-gather back to full heads on dim 1.
+        "heads": registry.TPContract(
+            in_axes=(1, 2, 2, None, None, 1, 1),
+            collective="all_gather",
+            gather_axis=1,
+        ),
+    },
 ))
 
 registry.register(registry.OpSpec(
@@ -848,4 +860,14 @@ registry.register(registry.OpSpec(
     tune=_TUNE["prefill_attention"],
     example=_prefill_example,
     bad_example=_prefill_bad_example,
+    tp={
+        # same layout as decode with a chunk axis: q (B, C, H, hd) sharded
+        # on dim 2, pools on dim 2, scales on dim 1; gather restores full
+        # heads on dim 2 of the (B, C, H/tp, hd) per-shard output.
+        "heads": registry.TPContract(
+            in_axes=(2, 2, 2, None, None, 1, 1),
+            collective="all_gather",
+            gather_axis=2,
+        ),
+    },
 ))

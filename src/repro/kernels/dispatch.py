@@ -127,13 +127,19 @@ def _kernels_by_default() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def _call(name: str, *args, statics=None, policy: PolicyLike = None):
-    """Collapse the policy knob and hand off to the registry's one path."""
+def _call(name: str, *args, statics=None, policy: PolicyLike = None,
+          tp: Optional[str] = None):
+    """Collapse the policy knob and hand off to the registry's one path.
+
+    ``tp`` names the op's declared sharding contract for this call site
+    (see ``registry.TPContract``); it only acts inside a
+    ``registry.tp_scope`` (the shard_map'd serving region), where the
+    registry completes the op with the contract's collective."""
     mode = resolve_mode(policy)
     allow = mode != "reference" and (mode == "kernels"
                                      or _kernels_by_default())
     return registry.call(name, *args, statics=statics, mode=mode,
-                         allow_kernels=allow)
+                         allow_kernels=allow, tp=tp)
 
 
 def causal_mask(qpos: jax.Array, kpos: jax.Array, window: int,
@@ -146,7 +152,7 @@ def causal_mask(qpos: jax.Array, kpos: jax.Array, window: int,
 
 # ------------------------------------------------------------------ facades
 def matmul(x: jax.Array, w: jax.Array, *,
-           policy: PolicyLike = None) -> jax.Array:
+           policy: PolicyLike = None, tp: Optional[str] = None) -> jax.Array:
     """Contract the last axis of ``x`` with the first axis of ``w``.
 
     x: (..., K); w: (K, N1[, N2, ...]).  Returns x.shape[:-1] + w.shape[1:]
@@ -154,8 +160,12 @@ def matmul(x: jax.Array, w: jax.Array, *,
     / dense / head matmul in the models (``bsd,dhk->bshk`` is exactly this
     with w pre-reshaped, so the reference lowering is bit-identical to the
     einsums it replaces).
+
+    ``tp`` tags the call site's sharding contract for shard_map'd serving
+    ("col" = output channels device-local, no collective; "row" =
+    contraction sharded, all-reduce here); inert outside a tp scope.
     """
-    return _call("matmul", x, w, policy=policy)
+    return _call("matmul", x, w, policy=policy, tp=tp)
 
 
 def grouped_matmul(x: jax.Array, w: jax.Array, *,
@@ -224,11 +234,14 @@ def decode_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     args = (q, k_pages, v_pages, table, lengths)
     if k_scale is not None:
         args += (k_scale, v_scale)
+    # "heads" is the op's single sharding contract: q heads and KV pools
+    # device-local, output all-gathered back to full head width so the
+    # (replicated) out-projection sees every head.  Inert unsharded.
     return _call(
         "decode_attention", *args,
         statics=dict(window=int(window), softcap=float(softcap),
                      accum_dtype=accum_dtype, out_dtype=out_dtype),
-        policy=policy)
+        policy=policy, tp="heads")
 
 
 def prefill_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
@@ -260,11 +273,12 @@ def prefill_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
         "prefill_attention", *args,
         statics=dict(window=int(window), softcap=float(softcap),
                      accum_dtype=accum_dtype, out_dtype=out_dtype),
-        policy=policy)
+        policy=policy, tp="heads")
 
 
 def quantized_matmul(x: jax.Array, w_q: jax.Array, w_scale: jax.Array, *,
-                     policy: PolicyLike = None) -> jax.Array:
+                     policy: PolicyLike = None,
+                     tp: Optional[str] = None) -> jax.Array:
     """Int8-weight matmul with per-output-channel dequant (§4.4 demotion).
 
     x: (..., K) floating activations; w_q: (K, N) int8 weights; w_scale:
@@ -275,4 +289,4 @@ def quantized_matmul(x: jax.Array, w_q: jax.Array, w_scale: jax.Array, *,
     dequantizes then einsums.  Returns x.shape[:-1] + (N,) f32.  Inference
     only — no custom VJP (the int8 weight is not differentiable).
     """
-    return _call("quantized_matmul", x, w_q, w_scale, policy=policy)
+    return _call("quantized_matmul", x, w_q, w_scale, policy=policy, tp=tp)

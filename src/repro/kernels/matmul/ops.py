@@ -370,6 +370,14 @@ registry.register(registry.OpSpec(
     tune=_matmul_tune_spec(),
     example=_matmul_example,
     bad_example=_matmul_bad_example,
+    tp={
+        # column-parallel: weight sharded on its output dim, every device
+        # computes a disjoint slice of the output features — no collective
+        "col": registry.TPContract(in_axes=(None, 1)),
+        # row-parallel: activations sharded on the contraction dim, weight
+        # on its input dim — partial sums need a psum across the axis
+        "row": registry.TPContract(in_axes=(-1, 0), collective="psum"),
+    },
 ))
 
 registry.register(registry.OpSpec(
@@ -383,6 +391,13 @@ registry.register(registry.OpSpec(
     bad_example=_quantized_bad_example,
     # no VJP: the int8 weight operand is not differentiable — training
     # keeps float weights and routes through ``matmul``
+    tp={
+        # per-output-channel scales shard alongside the weight's output dim
+        "col": registry.TPContract(in_axes=(None, 1, 0)),
+        # row-parallel shards the contraction dim; scales stay replicated
+        # (they are per-output-channel) and partial sums psum-reduce
+        "row": registry.TPContract(in_axes=(-1, 0, None), collective="psum"),
+    },
 ))
 
 registry.register(registry.OpSpec(

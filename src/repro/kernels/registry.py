@@ -86,6 +86,43 @@ class TuneSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class TPContract:
+    """One named way an op participates in tensor parallelism.
+
+    The sharding contract an op declares for the mapped (``shard_map``)
+    serving region: which dimension of each positional argument is
+    device-local (sharded over the tensor-parallel mesh axis; ``None`` =
+    replicated / identical on every device), which collective completes
+    the op, and which output dimension that collective concatenates.
+    ``registry.call`` applies the completing collective itself when a
+    :func:`tp_scope` is active, so the mapped region's collectives live
+    on exactly one code path — the same one that routes, counts, and
+    plans every lowering.  Outside a tp scope the contract is inert: the
+    same model code runs sharded and unsharded.
+
+    * ``in_axes`` — per positional arg, the arg dimension sharded over
+      the tp axis (``None`` = replicated).  Trailing optional args (e.g.
+      quantization scales) may be omitted.
+    * ``collective`` — ``"none"`` (output stays device-local, e.g. a
+      column-parallel GEMM), ``"psum"`` (output is a partial sum over
+      the sharded contraction — row-parallel GEMM all-reduce), or
+      ``"all_gather"`` (output shards concatenate along ``gather_axis``
+      — the attention ops' heads-local output becoming full-width).
+    * ``gather_axis`` — output dim the ``all_gather`` concatenates.
+    """
+
+    in_axes: Tuple[Optional[int], ...] = ()
+    collective: str = "none"                # none | psum | all_gather
+    gather_axis: int = 0
+
+    def __post_init__(self):
+        if self.collective not in ("none", "psum", "all_gather"):
+            raise ValueError(
+                f"TPContract collective must be none|psum|all_gather, "
+                f"got {self.collective!r}")
+
+
+@dataclasses.dataclass(frozen=True)
 class OpSpec:
     """One kernel's complete dispatch + tuning contract (see module doc)."""
 
@@ -104,6 +141,11 @@ class OpSpec:
     stats_op: Optional[str] = None           # route-counter scope (default: name)
     example: Optional[Callable] = None       # (dtype) -> (args, statics)
     bad_example: Optional[Callable] = None   # () -> (args, statics)
+    # mesh-awareness: the sharding contracts this op supports inside a
+    # shard_map'd serving region, keyed by the call site's ``tp=`` tag
+    # ("col" | "row" | "heads" | ...).  An op with no contracts can only
+    # be called untagged inside a tp scope.
+    tp: Optional[Dict[str, TPContract]] = None
 
     @property
     def dispatchable(self) -> bool:
@@ -201,11 +243,17 @@ def tunable() -> Dict[str, OpSpec]:
 # (op, "reference", "exact"), matching the cache's exact-hit count.
 _stats: Counter = Counter()
 _plan_stats: Counter = Counter()
+# (op, route) counters ticked ONLY while a tp_scope is active — the probe
+# that proves registry.call fired INSIDE the shard_map'd serving region
+# (sharded serving that silently routed outside the mapped region would
+# show tp_stats() == {}).
+_tp_stats: Counter = Counter()
 
 
 def reset_stats() -> None:
     _stats.clear()
     _plan_stats.clear()
+    _tp_stats.clear()
 
 
 def stats() -> Dict[Tuple[str, str], int]:
@@ -214,6 +262,10 @@ def stats() -> Dict[Tuple[str, str], int]:
 
 def plan_source_stats() -> Dict[Tuple[str, str, str], int]:
     return dict(_plan_stats)
+
+
+def tp_stats() -> Dict[Tuple[str, str], int]:
+    return dict(_tp_stats)
 
 
 @contextlib.contextmanager
@@ -225,6 +277,7 @@ def stats_scope():
     """
     saved = Counter(_stats)
     saved_plan = Counter(_plan_stats)
+    saved_tp = Counter(_tp_stats)
     reset_stats()
     try:
         yield stats
@@ -233,6 +286,8 @@ def stats_scope():
         _stats.update(saved)
         _plan_stats.clear()
         _plan_stats.update(saved_plan)
+        _tp_stats.clear()
+        _tp_stats.update(saved_tp)
 
 
 def count_route(op: str, route: str, source: Optional[str] = None) -> None:
@@ -241,6 +296,38 @@ def count_route(op: str, route: str, source: Optional[str] = None) -> None:
     _stats[(op, route)] += 1
     if source is not None:
         _plan_stats[(op, route, source)] += 1
+    if _TP_AXIS is not None:
+        _tp_stats[(op, route)] += 1
+
+
+# ------------------------------------------------------ tensor-parallel scope
+# The serving runtime (runtime/tp.py) enters a tp_scope while TRACING the
+# shard_map body, so every registry.call issued from model code inside the
+# mapped region (a) sees the mesh axis name for its declared completing
+# collective and (b) ticks the tp route counters.  Like the route counters,
+# this is a trace-time mechanism: jit caches replay it for free.
+_TP_AXIS: Optional[str] = None
+
+
+def tp_axis() -> Optional[str]:
+    """The active mapped mesh axis name, or None outside a tp_scope."""
+    return _TP_AXIS
+
+
+@contextlib.contextmanager
+def tp_scope(axis: str):
+    """Mark the dynamic extent of tracing a shard_map'd serving region.
+
+    Inside the scope, ops called with a ``tp=`` tag complete themselves
+    with the collective their :class:`TPContract` declares over ``axis``;
+    outside it, tags are inert annotations of the parallel structure."""
+    global _TP_AXIS
+    prev = _TP_AXIS
+    _TP_AXIS = str(axis)
+    try:
+        yield
+    finally:
+        _TP_AXIS = prev
 
 
 # ------------------------------------------------- dense-score tripwire
@@ -296,7 +383,8 @@ def _freeze(statics: Optional[Dict[str, Any]]) -> Tuple[Tuple[str, Any], ...]:
 
 
 def call(name: str, *args, statics: Optional[Dict[str, Any]] = None,
-         mode: str = "auto", allow_kernels: bool = False):
+         mode: str = "auto", allow_kernels: bool = False,
+         tp: Optional[str] = None):
     """Route one op call: the single code path behind every dispatch facade.
 
     ``mode`` is the fully-resolved policy ("kernels" | "reference" |
@@ -304,6 +392,14 @@ def call(name: str, *args, statics: Optional[Dict[str, Any]] = None,
     gate (``mode != "reference" and (mode == "kernels" or on-TPU)``).
     Eligibility, plan resolution, the level gate, and route counting are
     generic; everything op-specific lives in the OpSpec.
+
+    ``tp`` names one of the op's declared :class:`TPContract` sharding
+    contracts ("col" | "row" | "heads" | ...).  Inside a :func:`tp_scope`
+    (i.e. while tracing a shard_map'd serving region) the contract's
+    completing collective runs HERE, on the op's output — keeping
+    registry.call the single routing path inside the mapped region.
+    Outside a scope the tag is inert, so tagged model code is
+    mesh-agnostic.
     """
     spec = get(name)
     if spec.reference is None:
@@ -340,6 +436,21 @@ def call(name: str, *args, statics: Optional[Dict[str, Any]] = None,
                 plan=tuple(sorted(plan_kw.items())), statics=st)
     if use_kernel:
         if spec.vjp_bwd is not None:
-            return _vjp_call(name, ctx, *args)
-        return spec.kernel(ctx, *args)
-    return spec.reference(ctx, *args)
+            out = _vjp_call(name, ctx, *args)
+        else:
+            out = spec.kernel(ctx, *args)
+    else:
+        out = spec.reference(ctx, *args)
+    if tp is not None and _TP_AXIS is not None:
+        contract = (spec.tp or {}).get(tp)
+        if contract is None:
+            raise ValueError(
+                f"op {name!r} declares no tp contract {tp!r} "
+                f"(has: {sorted(spec.tp or {})}); sharded serving cannot "
+                "complete this call inside the mapped region")
+        if contract.collective == "psum":
+            out = jax.lax.psum(out, _TP_AXIS)
+        elif contract.collective == "all_gather":
+            out = jax.lax.all_gather(out, _TP_AXIS,
+                                     axis=contract.gather_axis, tiled=True)
+    return out

@@ -197,6 +197,9 @@ class ContinuousEngine:
         decode step outside the timed/counted region; all warmup writes
         land on the trash page, so live state is untouched."""
         sched = self.sched
+        if getattr(sched, "tp", 1) > 1:
+            self.log(f"[engine] warmup on a tp={sched.tp} mesh "
+                     f"(sharded decode/prefill steps)")
         for b in range(1, sched.slots + 1):
             _, sched.cache = sched._prefill(
                 sched.params, sched.cache,

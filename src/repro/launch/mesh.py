@@ -52,6 +52,22 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     return make_mesh(shape, axes)
 
 
+def make_serving_mesh(tp: int) -> jax.sharding.Mesh:
+    """1-axis ``("model",)`` mesh over the first ``tp`` devices — the
+    tensor-parallel serving mesh (``launch/serve.py --mesh``).  Use
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` to simulate
+    N devices on CPU."""
+    devs = jax.devices()
+    if tp < 1:
+        raise ValueError(f"mesh size must be >= 1, got {tp}")
+    if tp > len(devs):
+        raise ValueError(
+            f"mesh size {tp} exceeds visible devices ({len(devs)}); set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={tp} to "
+            f"simulate")
+    return make_mesh((tp,), ("model",), devices=devs[:tp])
+
+
 def make_host_mesh(shape=None, axes=("data", "model")) -> jax.sharding.Mesh:
     """Small mesh over whatever devices exist (tests / examples)."""
     n = len(jax.devices())

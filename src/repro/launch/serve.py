@@ -298,7 +298,7 @@ class PagedScheduler:
 
     def __init__(self, model: Model, params, *, slots: int, max_len: int,
                  page_size: int = 0, total_pages: int = 0,
-                 prefix_cache: bool = False, log=print):
+                 prefix_cache: bool = False, mesh=None, log=print):
         if not paged_supported(model.cfg):
             raise ValueError(
                 f"arch {model.cfg.name} has recurrent/stateful layers; "
@@ -348,9 +348,33 @@ class PagedScheduler:
         # page; its copy-on-write page is reserved at admission so the
         # reserve-on-admit contract (never stall mid-decode) still holds
         self.cow_stash: List[List[int]] = [[] for _ in range(slots)]
-        self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
-        self._prefill = jax.jit(model.prefill_step_paged,
-                                donate_argnums=(1,))
+        # ---- tensor parallelism (runtime/tp.py) ----
+        # a mesh shards params + KV pools over its "model" axis and swaps
+        # the step fns for shard_map'd twins; the scheduler's host-side
+        # page metadata (tables, lengths, allocator, trie) is device-free
+        # and identical across shards, so nothing else changes
+        self.mesh = mesh
+        self.tp = int(mesh.shape["model"]) if mesh is not None else 1
+        if mesh is not None:
+            from ..runtime import tp as tp_mod
+            err = tp_mod.tp_error(model.cfg, self.tp)
+            if err:
+                raise ValueError(err)
+            self.params = tp_mod.shard_tree(
+                params, tp_mod.param_pspecs(params, model.cfg, self.tp),
+                mesh)
+            self.cache = tp_mod.shard_tree(
+                self.cache, tp_mod.cache_pspecs(self.cache, model.cfg,
+                                                self.tp), mesh)
+            dec, pre = tp_mod.sharded_paged_fns(model, mesh)
+            self._decode = jax.jit(dec, donate_argnums=(1,))
+            self._prefill = jax.jit(pre, donate_argnums=(1,))
+        else:
+            self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
+            self._prefill = jax.jit(model.prefill_step_paged,
+                                    donate_argnums=(1,))
+        # page copies / scale resets are sharding-agnostic (they index the
+        # replicated pool axis), so GSPMD propagates the pool sharding
         self._copy_page = jax.jit(_copy_cache_page, donate_argnums=(0,))
 
     # ------------------------------------------------------------ admission
@@ -781,6 +805,14 @@ def main(argv=None):
                          "tick mode")
     ap.add_argument("--seed", type=int, default=0,
                     help="load-generator seed (arrivals + prompt tokens)")
+    ap.add_argument("--mesh", type=int, default=0,
+                    help="tensor-parallel degree: shard attention heads "
+                         "and KV page pools over an N-device ('model',) "
+                         "mesh (launch/mesh.make_serving_mesh). 0 = "
+                         "unsharded; 1 = degenerate mesh (bit-identical "
+                         "streams); N >= 2 needs N visible devices "
+                         "(XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N to simulate on CPU)")
     args = ap.parse_args(argv)
 
     from ..kernels import dispatch
@@ -800,18 +832,29 @@ def main(argv=None):
     model = Model(cfg, dt=DtypePolicy(param=jnp.bfloat16),
                   opts=ExecOptions(mode="run"))
     params = model.init(jax.random.key(0))
+    mesh = None
+    if args.mesh:
+        if args.cache != "paged":
+            raise SystemExit("--mesh requires --cache paged")
+        from .mesh import make_serving_mesh
+        mesh = make_serving_mesh(args.mesh)
+        print(f"[mesh] model={args.mesh} "
+              f"devices={len(jax.devices())} visible "
+              f"(backend={jax.default_backend()})")
     if args.cache == "paged":
         server = PagedScheduler(model, params, slots=args.slots,
                                 max_len=args.max_len,
                                 page_size=args.page_size,
                                 total_pages=args.total_pages,
-                                prefix_cache=args.prefix_cache)
+                                prefix_cache=args.prefix_cache,
+                                mesh=mesh)
         print(f"[paged] page_size={server.page} "
               f"pool={server.alloc.total} pages "
               f"({server.n_slot_pages}/slot max, "
               f"kv_dtype={args.kv_dtype or 'compute'}, "
               f"page_bytes={server._page_bytes}, "
-              f"prefix_cache={'on' if args.prefix_cache else 'off'})")
+              f"prefix_cache={'on' if args.prefix_cache else 'off'}, "
+              f"tp={server.tp})")
     else:
         server = Server(model, params, slots=args.slots,
                         max_len=args.max_len)

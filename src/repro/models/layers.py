@@ -130,20 +130,23 @@ class AttnSpec:
 
 
 def project(x: jax.Array, w: jax.Array, *, policy: str = "auto",
-            weights_dtype: str = "") -> jax.Array:
+            weights_dtype: str = "", tp: Optional[str] = None) -> jax.Array:
     """Contract x (..., K) with w (K, ...) at the configured weight dtype.
 
     ``"int8"`` quantizes the weight per output channel and routes through
     ``dispatch.quantized_matmul`` (fused in-kernel dequant); under jit the
     quantization is constant-folded against the weight, so the GEMM itself
     streams int8 from HBM.  Anything else is a plain ``dispatch.matmul``.
+    ``tp`` names the op's sharding contract ("col"/"row") — inert outside
+    an active ``registry.tp_scope`` so model code stays mesh-agnostic.
     """
     if weights_dtype == "int8":
         k = w.shape[0]
         w_q, w_scale = quant.quantize_channelwise(w.reshape(k, -1))
-        out = dispatch.quantized_matmul(x, w_q, w_scale, policy=policy)
+        out = dispatch.quantized_matmul(x, w_q, w_scale, policy=policy,
+                                        tp=tp)
         return out.reshape(x.shape[:-1] + w.shape[1:]).astype(x.dtype)
-    return dispatch.matmul(x, w, policy=policy)
+    return dispatch.matmul(x, w, policy=policy, tp=tp)
 
 
 def attention_init(key, s: AttnSpec) -> Params:
@@ -167,8 +170,10 @@ def _qkv(p: Params, s: AttnSpec, x: jax.Array, positions: jax.Array,
     cdt = dt.compute
     # (b,s,d) x (d,h,k) -> (b,s,h,k): dispatch contracts last-vs-first, so
     # the weight tensors pass through un-reshaped
+    # q/k/v are column-parallel under tensor parallelism (heads device-
+    # local; MQA pools replicate instead, which "col" degrades to cleanly)
     mm = functools.partial(project, policy=s.dispatch,
-                           weights_dtype=s.weights_dtype)
+                           weights_dtype=s.weights_dtype, tp="col")
     q = mm(x, p["wq"].astype(cdt))
     k = mm(x, p["wk"].astype(cdt))
     v = mm(x, p["wv"].astype(cdt))
@@ -415,18 +420,22 @@ def mlp_apply(p: Params, x: jax.Array, activation: str,
               dt: DtypePolicy, *, policy: str = "auto",
               weights_dtype: str = "") -> jax.Array:
     cdt = dt.compute
+    # Megatron split: up-projections column-parallel (no collective), the
+    # down-projection row-parallel (its psum is the block's one all-reduce)
     mm = functools.partial(project, policy=policy,
-                           weights_dtype=weights_dtype)
+                           weights_dtype=weights_dtype, tp="col")
+    mm_down = functools.partial(project, policy=policy,
+                                weights_dtype=weights_dtype, tp="row")
     if activation in ("swiglu", "geglu"):
         g = mm(x, p["wg"].astype(cdt))
         u = mm(x, p["wu"].astype(cdt))
         act = jax.nn.silu(g) if activation == "swiglu" \
             else jax.nn.gelu(g, approximate=True)
-        return mm(act * u, p["wd"].astype(cdt))
+        return mm_down(act * u, p["wd"].astype(cdt))
     h = mm(x, p["wi"].astype(cdt))
     h = jax.nn.relu(h) if activation == "relu" \
         else jax.nn.gelu(h, approximate=True)
-    return mm(h, p["wd"].astype(cdt))
+    return mm_down(h, p["wd"].astype(cdt))
 
 
 # --------------------------------------------------------------------------

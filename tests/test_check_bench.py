@@ -204,3 +204,46 @@ def test_sharing_gate_skips_without_both_scenarios(tmp_path):
     failures, compared = check_bench.compare_sharing(
         check_bench.load_metrics(p))
     assert failures == [] and compared == 0
+
+
+# ------------------------------------------------- sharded-serving (tp) gate
+
+def _tp_report(match1=True, match2=True, ops2=3, kref=True):
+    return {"rows": [
+        {"arch": "a", "cache": "paged", "schedule": "continuous-tp1",
+         "decode_tok_s": 100.0, "tp": 1, "tp_ops_in_region": 3,
+         "tokens_match_oracle": match1},
+        {"arch": "a", "cache": "paged", "schedule": "continuous-tp2",
+         "decode_tok_s": 80.0, "tp": 2, "tp_ops_in_region": ops2,
+         "tokens_match_oracle": match2, "kernels_match_reference": kref},
+    ]}
+
+
+def test_tp_gate_passes_on_true_verdicts(tmp_path):
+    base = _write(tmp_path, "base.json", _tp_report())
+    cur = _write(tmp_path, "cur.json", _tp_report())
+    assert check_bench.main(["--baseline", str(base),
+                             "--current", str(cur)]) == 0
+    failures, compared = check_bench.compare_tp(check_bench.load_rows(cur))
+    assert failures == [] and compared == 5   # 2x oracle + 2x ops + 1x kref
+
+
+def test_tp_gate_fails_on_any_false_verdict(tmp_path):
+    """Correctness verdicts have no tolerance: a diverged stream, a
+    missing in-region dispatch, or a kernel/reference split each fail."""
+    base = _write(tmp_path, "base.json", _tp_report())
+    for bad, needle in (
+            (_tp_report(match2=False), "tokens_match_oracle"),
+            (_tp_report(ops2=1), "tp_ops_in_region"),
+            (_tp_report(kref=False), "kernels_match_reference")):
+        cur = _write(tmp_path, "cur.json", bad)
+        assert check_bench.main(["--baseline", str(base),
+                                 "--current", str(cur)]) == 1
+        failures, _ = check_bench.compare_tp(check_bench.load_rows(cur))
+        assert len(failures) == 1 and needle in failures[0], failures
+
+
+def test_tp_gate_skips_without_tp_rows(tmp_path):
+    p = _write(tmp_path, "plain.json", _report(100.0, 40.0))
+    failures, compared = check_bench.compare_tp(check_bench.load_rows(p))
+    assert failures == [] and compared == 0
