@@ -1,5 +1,5 @@
-"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from
-results/dryrun/*.json.
+"""Generate the EXPERIMENTS.md §Dry-run, §Roofline, and §Serving tables
+from results/dryrun/*.json and results/BENCH_serve.json.
 
 Usage: PYTHONPATH=src python -m benchmarks.report [--out EXPERIMENTS_gen.md]
 """
@@ -11,6 +11,7 @@ from pathlib import Path
 
 REPO = Path(__file__).resolve().parents[1]
 RESULTS = REPO / "results" / "dryrun"
+SERVE_JSON = REPO / "results" / "BENCH_serve.json"
 
 ARCH_ORDER = [
     "qwen2-moe-a2.7b", "kimi-k2-1t-a32b", "musicgen-large", "gemma3-4b",
@@ -83,6 +84,95 @@ def roofline_table(cells) -> str:
     return "\n".join(rows)
 
 
+# -------------------------------------------------------------- serving
+# BENCH_serve.json accumulates one row per (arch, cache, schedule) leg;
+# the schedule string names the row family.  Each family carries its own
+# metric columns, so the section renders one table per family instead of
+# a sparse union-of-all-keys grid.
+def _cell(r, key, fmt="{}"):
+    v = r.get(key)
+    if v is None:
+        return "—"
+    if isinstance(v, bool):
+        return "yes" if v else "NO"
+    if isinstance(v, float):
+        return fmt.format(v)
+    return str(v)
+
+
+SERVE_FAMILIES = [
+    # (title, predicate on schedule, [(header, key, float fmt)])
+    ("throughput (phased / static / continuous)",
+     lambda s: s in ("phased", "static", "continuous"),
+     [("decode tok/s", "decode_tok_s", "{:.0f}"),
+      ("total tok/s", "total_tok_s", "{:.0f}"),
+      ("prefill tok/s", "prefill_tok_s", "{:.0f}"),
+      ("ttft p50 s", "ttft_p50_s", "{:.4f}"),
+      ("vs static", "speedup_vs_static", "{:.2f}x"),
+      ("rejected", "rejected", "{}")]),
+    ("prefix sharing (continuous-share* / continuous-int8-*)",
+     lambda s: s.startswith(("continuous-share", "continuous-int8")),
+     [("kv dtype", "kv_dtype", "{}"),
+      ("decode tok/s", "decode_tok_s", "{:.0f}"),
+      ("eff. prefill tok/s", "prefill_tok_s_effective", "{:.0f}"),
+      ("prefix hits", "prefix_hits", "{}"),
+      ("CoW copies", "cow_copies", "{}"),
+      ("peak KV MiB", "max_resident_kv_bytes", "{:.2f}")]),
+    ("tensor parallel (continuous-tp*)",
+     lambda s: s.startswith("continuous-tp"),
+     [("tp", "tp", "{}"),
+      ("devices", "devices", "{}"),
+      ("decode tok/s", "decode_tok_s", "{:.0f}"),
+      ("total tok/s", "total_tok_s", "{:.0f}"),
+      ("matches tp=1", "tokens_match_oracle", "{}"),
+      ("KV sharded", "kv_sharded", "{}")]),
+    ("speculative decoding (continuous-spec*)",
+     lambda s: s.startswith("continuous-spec"),
+     [("drafter", "drafter", "{}"),
+      ("draft toks", "draft_tokens", "{}"),
+      ("decode tok/s", "decode_tok_s", "{:.0f}"),
+      ("baseline tok/s", "baseline_decode_tok_s", "{:.0f}"),
+      ("vs baseline", "speedup_vs_baseline", "{:.2f}x"),
+      ("accept rate", "acceptance_rate", "{:.2f}"),
+      ("toks/step", "accepted_per_step", "{:.2f}"),
+      ("matches baseline", "tokens_match_baseline", "{}")]),
+]
+
+
+def load_serve():
+    if not SERVE_JSON.exists():
+        return []
+    return json.loads(SERVE_JSON.read_text()).get("rows", [])
+
+
+def serve_tables(rows) -> str:
+    out = []
+    for title, match, cols in SERVE_FAMILIES:
+        fam = [r for r in rows if match(r.get("schedule", ""))]
+        if not fam:
+            continue
+        out.append(f"### {title}")
+        out.append("")
+        out.append("| arch | cache | schedule | "
+                   + " | ".join(h for h, _, _ in cols) + " |")
+        out.append("|---" * (3 + len(cols)) + "|")
+        for r in sorted(fam, key=lambda r: (r.get("arch", ""),
+                                            r.get("schedule", ""))):
+            if "max_resident_kv_bytes" in r:   # render bytes as MiB
+                r = dict(r, max_resident_kv_bytes=(
+                    r["max_resident_kv_bytes"] / 2**20))
+            cells = " | ".join(_cell(r, k, f) for _, k, f in cols)
+            out.append(f"| {r.get('arch', '—')} | {r.get('cache', '—')} "
+                       f"| {r.get('schedule', '—')} | {cells} |")
+        out.append("")
+    leftover = [r for r in rows
+                if not any(m(r.get("schedule", ""))
+                           for _, m, _ in SERVE_FAMILIES)]
+    for r in leftover:    # unknown family: never drop a row silently
+        out.append(f"- unrendered row: {r.get('arch')}/{r.get('schedule')}")
+    return "\n".join(out)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", type=Path, default=None)
@@ -91,6 +181,10 @@ def main():
     out = ["## §Dry-run (generated)", "", dryrun_table(cells), "",
            "## §Roofline (generated, single-pod 256 chips)", "",
            roofline_table(cells), ""]
+    serve = load_serve()
+    if serve:
+        out += ["## §Serving (generated, smoke-scale CPU rows)", "",
+                serve_tables(serve)]
     text = "\n".join(out)
     if args.out:
         args.out.write_text(text)

@@ -652,6 +652,104 @@ def run_serve_continuous(args) -> None:
                       [cont_row, static_row] + share_rows + int8_rows)
 
 
+def run_serve_speculative(args) -> None:
+    """--serve-speculative: speculative-decoding rows (continuous-spec*).
+
+    Differential-first, like the TP rows: the headline field is
+    ``tokens_match_baseline`` — greedy streams from the speculative
+    engine compared token-for-token against a plain continuous engine on
+    the identically regenerated seeded stream.  One baseline leg, then
+    one leg per drafter (model-free n-gram; small-model early-exit
+    sibling sharing the target's leading layers), each on a FRESH
+    scheduler so no KV state leaks between legs.  Rows carry decode
+    throughput vs baseline, the acceptance rate, and emitted tokens per
+    verify step; ``scripts/check_bench.py compare_spec`` gates on them
+    without a stored-baseline file.  Absolute numbers are CPU-interpret
+    numbers — on real accelerators the verify step's extra width is
+    nearly free next to its weight traffic (the paper's §2.1.4
+    cross-input pipelining argument), which is the speedup lever.
+    """
+    from repro.configs import get_arch
+    from repro.core.memory import DtypePolicy
+    from repro.launch.engine import ContinuousEngine
+    from repro.launch.loadgen import poisson_stream
+    from repro.launch.serve import PagedScheduler
+    from repro.launch.speculative import make_drafter
+    from repro.models.transformer import ExecOptions, Model
+    from repro.tune.cache import preload as preload_tuned
+
+    preload_tuned()
+    cfg = get_arch(args.serve_arch).smoke()
+    cfg = dataclasses.replace(cfg, dispatch=args.serve_dispatch)
+    model = Model(cfg, dt=DtypePolicy(param=jnp.bfloat16),
+                  opts=ExecOptions(mode="run"))
+    params = model.init(jax.random.key(0))
+    slots, prompt_len, max_new, max_len = 2, 12, 8, 64
+    n_req, draft = args.serve_requests, args.serve_draft_tokens
+
+    def leg(drafter):
+        sched = PagedScheduler(model, params, slots=slots, max_len=max_len,
+                               page_size=args.serve_page_size, log=None)
+        eng = ContinuousEngine(sched, clock="wall", drafter=drafter,
+                               log=None)
+        eng.warmup()
+        reqs = poisson_stream(n_req, rate=args.serve_rate,
+                              vocab_size=cfg.vocab_size,
+                              prompt_len=prompt_len, max_new=max_new,
+                              seed=0)
+        done = eng.run(reqs)
+        if len(done) != n_req:
+            raise RuntimeError(
+                f"speculative serve finished {len(done)}/{n_req} requests")
+        streams = {r.rid: list(r.out) for r in done}
+        emitted = (sched.spec_emitted if drafter is not None
+                   else sched.decode_tokens)
+        return streams, round(emitted / max(eng.executor.t_decode, 1e-9),
+                              2), sched
+
+    base_streams, base_tok_s, _ = leg(None)
+    rows = []
+    print("arch,schedule,drafter,decode_tok_s,baseline_decode_tok_s,"
+          "accept_rate,toks_per_step,tokens_match_baseline")
+    for kind in ("ngram", "model"):
+        drafter = make_drafter(
+            kind, cfg, max_draft=draft,
+            dt=DtypePolicy(param=jnp.bfloat16), rng_key=jax.random.key(0),
+            pad_to=max_len + draft, batch_pad=slots)
+        streams, tok_s, sched = leg(drafter)
+        match = streams == base_streams
+        rows.append({
+            "arch": cfg.name, "cache": "paged",
+            "schedule": f"continuous-spec{kind}",
+            "dispatch": args.serve_dispatch, "slots": slots,
+            "page_size": sched.page, "requests": n_req,
+            "drafter": kind, "draft_tokens": draft,
+            "decode_tok_s": tok_s,
+            "baseline_decode_tok_s": base_tok_s,
+            "speedup_vs_baseline": round(tok_s / max(base_tok_s, 1e-9), 3),
+            "acceptance_rate": round(
+                sched.spec_accepted / max(sched.spec_drafted, 1), 4),
+            "accepted_per_step": round(
+                sched.spec_emitted / max(sched.verify_steps, 1), 3),
+            "verify_steps": sched.verify_steps,
+            "tokens_match_baseline": match,
+            "backend": jax.default_backend(),
+        })
+        r = rows[-1]
+        print(f"{cfg.name},{r['schedule']},{kind},{tok_s},{base_tok_s},"
+              f"{r['acceptance_rate']},{r['accepted_per_step']},{match}",
+              flush=True)
+        if not match:
+            raise RuntimeError(
+                f"{kind} speculative streams diverged from baseline")
+    print(f"# spec vs baseline decode: "
+          f"ngram {rows[0]['speedup_vs_baseline']:.3f}x "
+          f"(accept {rows[0]['acceptance_rate']:.2f}), "
+          f"model {rows[1]['speedup_vs_baseline']:.3f}x "
+          f"(accept {rows[1]['acceptance_rate']:.2f})")
+    _merge_serve_rows(args.serve_out, rows)
+
+
 def run_serve_sharded(args) -> None:
     """--serve-sharded: tensor-parallel serving rows (continuous-tp{1,2}).
 
@@ -833,6 +931,12 @@ def main(argv=None) -> None:
     ap.add_argument("--serve-token-budget", type=int, default=0,
                     help="continuous per-iteration token budget "
                          "(0 = slots x page_size)")
+    ap.add_argument("--serve-speculative", action="store_true",
+                    help="speculative-decoding rows: continuous-spec{ngram,"
+                         "model} vs a plain continuous baseline on the "
+                         "same seeded stream (streams must match exactly)")
+    ap.add_argument("--serve-draft-tokens", type=int, default=3,
+                    help="draft tokens per verify step (window = draft+1)")
     ap.add_argument("--serve-sharded", action="store_true",
                     help="tensor-parallel serving rows: continuous-tp1 "
                          "(degenerate mesh, bit-identical) and, with >= 2 "
@@ -849,6 +953,8 @@ def main(argv=None) -> None:
         run_serve(args)
     elif args.serve_continuous:
         run_serve_continuous(args)
+    elif args.serve_speculative:
+        run_serve_speculative(args)
     elif args.serve_sharded:
         run_serve_sharded(args)
     else:

@@ -53,6 +53,14 @@ prefill_attention all dispatched through ``registry.call`` inside the
 shard_map region, and ``kernels_match_reference`` (present on tp>=2
 kernel rows) must be true.  Correctness has no tolerance knob.
 
+Speculative decoding (``continuous-spec*`` rows, from
+``--serve-speculative``) is likewise gated baseline-free on its own
+contract: ``tokens_match_baseline`` must be truthy (greedy speculative
+streams are bit-identical to the plain engine by construction — any
+divergence is a bug, not noise), ``acceptance_rate`` must be strictly
+positive (drafts that never survive verification make speculation a
+pure slowdown), and ``decode_tok_s`` must be reported.
+
 Updating the baseline (after an intentional perf change or a new
 machine): re-run the benchmark writing straight to the baseline path and
 commit the result — see benchmarks/README.md ("Benchmark-regression
@@ -238,6 +246,42 @@ def compare_tp(rows: List[dict]) -> Tuple[List[str], int]:
     return failures, compared
 
 
+def compare_spec(rows: List[dict]) -> Tuple[List[str], int]:
+    """Speculative-decoding gate, baseline-free: every
+    ``continuous-spec*`` row in the CURRENT run must carry a truthy
+    ``tokens_match_baseline`` (greedy speculative streams bit-identical
+    to the plain continuous engine on the same seeded stream — the
+    subsystem's correctness contract), an ``acceptance_rate`` strictly
+    above zero (a drafter whose drafts never survive verification is a
+    pure slowdown, not a feature), and a reported ``decode_tok_s``
+    (the row must carry the throughput it claims to improve).
+    Correctness has no tolerance knob."""
+    failures, compared = [], 0
+    for row in rows:
+        sched = row.get("schedule", "")
+        if not sched.startswith("continuous-spec"):
+            continue
+        name = f"{row.get('arch', '?')}/{row.get('cache', '?')}/{sched}"
+        compared += 1
+        if not row.get("tokens_match_baseline"):
+            failures.append(
+                f"{name}: tokens_match_baseline="
+                f"{row.get('tokens_match_baseline')!r} — speculative "
+                f"streams diverged from the non-speculative baseline")
+        compared += 1
+        if not float(row.get("acceptance_rate") or 0.0) > 0.0:
+            failures.append(
+                f"{name}: acceptance_rate="
+                f"{row.get('acceptance_rate')!r} — no draft token "
+                f"survived verification (drafting is pure overhead)")
+        compared += 1
+        if row.get("decode_tok_s") is None:
+            failures.append(
+                f"{name}: decode_tok_s missing — the row carries no "
+                f"decode throughput to compare against the baseline")
+    return failures, compared
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--baseline", default="results/BENCH_serve.json")
@@ -270,9 +314,13 @@ def main(argv=None) -> int:
     q_failures, q_compared = compare_kv_dtype(current, args.tolerance)
     failures += q_failures
     compared += q_compared
-    tp_failures, tp_compared = compare_tp(load_rows(args.current))
+    current_rows = load_rows(args.current)
+    tp_failures, tp_compared = compare_tp(current_rows)
     failures += tp_failures
     compared += tp_compared
+    spec_failures, spec_compared = compare_spec(current_rows)
+    failures += spec_failures
+    compared += spec_compared
     for line in failures:
         print(f"REGRESSION: {line}")
     if failures:

@@ -26,7 +26,9 @@
 #                           BENCH_prefill.json kernel-vs-reference rows,
 #                           plus a forced-2-device sharded smoke (--mesh 2
 #                           CLI + --serve-sharded bench) gated by
-#                           check_bench's baseline-free compare_tp
+#                           check_bench's baseline-free compare_tp, plus a
+#                           speculative smoke (--speculate ngram CLI +
+#                           --serve-speculative bench) gated by compare_spec
 #   scripts/ci.sh bench   — benchmark-regression gate: re-run both serve
 #                           benchmark modes and fail if decode throughput
 #                           dropped or p99 per-token latency rose more than
@@ -114,8 +116,16 @@ case "${1:-smoke}" in
     python -m repro.launch.serve --arch gemma-2b --smoke --cache paged \
       --schedule continuous --dispatch kernels --slots 2 --requests 3 \
       --prompt-len 6 --max-new 4 --max-len 32 --page-size 4 --clock tick
+    # speculative smoke: ngram draft -> fixed-width verify -> rollback on
+    # the same paged path; the CLI prints the verify/accept counters and
+    # the bench rows carry tokens_match_baseline + acceptance_rate for
+    # check_bench's baseline-free compare_spec gate
+    python -m repro.launch.serve --arch gemma-2b --smoke --cache paged \
+      --dispatch kernels --speculate ngram --slots 2 --requests 3 \
+      --prompt-len 6 --max-new 4 --max-len 32 --page-size 8
     python benchmarks/run.py --serve --serve-dispatch kernels
     python benchmarks/run.py --serve-continuous --serve-dispatch kernels
+    python benchmarks/run.py --serve-speculative --serve-dispatch kernels
     python benchmarks/run.py --prefill
     # sharded smoke: force a 2-device host mesh and run the tensor-parallel
     # paged path end-to-end — the CLI on gemma (MQA, replicated pools) and
@@ -140,6 +150,8 @@ case "${1:-smoke}" in
     python benchmarks/run.py --serve --serve-dispatch kernels \
       --serve-out results/scratch/BENCH_serve_current.json
     python benchmarks/run.py --serve-continuous --serve-dispatch kernels \
+      --serve-out results/scratch/BENCH_serve_current.json
+    python benchmarks/run.py --serve-speculative --serve-dispatch kernels \
       --serve-out results/scratch/BENCH_serve_current.json
     XLA_FLAGS="--xla_force_host_platform_device_count=2" \
       python benchmarks/run.py --serve-sharded --serve-dispatch kernels \

@@ -17,7 +17,7 @@ import jax.numpy as jnp
 
 from ...core.plan import Level
 from ...core.scaling import TilePlan, TilePlanner
-from ...tune.cache import resolve_plan
+from ...tune.cache import resolve_plan, resolve_plan_source
 from .. import registry
 from ..common import interpret_default
 from . import ref
@@ -183,17 +183,40 @@ def _matmul_vjp_fwd(ctx, x, w):
     return _matmul_kernel_lowering(ctx, x, w), (x, w)
 
 
+def _grad_gemm(a: jax.Array, b: jax.Array, mode: str) -> jax.Array:
+    """One projection-grad GEMM routed like a forward matmul: resolve THIS
+    shape's own tuned plan (dA and dB are transposed problems, so each
+    gets its own cache entry, never the forward's), run the staged Pallas
+    kernel, and count the route through the public registry hook — the
+    same paired-schedule idiom as the attention backward.  Falls back to
+    the f32 einsum reference only when the tuned entry pins the shape to
+    T0/T1 under auto mode."""
+    m, k = a.shape
+    n = b.shape[1]
+    level, kw, source = resolve_plan_source(
+        "matmul", (m, k, n), a.dtype, Level.T3_REPLICATED, "tuned")
+    use_kernel = not (level in (Level.T0_NAIVE, Level.T1_PIPELINED)
+                      and mode != "kernels")
+    registry.count_route("matmul_bwd",
+                         "kernel" if use_kernel else "reference", source)
+    if not use_kernel:
+        return jnp.einsum("mk,kn->mn", a, b)
+    return matmul(a, b, level=Level.T3_REPLICATED,
+                  plan=(dict(kw) if kw else "heuristic"))
+
+
 def _matmul_vjp_bwd(ctx, res, g):
-    # backward = the reference contraction in f32, grads in primal dtypes
-    # (projection grads are plain GEMMs; the kernel forward's f32 output
-    # was cast to the promoted dtype, so the cotangent casts back first)
+    # backward = two plain GEMMs in f32 (dx = g @ w.T, dw = x.T @ g),
+    # each dispatched through the staged tuned kernel at its own shape;
+    # grads cast back to the primal dtypes (the kernel forward's f32
+    # output was cast to the promoted dtype, so the cotangent casts first)
     x, w = res
     k = x.shape[-1]
     g2 = g.reshape(-1, math.prod(w.shape[1:])).astype(jnp.float32)
-    x2 = x.reshape(-1, k)
-    w2 = w.reshape(k, -1)
-    dx = jnp.einsum("mn,kn->mk", g2, w2).astype(x.dtype).reshape(x.shape)
-    dw = jnp.einsum("mk,mn->kn", x2, g2).astype(w.dtype).reshape(w.shape)
+    x2 = x.reshape(-1, k).astype(jnp.float32)
+    w2 = w.reshape(k, -1).astype(jnp.float32)
+    dx = _grad_gemm(g2, w2.T, ctx.mode).astype(x.dtype).reshape(x.shape)
+    dw = _grad_gemm(x2.T, g2, ctx.mode).astype(w.dtype).reshape(w.shape)
     return dx, dw
 
 
@@ -240,10 +263,17 @@ def _grouped_vjp_fwd(ctx, x, w):
 
 
 def _grouped_vjp_bwd(ctx, res, g):
+    # per-expert grads are the same two plain GEMMs as the dense matmul
+    # backward, unrolled over the static group axis like the forward
     x, w = res
     g32 = g.astype(jnp.float32)
-    dx = jnp.einsum("gcn,gkn->gck", g32, w).astype(x.dtype)
-    dw = jnp.einsum("gck,gcn->gkn", x, g32).astype(w.dtype)
+    x32 = x.astype(jnp.float32)
+    w32 = w.astype(jnp.float32)
+    n_groups = x.shape[0]
+    dx = jnp.stack([_grad_gemm(g32[e], w32[e].T, ctx.mode)
+                    for e in range(n_groups)]).astype(x.dtype)
+    dw = jnp.stack([_grad_gemm(x32[e].T, g32[e], ctx.mode)
+                    for e in range(n_groups)]).astype(w.dtype)
     return dx, dw
 
 

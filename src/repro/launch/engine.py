@@ -29,22 +29,26 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
 from .loadgen import ArrivalQueue, Request
 from .metrics import ServeMetrics
+from .speculative import accept_longest_prefix
 
 
 @dataclass
 class StepPlan:
     """One engine iteration's work: ``prefill`` holds (slot, chunk start)
     pairs batched through ONE prefill forward; ``decode`` the slots that
-    take a decode token."""
+    take a decode token; ``verify`` the draft tokens (per decode slot)
+    the speculative mode admitted under the token budget — riding the
+    same batched forward as the decode token they extend."""
     prefill: List[Tuple[int, int]] = field(default_factory=list)
     decode: List[int] = field(default_factory=list)
+    verify: Dict[int, List[int]] = field(default_factory=dict)
 
     def empty(self) -> bool:
         return not self.prefill and not self.decode
@@ -87,9 +91,24 @@ class BatchPolicy:
         self.page = int(page)
 
     def compose(self, running: List[int],
-                prefilling: List[Tuple[int, int]]) -> StepPlan:
+                prefilling: List[Tuple[int, int]],
+                drafts: Optional[Dict[int, List[int]]] = None) -> StepPlan:
+        """``drafts`` (speculative mode) maps running slots to proposed
+        draft tokens; they are admitted AFTER the mandatory decode tokens
+        and BEFORE prefill chunks, under the same budget — a verify chunk
+        is cheaper than a prefill chunk (a few tokens vs a page) and its
+        accepted tokens pay down decode latency directly, but it must
+        never starve admission: leftover budget still prefills."""
         decode = list(running)
         left = max(0, self.token_budget - len(decode))
+        verify: Dict[int, List[int]] = {}
+        if drafts:
+            for slot in decode:
+                ks = drafts.get(slot, [])
+                take = min(len(ks), left)
+                if take > 0:
+                    verify[slot] = list(ks[:take])
+                    left -= take
         chunks: List[Tuple[int, int]] = []
         for slot, start in prefilling:
             if left < self.page:
@@ -98,7 +117,7 @@ class BatchPolicy:
             left -= self.page
         if not decode and not chunks and prefilling:
             chunks.append(prefilling[0])   # forced progress
-        return StepPlan(prefill=chunks, decode=decode)
+        return StepPlan(prefill=chunks, decode=decode, verify=verify)
 
 
 class StepExecutor:
@@ -151,6 +170,29 @@ class StepExecutor:
         self.t_decode += time.perf_counter() - t0
         return nxt
 
+    def verify(self, cur: np.ndarray, decode_slots: List[int],
+               drafts: Dict[int, List[int]], width: int) -> np.ndarray:
+        """One batched fixed-width verify forward replacing the decode
+        step in speculative mode: slot rows carry [current token,
+        drafts..., padding]; non-decoding slots ride along masked to the
+        trash page exactly as in :meth:`decode`.  Returns (slots, width)
+        greedy predictions."""
+        sched = self.sched
+        sched.prepare_verify(decode_slots, width)  # full-span CoW sweep
+        toks = np.zeros((sched.slots, width), np.int32)
+        mask = np.zeros((sched.slots,), bool)
+        for slot in decode_slots:
+            mask[slot] = True
+            toks[slot, 0] = cur[slot]
+            ks = drafts.get(slot, [])
+            toks[slot, 1:1 + len(ks)] = ks
+        lengths = np.where(mask, sched.lengths, 0).astype(np.int32)
+        table = np.where(mask[:, None], sched.table, 0).astype(np.int32)
+        t0 = time.perf_counter()
+        preds = sched.verify_step(toks, view=(lengths, table))
+        self.t_decode += time.perf_counter() - t0
+        return preds
+
 
 class ContinuousEngine:
     """Admission -> compose -> execute -> account, once per iteration.
@@ -165,13 +207,18 @@ class ContinuousEngine:
 
     def __init__(self, sched, *, token_budget: int = 0,
                  clock: str = "wall", tick: float = 1.0,
-                 metrics: Optional[ServeMetrics] = None, log=print):
+                 metrics: Optional[ServeMetrics] = None, drafter=None,
+                 log=print):
         if clock not in ("wall", "tick"):
             raise ValueError(f"clock must be wall|tick, got {clock!r}")
         self.sched = sched
         self.policy = BatchPolicy(token_budget or sched.slots * sched.page,
                                   sched.page)
         self.executor = StepExecutor(sched)
+        # speculative mode: a drafter swaps the decode step for a fixed-
+        # width draft/verify/rollback step (launch/speculative.py)
+        self.drafter = drafter
+        self.verify_width = (drafter.max_draft + 1) if drafter else 0
         self.clock_mode = clock
         self.tick = float(tick)
         self.metrics = metrics if metrics is not None else ServeMetrics()
@@ -209,6 +256,11 @@ class ContinuousEngine:
                 jnp.full((b,), sched.page - 1, jnp.int32))
         zeros = np.zeros((sched.slots,), np.int32)
         sched.step(zeros, view=(zeros, np.zeros_like(sched.table)))
+        if self.drafter is not None:
+            sched.verify_step(
+                np.zeros((sched.slots, self.verify_width), np.int32),
+                view=(zeros, np.zeros_like(sched.table)))
+            sched.verify_steps = 0
         sched.decode_steps = 0
         sched.decode_tokens = 0
 
@@ -299,7 +351,9 @@ class ContinuousEngine:
                    if sched.active[i] is not None and self.states[i] is None]
         prefilling = [(i, self.states[i].pos) for i in range(sched.slots)
                       if self.states[i] is not None]
-        plan = self.policy.compose(running, prefilling)
+        drafts = (sched.draft_for(self.drafter, running)
+                  if self.drafter is not None and running else None)
+        plan = self.policy.compose(running, prefilling, drafts=drafts)
 
         if plan.empty():
             nxt = (self.queue.next_arrival()
@@ -319,8 +373,14 @@ class ContinuousEngine:
         t0 = time.perf_counter()
         logits = (self.executor.prefill(plan.prefill, self.states)
                   if plan.prefill else None)
-        nxt_tok = (self.executor.decode(self.cur, plan.decode)
-                   if plan.decode else None)
+        speculative = self.drafter is not None
+        nxt_tok = preds = None
+        if plan.decode:
+            if speculative:
+                preds = self.executor.verify(self.cur, plan.decode,
+                                             plan.verify, self.verify_width)
+            else:
+                nxt_tok = self.executor.decode(self.cur, plan.decode)
         self.clock += ((time.perf_counter() - t0)
                        if self.clock_mode == "wall" else self.tick)
         self.iterations += 1
@@ -350,6 +410,35 @@ class ContinuousEngine:
 
         for slot in plan.decode:
             r = sched.active[slot]
+            if speculative:
+                # longest-correct-prefix acceptance + host rollback: the
+                # emission loop replicates the plain decode path's
+                # per-token finish checks exactly, so greedy streams
+                # (including truncation points) are bit-identical to the
+                # non-speculative engine
+                ks = plan.verify.get(slot, [])
+                emit = accept_longest_prefix(ks, preds[slot])
+                accepted = len(emit) - 1
+                emitted = 0
+                finished = False
+                for tok in emit:
+                    sched.lengths[slot] += 1
+                    r.out.append(tok)
+                    self.cur[slot] = tok
+                    emitted += 1
+                    self.metrics.on_token(r.rid, t)
+                    if (len(r.out) >= r.max_new
+                            or int(sched.lengths[slot]) >= sched.max_len):
+                        finished = True
+                        break
+                sched.note_spec(len(ks), accepted, emitted)
+                self.metrics.on_spec_step(len(ks), accepted, emitted)
+                if finished:
+                    self._maybe_truncate(r, slot)
+                    self._finish(slot, t)
+                else:
+                    sched._reclaim_slot(slot)
+                continue
             sched.lengths[slot] += 1
             tok = int(nxt_tok[slot])
             r.out.append(tok)

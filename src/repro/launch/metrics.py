@@ -38,6 +38,11 @@ class ServeMetrics:
         self.timelines: Dict[int, RequestTimeline] = {}
         self.rejected: List[int] = []
         self.truncated: List[int] = []
+        # Speculative decoding tallies (zero unless a drafter is active).
+        self.spec_steps = 0
+        self.spec_drafted = 0
+        self.spec_accepted = 0
+        self.spec_emitted = 0
 
     def _tl(self, rid: int, t: float = 0.0) -> RequestTimeline:
         if rid not in self.timelines:
@@ -65,6 +70,16 @@ class ServeMetrics:
 
     def on_truncate(self, rid: int) -> None:
         self.truncated.append(rid)
+
+    def on_spec_step(self, drafted: int, accepted: int, emitted: int) -> None:
+        """One slot's verify outcome: ``drafted`` candidates proposed,
+        ``accepted`` of them matched the target, ``emitted`` tokens
+        entered the stream (accepted + the bonus token, capped by the
+        request's remaining budget)."""
+        self.spec_steps += 1
+        self.spec_drafted += drafted
+        self.spec_accepted += accepted
+        self.spec_emitted += emitted
 
     # ----------------------------------------------------------- summaries
     def ttfts(self) -> List[float]:
@@ -104,4 +119,8 @@ class ServeMetrics:
             "tok_latency_p50": self.percentile(gaps, 50),
             "tok_latency_p99": self.percentile(gaps, 99),
             "clock_span": span,
+            "spec_accept_rate": (self.spec_accepted / self.spec_drafted
+                                 if self.spec_drafted else None),
+            "spec_tokens_per_step": (self.spec_emitted / self.spec_steps
+                                     if self.spec_steps else None),
         }

@@ -336,6 +336,11 @@ class PagedScheduler:
         self.prefill_tokens = 0
         self.decode_steps = 0
         self.decode_tokens = 0
+        # ---- speculative decoding (launch/speculative.py) ----
+        self.verify_steps = 0             # batched verify forwards
+        self.spec_drafted = 0             # candidate tokens proposed
+        self.spec_accepted = 0            # candidates the target agreed with
+        self.spec_emitted = 0             # tokens emitted by verify steps
         self.rejected = 0                 # inadmissible requests, counted
         self.rejected_requests: List[Request] = []
         self.truncated = 0                # finished early at max_len
@@ -369,10 +374,13 @@ class PagedScheduler:
             dec, pre = tp_mod.sharded_paged_fns(model, mesh)
             self._decode = jax.jit(dec, donate_argnums=(1,))
             self._prefill = jax.jit(pre, donate_argnums=(1,))
+            self._verify = None        # no sharded verify twin (yet)
         else:
             self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
             self._prefill = jax.jit(model.prefill_step_paged,
                                     donate_argnums=(1,))
+            self._verify = jax.jit(model.verify_step_paged,
+                                   donate_argnums=(1,))
         # page copies / scale resets are sharding-agnostic (they index the
         # replicated pool axis), so GSPMD propagates the pool sharding
         self._copy_page = jax.jit(_copy_cache_page, donate_argnums=(0,))
@@ -514,6 +522,29 @@ class PagedScheduler:
         self.prefix.insert(prompt, self.slot_pages[slot], self.alloc)
         self.check_page_accounting()
 
+    def _cow_page(self, slot: int, idx: int) -> None:
+        """Give ``slot`` a private copy of its logical page ``idx`` if it
+        currently has other holders (prefix cache or sharer slots):
+        stashed CoW page first, then eviction-backed allocation; payload
+        (and int8 scale rows) copied, table rebound, source released."""
+        src = self.slot_pages[slot][idx]
+        if self.alloc.ref[src] <= 1:
+            return
+        if self.cow_stash[slot]:
+            dst = self.cow_stash[slot].pop()
+        else:
+            need = 1 - self.alloc.available()
+            if need > 0 and self.prefix is not None:
+                self.prefix.evict(need, self.alloc)
+            dst = self.alloc.alloc(1)[0]
+        self.cache = self._copy_page(self.cache, jnp.int32(src),
+                                     jnp.int32(dst))
+        self.slot_pages[slot][idx] = dst
+        self.table[slot, idx] = dst
+        self.alloc.release([src])
+        self.cow_copies += 1
+        self.check_page_accounting()
+
     def prepare_decode(self, slots: List[int]) -> None:
         """Copy-on-write sweep before a batched decode step: any slot
         whose next append position sits in a page with other holders
@@ -524,23 +555,24 @@ class PagedScheduler:
             idx = pos // self.page
             if idx >= len(self.slot_pages[slot]):
                 continue                 # guard: decode loop ends the req
-            src = self.slot_pages[slot][idx]
-            if self.alloc.ref[src] <= 1:
-                continue
-            if self.cow_stash[slot]:
-                dst = self.cow_stash[slot].pop()
-            else:
-                need = 1 - self.alloc.available()
-                if need > 0 and self.prefix is not None:
-                    self.prefix.evict(need, self.alloc)
-                dst = self.alloc.alloc(1)[0]
-            self.cache = self._copy_page(self.cache, jnp.int32(src),
-                                         jnp.int32(dst))
-            self.slot_pages[slot][idx] = dst
-            self.table[slot, idx] = dst
-            self.alloc.release([src])
-            self.cow_copies += 1
-            self.check_page_accounting()
+            self._cow_page(slot, idx)
+
+    def prepare_verify(self, slots: List[int], width: int) -> None:
+        """Copy-on-write sweep before a batched verify step.  A verify
+        window writes the FULL fixed-width span ``[lengths, lengths +
+        width)`` — including padded rows for slots with fewer drafts —
+        so every reserved page the span touches must be privately held
+        before the write, not just the page under the cursor.  Pages
+        beyond the reserved span are redirected to the trash page by the
+        model's write clamp and need no copy; reclaimed leading pages
+        sit provably below the span (window reclamation only frees pages
+        wholly behind ``lengths - window``)."""
+        for slot in slots:
+            lo = int(self.lengths[slot]) // self.page
+            hi = min((int(self.lengths[slot]) + width - 1) // self.page,
+                     len(self.slot_pages[slot]) - 1)
+            for idx in range(max(lo, self.reclaimed[slot]), hi + 1):
+                self._cow_page(slot, idx)
 
     def _reclaim_slot(self, slot: int) -> int:
         """Sliding-window page reclamation (delay buffering §2.2 applied
@@ -610,6 +642,20 @@ class PagedScheduler:
         assert refs == expected, (
             f"refcount accounting broken: sum(ref)={refs} != "
             f"slot bindings + cow stash + trie = {expected}")
+        # post-rollback cursor sanity: speculative verify may write past
+        # ``lengths`` and then roll back by NOT advancing it, so check the
+        # cursor itself stayed inside the slot's live binding: at or below
+        # the reserved span, at or above the reclaimed frontier
+        for slot, r in enumerate(self.active):
+            if r is None:
+                continue
+            ln = int(self.lengths[slot])
+            span = len(self.slot_pages[slot]) * self.page
+            assert ln <= span, (
+                f"slot {slot} cursor {ln} past reserved span {span}")
+            assert ln >= self.reclaimed[slot] * self.page, (
+                f"slot {slot} cursor {ln} behind reclaimed frontier "
+                f"{self.reclaimed[slot] * self.page}")
         # quantized pools: every int8 pages leaf must carry a companion
         # scale leaf sized to the same pool — scales are allocated with
         # their pages and recycled with them (reset via on_alloc), so a
@@ -677,6 +723,150 @@ class PagedScheduler:
         self.decode_steps += 1
         self.decode_tokens += int(np.count_nonzero(lengths))
         return np.asarray(jnp.argmax(logits, axis=-1))
+
+    # --------------------------------------------------- speculative decoding
+    def draft_for(self, drafter, slots: List[int]) -> Dict[int, List[int]]:
+        """Propose draft tokens for the given active slots from their
+        prompt + emitted histories, clamped so the accepted prefix plus
+        bonus token can never step past the request's token budget, the
+        context wall, or the slot's reserved pages (the clamp is what
+        keeps rollback free: every REAL window write stays inside pages
+        the slot already holds)."""
+        hists = [list(self.active[i].prompt) + list(self.active[i].out)
+                 for i in slots]
+        proposals = drafter.propose(hists)
+        drafts: Dict[int, List[int]] = {}
+        for i, ks in zip(slots, proposals):
+            r = self.active[i]
+            cap = min(len(r.prompt) + r.max_new, self.max_len,
+                      len(self.slot_pages[i]) * self.page)
+            k = max(0, min(len(ks), drafter.max_draft,
+                           cap - int(self.lengths[i]) - 1,
+                           r.max_new - len(r.out) - 1))
+            drafts[i] = [int(t) for t in ks[:k]]
+        return drafts
+
+    def verify_step(self, tokens: np.ndarray, view=None) -> np.ndarray:
+        """One batched verify forward: every slot scores a fixed-width
+        window ``[last_emitted, d1..d_{W-1}]`` starting at its own length
+        through the ragged multi-token ``prefill_attention`` op (mid-page
+        starts are legal: the mask is pure position arithmetic).  Returns
+        the greedy argmax at EVERY window row — row t is the target's
+        prediction for the token after position ``lengths + t``.  The
+        forward ingests all W candidate K/V into the paged pool;
+        rejecting a suffix costs nothing, the HOST just never advances
+        ``lengths`` over it (the stale payload — and any int8
+        running-max scale growth it caused — stays masked behind every
+        later ``kpos < length`` read)."""
+        if self._verify is None:
+            raise RuntimeError(
+                "speculative verify is not supported under --mesh "
+                "tensor parallelism (no sharded verify twin yet); "
+                "run unsharded or drop --speculate")
+        lengths, table = view if view is not None \
+            else (self.lengths, self.table)
+        logits, self.cache = self._verify(
+            self.params, self.cache, jnp.asarray(tokens),
+            jnp.asarray(lengths), jnp.asarray(table))
+        self.verify_steps += 1
+        return np.asarray(jnp.argmax(logits, axis=-1))
+
+    def note_spec(self, drafted: int, accepted: int, emitted: int) -> None:
+        self.spec_drafted += drafted
+        self.spec_accepted += accepted
+        self.spec_emitted += emitted
+
+    def run_speculative(self, requests: List[Request], drafter,
+                        metrics=None) -> List[Request]:
+        """Static-schedule speculative decoding: :meth:`run` with each
+        decode round replaced by draft -> one fixed-width batched verify
+        -> longest-correct-prefix acceptance -> host rollback.  Token
+        emission replicates :meth:`run`'s per-token finish logic exactly
+        (budget and context-wall checks after EVERY token), so greedy
+        streams — including truncation points — are bit-identical to the
+        non-speculative baseline: the bonus token of an empty acceptance
+        IS the plain decode argmax."""
+        from .speculative import accept_longest_prefix
+        width = drafter.max_draft + 1
+        queue = list(requests)
+        cur = np.zeros((self.slots,), np.int32)
+        for i, r in enumerate(self.active):    # resume pre-admitted slots
+            if r is not None:
+                cur[i] = r.out[-1]
+        done: List[Request] = []
+        while queue or any(r is not None for r in self.active):
+            blocked = False
+            for i in range(self.slots):
+                while self.active[i] is None and queue and not blocked:
+                    while queue and not self.admissible(queue[0]):
+                        r = queue.pop(0)
+                        r.done = False
+                        self.rejected += 1
+                        self.rejected_requests.append(r)
+                        self.log(f"[paged] rejecting request {r.rid}: "
+                                 f"{self._reject_reason(r)}")
+                    if not queue or not self.try_admit(queue[0], i):
+                        blocked = True             # wait for free pages
+                        break
+                    r = queue.pop(0)
+                    cur[i] = r.out[-1]
+                    if len(r.out) >= r.max_new:    # max_new == 1 edge
+                        r.done = True
+                        done.append(r)
+                        self._recycle(i)
+                if blocked:
+                    break
+            if not any(r is not None for r in self.active):
+                if queue:
+                    raise RuntimeError(
+                        "admission deadlock: empty batch but queued "
+                        "requests cannot reserve pages")
+                break
+            slots = [i for i, r in enumerate(self.active) if r is not None]
+            drafts = self.draft_for(drafter, slots)
+            self.prepare_verify(slots, width)
+            toks = np.zeros((self.slots, width), np.int32)
+            mask = np.zeros((self.slots,), bool)
+            for i in slots:
+                mask[i] = True
+                toks[i, 0] = cur[i]
+                toks[i, 1:1 + len(drafts[i])] = drafts[i]
+            preds = self.verify_step(
+                toks, view=(np.where(mask, self.lengths, 0).astype(np.int32),
+                            np.where(mask[:, None], self.table, 0
+                                     ).astype(np.int32)))
+            for i in slots:
+                r = self.active[i]
+                ks = drafts[i]
+                emit = accept_longest_prefix(ks, preds[i])
+                accepted = len(emit) - 1
+                emitted = 0
+                finished = False
+                for tok in emit:
+                    self.lengths[i] += 1
+                    r.out.append(tok)
+                    cur[i] = tok
+                    emitted += 1
+                    if len(r.out) >= r.max_new \
+                            or int(self.lengths[i]) >= self.max_len:
+                        finished = True
+                        break
+                self.note_spec(len(ks), accepted, emitted)
+                if metrics is not None:
+                    metrics.on_spec_step(len(ks), accepted, emitted)
+                if finished:
+                    r.done = True
+                    r.truncated = len(r.out) < r.max_new
+                    if r.truncated:
+                        self.truncated += 1
+                        self.log(f"[paged] truncating request {r.rid} at "
+                                 f"max_len={self.max_len} "
+                                 f"({len(r.out)}/{r.max_new} tokens)")
+                    done.append(r)
+                    self._recycle(i)
+                else:
+                    self._reclaim_slot(i)
+        return done
 
     def run(self, requests: List[Request]) -> List[Request]:
         queue = list(requests)
@@ -791,6 +981,17 @@ def main(argv=None):
                     choices=("static", "continuous"),
                     help="paged scheduling: static run-to-completion or "
                          "continuous batching on a virtual arrival clock")
+    ap.add_argument("--speculate", default="", choices=("", "ngram", "model"),
+                    help="paged: speculative decoding drafter — 'ngram' "
+                         "(model-free suffix matching over emitted tokens) "
+                         "or 'model' (truncated-sibling draft model sharing "
+                         "the target's leading layers); draft tokens are "
+                         "verified in one fixed-width batched forward "
+                         "through the ragged prefill_attention op and "
+                         "rejected suffixes rolled back host-side")
+    ap.add_argument("--draft-tokens", type=int, default=3,
+                    help="speculative: max draft tokens per verify window "
+                         "(window width = draft_tokens + 1)")
     ap.add_argument("--token-budget", type=int, default=0,
                     help="continuous: max tokens composed per iteration "
                          "(0 = slots x page_size)")
@@ -841,6 +1042,25 @@ def main(argv=None):
         print(f"[mesh] model={args.mesh} "
               f"devices={len(jax.devices())} visible "
               f"(backend={jax.default_backend()})")
+    drafter = None
+    if args.speculate:
+        if args.cache != "paged":
+            raise SystemExit("--speculate requires --cache paged")
+        if mesh is not None:
+            raise SystemExit("--speculate is not supported with --mesh "
+                             "(no sharded verify twin yet)")
+        from .speculative import make_drafter
+        # same rng key as the target params: the truncated-sibling draft
+        # model's layers are then bit-identical to the target's leading
+        # layers (early-exit drafting), which is what buys real acceptance
+        drafter = make_drafter(args.speculate, cfg,
+                               max_draft=args.draft_tokens,
+                               dt=DtypePolicy(param=jnp.bfloat16),
+                               rng_key=jax.random.key(0),
+                               pad_to=args.max_len + args.draft_tokens,
+                               batch_pad=args.slots)
+        print(f"[spec] drafter={args.speculate} "
+              f"draft_tokens={args.draft_tokens}")
     if args.cache == "paged":
         server = PagedScheduler(model, params, slots=args.slots,
                                 max_len=args.max_len,
@@ -871,7 +1091,8 @@ def main(argv=None):
                               shared_prefix_len=args.shared_prefix_len,
                               shared_frac=args.shared_frac)
         engine = ContinuousEngine(server, token_budget=args.token_budget,
-                                  clock=args.clock, tick=args.tick)
+                                  clock=args.clock, tick=args.tick,
+                                  drafter=drafter)
         # route counters tick at trace time, so reset BEFORE warmup: the
         # warmup compiles (every prefill width + masked decode) are exactly
         # the routes the run then executes from cache
@@ -910,7 +1131,8 @@ def main(argv=None):
             reqs.append(Request(i, prompt, args.max_new))
         dispatch.reset_stats()
         t0 = time.time()
-        done = server.run(reqs)
+        done = (server.run_speculative(reqs, drafter) if drafter is not None
+                else server.run(reqs))
         dt = time.time() - t0
         total_new = sum(len(r.out) for r in done)
         print(f"served {len(done)} requests, {total_new} new tokens "
@@ -919,6 +1141,15 @@ def main(argv=None):
     if args.cache == "paged" and server.window:
         print(f"[paged] reclaimed {server.pages_reclaimed} window-dead "
               f"page(s) (window={server.window})")
+    if args.speculate and server.verify_steps:
+        rate = (server.spec_accepted / server.spec_drafted
+                if server.spec_drafted else 0.0)
+        print(f"[spec] verify_steps={server.verify_steps} "
+              f"drafted={server.spec_drafted} "
+              f"accepted={server.spec_accepted} "
+              f"accept_rate={rate:.3f} emitted={server.spec_emitted} "
+              f"tokens_per_step="
+              f"{server.spec_emitted / server.verify_steps:.2f}")
     if args.cache == "paged":
         if server.truncated or server.rejected:
             print(f"[paged] truncated={server.truncated} "

@@ -1,0 +1,217 @@
+"""Speculative decoding: draft -> verify -> accept/rollback.
+
+The ragged multi-token ``prefill_attention`` op is *exactly* the
+verify-K-draft-tokens shape (ROADMAP item 5): a chunk of C candidate
+tokens per slot scored causally against that slot's paged KV history.
+This module supplies the pieces AROUND that op — zero kernel changes:
+
+* **drafters** propose up to ``max_draft`` candidate continuations per
+  slot from its emitted token history:
+
+  - :class:`NgramDrafter` — model-free suffix matching: replay whatever
+    followed the most recent earlier occurrence of the current n-token
+    suffix.  Deterministic by construction (pure function of the
+    history), zero extra FLOPs — the drafter production systems reach
+    for when no small model is at hand.
+  - :class:`ModelDrafter` — greedy autoregressive drafting with a small
+    model sharing the target's token space.  The default draft config
+    (:func:`make_draft_config`) is a truncated sibling of the target
+    arch: same dims, leading subset of the layer stack.  Initialized
+    from the SAME rng key, its layers are bit-identical to the target's
+    leading layers (``Model.init`` folds the key per layer index), so
+    drafting is early-exit self-speculation — real agreement without a
+    separately trained model.
+
+* **acceptance** (:func:`accept_longest_prefix`) — the verify forward
+  returns greedy predictions at every window position; draft ``d_j`` is
+  accepted iff it equals the prediction at the row BEFORE it, and the
+  longest correct prefix plus the bonus token from the first
+  disagreeing row is emitted.  Every verify step therefore emits at
+  least one token — exactly the token a plain decode step would have —
+  which is what makes greedy speculative streams bit-identical to the
+  non-speculative baseline.
+
+* **rollback** is the scheduler's business and is cheap by paging
+  design: the host simply advances ``lengths`` by the emitted count
+  (never past the accepted prefix) and keeps the pages — rejected
+  drafts' stale K/V stays in the pool masked off by every later
+  ``kpos < length`` read (see ``PagedScheduler.draft_for`` /
+  ``verify_step`` and ``layers.attention_verify_paged``).
+
+The pipelining story is the paper's (§2.1.4 cross-input interleaving):
+a decode step streams one query token through the full weight pipeline;
+a verify step streams W tokens through the SAME pipeline for near-equal
+weight traffic, so every accepted draft is a token generated from idle
+pipeline headroom.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+
+
+def accept_longest_prefix(drafts: Sequence[int],
+                          predictions: np.ndarray) -> List[int]:
+    """Longest-correct-prefix acceptance for one slot.
+
+    ``drafts``: the K candidate tokens fed at window rows 1..K.
+    ``predictions``: (W,) greedy argmax at every verify row — row t is
+    the model's prediction for the token AFTER window position t, so
+    draft j (at row j+1) is correct iff it equals ``predictions[j]``.
+    Returns the emitted tokens: the accepted drafts plus the bonus token
+    from the first disagreeing row (always at least one token; with no
+    drafts this is exactly a decode step's argmax).
+    """
+    a = 0
+    while a < len(drafts) and int(drafts[a]) == int(predictions[a]):
+        a += 1
+    return [int(d) for d in drafts[:a]] + [int(predictions[a])]
+
+
+class NgramDrafter:
+    """Suffix-match drafting over each slot's prompt + emitted tokens.
+
+    For the current ``n``-token suffix (falling back to shorter orders
+    down to ``min_n``), find its most recent earlier occurrence in the
+    history and propose the tokens that followed it.  Greedy decode
+    loves repetition, so this fires often exactly when drafting is
+    cheapest to verify.
+    """
+
+    name = "ngram"
+
+    def __init__(self, *, max_draft: int = 3, n: int = 3, min_n: int = 1):
+        if max_draft < 0:
+            raise ValueError(f"max_draft must be >= 0, got {max_draft}")
+        self.max_draft = int(max_draft)
+        self.n = int(n)
+        self.min_n = max(1, int(min_n))
+
+    def _one(self, h: List[int]) -> List[int]:
+        ln = len(h)
+        for n in range(min(self.n, ln - 1), self.min_n - 1, -1):
+            sfx = h[ln - n:]
+            for j in range(ln - n - 1, -1, -1):
+                if h[j:j + n] == sfx:
+                    return h[j + n:j + n + self.max_draft]
+        return []
+
+    def propose(self, histories: Sequence[Sequence[int]]) -> List[List[int]]:
+        return [self._one([int(t) for t in h]) for h in histories]
+
+
+def make_draft_config(cfg: ArchConfig, n_layers: int = 0) -> ArchConfig:
+    """A truncated sibling of ``cfg`` for drafting: same dims and token
+    space, leading ``n_layers`` of the layer stack (default: half, at
+    least one).  Because ``Model.init`` derives each layer's key from
+    its stack index, initializing this config from the target's rng key
+    reproduces the target's leading layers exactly — the drafter is an
+    early-exit view of the target, not an unrelated random net."""
+    kinds = cfg.layer_kinds()
+    n = n_layers or max(1, len(kinds) // 2)
+    return dataclasses.replace(
+        cfg.with_layers(kinds[:n]), name=cfg.name + "-draft")
+
+
+class ModelDrafter:
+    """Greedy autoregressive drafting with a small model.
+
+    The draft model must share the target's token space
+    (``vocab_size``); nothing else about it matters to correctness —
+    every proposal is verified by the target.  Drafting is stateless:
+    each call right-pads the histories into a fixed (B, pad_to) buffer
+    and runs ``max_draft`` full forwards, reading the logits row at
+    each history's cursor (causal masking makes the right-padding
+    inert).  Stateless costs FLOPs but needs no draft-side KV cache,
+    no draft-side rollback, and exactly one compiled shape per padded
+    batch size.
+    """
+
+    name = "model"
+
+    def __init__(self, model, params, *, max_draft: int = 3,
+                 pad_to: int = 128, batch_pad: int = 0):
+        if max_draft < 0:
+            raise ValueError(f"max_draft must be >= 0, got {max_draft}")
+        self.model = model
+        self.params = params
+        self.max_draft = int(max_draft)
+        self.pad_to = int(pad_to)
+        self.batch_pad = int(batch_pad)
+
+        def next_tokens(params, toks, last_idx):
+            logits = model.forward(params, {"tokens": toks})
+            row = jnp.take_along_axis(
+                logits, last_idx[:, None, None], axis=1)[:, 0]
+            return jnp.argmax(row, axis=-1)
+
+        self._next = jax.jit(next_tokens)
+
+    def _padded_batch(self, b: int) -> int:
+        if self.batch_pad:
+            return max(self.batch_pad, b)
+        n = 1
+        while n < b:
+            n *= 2
+        return n
+
+    def propose(self, histories: Sequence[Sequence[int]]) -> List[List[int]]:
+        b = len(histories)
+        if b == 0 or self.max_draft == 0:
+            return [[] for _ in range(b)]
+        bp = self._padded_batch(b)
+        toks = np.zeros((bp, self.pad_to), np.int32)
+        cursor = np.ones((bp,), np.int32)     # padded rows: 1-token history
+        for j, h in enumerate(histories):
+            h = [int(t) for t in h][-self.pad_to:]   # keep the suffix
+            toks[j, :len(h)] = h
+            cursor[j] = len(h)
+        out: List[List[int]] = [[] for _ in range(b)]
+        for _ in range(self.max_draft):
+            if int(cursor.max()) >= self.pad_to:
+                break
+            nxt = np.asarray(self._next(self.params, jnp.asarray(toks),
+                                        jnp.asarray(cursor - 1)))
+            for j in range(b):
+                t = int(nxt[j])
+                out[j].append(t)
+                toks[j, cursor[j]] = t
+            cursor += 1
+        return out
+
+
+def make_drafter(kind: str, cfg: ArchConfig, *, max_draft: int = 3,
+                 dt=None, rng_key=None, draft_layers: int = 0,
+                 pad_to: int = 128, batch_pad: int = 0,
+                 model: Optional[object] = None, params=None):
+    """Build a drafter by name ("ngram" | "model") for a target arch.
+
+    For ``"model"``, pass the draft ``model``/``params`` explicitly or
+    let this build the truncated sibling (:func:`make_draft_config`)
+    initialized from ``rng_key`` — use the SAME key the target's params
+    came from to get the early-exit weight sharing."""
+    if kind == "ngram":
+        return NgramDrafter(max_draft=max_draft)
+    if kind == "model":
+        if model is None:
+            from ..core.memory import DtypePolicy
+            from ..models.transformer import ExecOptions, Model
+            dcfg = make_draft_config(cfg, draft_layers)
+            model = Model(dcfg, dt=dt or DtypePolicy(param=jnp.bfloat16),
+                          opts=ExecOptions(mode="run"))
+            params = model.init(rng_key if rng_key is not None
+                                else jax.random.key(0))
+        if model.cfg.vocab_size != cfg.vocab_size:
+            raise ValueError(
+                f"draft arch {model.cfg.name} vocab "
+                f"{model.cfg.vocab_size} != target vocab {cfg.vocab_size} "
+                "(drafter and target must share the token space)")
+        return ModelDrafter(model, params, max_draft=max_draft,
+                            pad_to=pad_to, batch_pad=batch_pad)
+    raise ValueError(f"unknown drafter {kind!r} (want ngram|model)")

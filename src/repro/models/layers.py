@@ -403,6 +403,71 @@ def attention_prefill_paged(p: Params, s: AttnSpec, x: jax.Array,
     return _out_proj(p, s, out, dt), k_pages, v_pages, k_scale, v_scale
 
 
+def attention_verify_paged(p: Params, s: AttnSpec, x: jax.Array,
+                           lengths: jax.Array, table: jax.Array,
+                           k_pages: jax.Array, v_pages: jax.Array,
+                           dt: DtypePolicy,
+                           k_scale: Optional[jax.Array] = None,
+                           v_scale: Optional[jax.Array] = None,
+                           positions_override: Optional[jax.Array] = None
+                           ) -> Tuple[jax.Array, jax.Array, jax.Array,
+                                      Optional[jax.Array],
+                                      Optional[jax.Array]]:
+    """Speculative verify: score W candidate tokens per slot in one pass.
+
+    x: (B, W, d) — slot b's candidate tokens occupy positions
+    ``lengths[b] + [0, W)``, which are NOT page-aligned (a draft window
+    starts wherever decode left off).  The whole-page write of
+    ``attention_prefill_paged`` is therefore unusable here; instead the
+    candidates append token-by-token exactly like the decode path (W is a
+    static python loop — W is small, typically <= 5).  Appends may span a
+    page boundary; the scheduler guarantees pages exist for the full
+    window.  The ragged ``prefill_attention`` op then scores all W
+    queries causally against history + the window itself — its mask is
+    pure position arithmetic (kpos <= qpos), so mid-page ``starts`` are
+    legal on kernel and reference routes alike.  Rejected drafts are
+    rolled back by the HOST truncating ``lengths``; their stale K/V
+    payload (and any int8 running-max scale growth) stays in the pool,
+    masked off by every later ``kpos < length`` read.
+    Returns (out (B,W,d), k_pages, v_pages, k_scale, v_scale).
+    """
+    b, w, _ = x.shape
+    page = k_pages.shape[1]
+    positions = (positions_override if positions_override is not None
+                 else (lengths[:, None] + jnp.arange(w)[None, :]
+                       ).astype(jnp.int32))
+    q, k, v = _qkv(p, s, x, positions, dt)
+    n_logical = table.shape[1]
+    for t in range(w):
+        pos = lengths + t
+        # Fixed-width windows mean padded rows can step past a slot's last
+        # logical page (e.g. a slot one token from max_len).  Gather would
+        # silently clamp the index into the slot's LAST real page; redirect
+        # those writes to trash page 0 instead.
+        idx = pos // page
+        pid = jnp.where(idx < n_logical,
+                        table[jnp.arange(b), jnp.minimum(idx, n_logical - 1)],
+                        0)
+        off = pos % page
+        if k_scale is not None:
+            pk, sk = quant.append_token_quantized(
+                k_pages[pid], k_scale[pid], k[:, t], off)
+            pv, sv = quant.append_token_quantized(
+                v_pages[pid], v_scale[pid], v[:, t], off)
+            k_pages = k_pages.at[pid].set(pk)
+            v_pages = v_pages.at[pid].set(pv)
+            k_scale = k_scale.at[pid].set(sk)
+            v_scale = v_scale.at[pid].set(sv)
+        else:
+            k_pages = k_pages.at[pid, off].set(k[:, t].astype(k_pages.dtype))
+            v_pages = v_pages.at[pid, off].set(v[:, t].astype(v_pages.dtype))
+    out = dispatch.prefill_attention(
+        q, k_pages, v_pages, table, lengths, k_scale, v_scale,
+        window=s.window, softcap=s.softcap, accum_dtype=dt.accum,
+        out_dtype=dt.compute, policy=s.dispatch)
+    return _out_proj(p, s, out, dt), k_pages, v_pages, k_scale, v_scale
+
+
 # --------------------------------------------------------------------------
 # MLPs
 # --------------------------------------------------------------------------

@@ -356,6 +356,47 @@ def layer_prefill_paged(p: Params, cfg: ArchConfig, kind: LayerKind,
     return x + h, new_cache
 
 
+def layer_verify_paged(p: Params, cfg: ArchConfig, kind: LayerKind,
+                       x: jax.Array, cache: Dict[str, Any],
+                       lengths: jax.Array, tables: jax.Array,
+                       dt: DtypePolicy, positions_override=None,
+                       opts: Optional[ExecOptions] = None
+                       ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One speculative verify window of B distinct slots through one layer
+    (x (B, W, d), lengths (B,), tables (B, n_pages)).  Same structural
+    constraints as chunked prefill (attention mixers, stateless FFNs) —
+    ``paged_supported`` gates both."""
+    mixer, ffn = kind
+    new_cache = dict(cache)
+    h = layers.rmsnorm(p["ln1"], x)
+    if mixer in ("attn", "swa"):
+        spec = _attn_spec(cfg, mixer)
+        h, kp, vp, ks, vs = layers.attention_verify_paged(
+            p["attn"], spec, h, lengths, tables,
+            cache["k_pages"], cache["v_pages"], dt,
+            cache.get("k_scale"), cache.get("v_scale"),
+            positions_override=positions_override)
+        new_cache["k_pages"], new_cache["v_pages"] = kp, vp
+        if ks is not None:
+            new_cache["k_scale"], new_cache["v_scale"] = ks, vs
+    else:
+        raise ValueError(
+            f"speculative verify requires attention mixers, got {mixer}")
+    x = x + h
+    h = layers.rmsnorm(p["ln2"], x)
+    if ffn == "mlp":
+        h = layers.mlp_apply(p["mlp"], h, cfg.activation, dt,
+                             policy=cfg.dispatch,
+                             weights_dtype=cfg.weights_dtype)
+    elif ffn == "moe":
+        spec = _moe_spec(cfg, opts.expert_pad if opts else 1)
+        h, _ = moe.moe_apply(p["moe"], spec, h, dt)
+    else:
+        raise ValueError(
+            f"speculative verify requires stateless FFNs, got {ffn}")
+    return x + h, new_cache
+
+
 def paged_supported(cfg: ArchConfig) -> bool:
     """Can this arch serve from a paged KV cache?  Requires every mixer to
     be attention-family and every FFN stateless (chunked prefill has no
@@ -721,6 +762,59 @@ class Model:
 
         x_last = jnp.take_along_axis(x, last_idx[:, None, None], axis=1)
         return self._logits(params, x_last)[:, 0], new_cache
+
+    def verify_step_paged(self, params: Params, cache, tokens: jax.Array,
+                          lengths: jax.Array, tables: jax.Array):
+        """Score W candidate tokens each of B distinct slots — the
+        speculative-decoding verify forward.
+
+        tokens: (B, W) — slot b's window is ``[last_emitted, d1..d_{W-1}]``
+        occupying positions ``lengths[b] + [0, W)`` (NOT page-aligned; the
+        scheduler guarantees pages exist for the span).  Unlike prefill,
+        the caller needs logits at EVERY window position: row t predicts
+        the token at position lengths+t+1, so acceptance compares draft
+        t+1 against argmax(row t).  Returns (logits (B, W, V), cache).
+        """
+        cfg, dt, lay, opts = self.cfg, self.dt, self.layout, self.opts
+        lengths = jnp.asarray(lengths)
+        tables = jnp.asarray(tables)
+        b, w = tokens.shape
+        x = self._embed(params, {"tokens": tokens})
+        pos_override = None
+        if cfg.mrope_sections:
+            pos_override = jnp.broadcast_to(
+                (lengths[:, None] + jnp.arange(w)[None, :])[:, :, None],
+                (b, w, len(cfg.mrope_sections))).astype(jnp.int32)
+
+        def one(p, kind, x, c_in):
+            return layer_verify_paged(p, cfg, kind, x, c_in, lengths,
+                                      tables, dt, pos_override, opts=opts)
+
+        new_cache = {"prefix": [], "stack": [], "tail": []}
+        for p, kind, cc in zip(params["prefix"], lay.prefix,
+                               cache["prefix"]):
+            x, nc = one(p, kind, x, cc)
+            new_cache["prefix"].append(nc)
+        if lay.n_periods:
+            def body(x, slices):
+                pp, cc = slices
+                ncs = []
+                for j, kind in enumerate(lay.period):
+                    x, nc = one(pp[j], kind, x, cc[j])
+                    ncs.append(nc)
+                return x, tuple(ncs)
+            if opts.scan_layers:
+                x, ncs = jax.lax.scan(
+                    body, x, (tuple(params["stack"]), tuple(cache["stack"])))
+                new_cache["stack"] = list(ncs)
+            else:
+                raise NotImplementedError(
+                    "speculative verify runs in scan mode (ExecOptions "
+                    "run/mem)")
+        for p, kind, cc in zip(params["tail"], lay.tail, cache["tail"]):
+            x, nc = one(p, kind, x, cc)
+            new_cache["tail"].append(nc)
+        return self._logits(params, x), new_cache
 
 
 # --------------------------------------------------------------------------

@@ -247,3 +247,50 @@ def test_tp_gate_skips_without_tp_rows(tmp_path):
     p = _write(tmp_path, "plain.json", _report(100.0, 40.0))
     failures, compared = check_bench.compare_tp(check_bench.load_rows(p))
     assert failures == [] and compared == 0
+
+
+# ------------------------------------------- speculative-decoding gate
+
+def _spec_report(match_n=True, match_m=True, acc_n=0.62, acc_m=0.91,
+                 tok_n=150.0, tok_m=180.0):
+    return {"rows": [
+        {"arch": "a", "cache": "paged", "schedule": "continuous-specngram",
+         "drafter": "ngram", "decode_tok_s": tok_n,
+         "baseline_decode_tok_s": 100.0, "acceptance_rate": acc_n,
+         "accepted_per_step": 2.1, "tokens_match_baseline": match_n},
+        {"arch": "a", "cache": "paged", "schedule": "continuous-specmodel",
+         "drafter": "model", "decode_tok_s": tok_m,
+         "baseline_decode_tok_s": 100.0, "acceptance_rate": acc_m,
+         "accepted_per_step": 2.8, "tokens_match_baseline": match_m},
+    ]}
+
+
+def test_spec_gate_passes_on_healthy_rows(tmp_path):
+    base = _write(tmp_path, "base.json", _spec_report())
+    cur = _write(tmp_path, "cur.json", _spec_report())
+    assert check_bench.main(["--baseline", str(base),
+                             "--current", str(cur)]) == 0
+    failures, compared = check_bench.compare_spec(check_bench.load_rows(cur))
+    assert failures == [] and compared == 6   # 3 checks x 2 drafter rows
+
+
+def test_spec_gate_fails_on_divergence_or_dead_drafter(tmp_path):
+    """Correctness has no tolerance: a diverged stream fails, a zero (or
+    missing) acceptance rate fails, a missing throughput field fails."""
+    base = _write(tmp_path, "base.json", _spec_report())
+    for bad, needle in (
+            (_spec_report(match_m=False), "tokens_match_baseline"),
+            (_spec_report(acc_n=0.0), "acceptance_rate"),
+            (_spec_report(acc_m=None), "acceptance_rate"),
+            (_spec_report(tok_n=None), "decode_tok_s")):
+        cur = _write(tmp_path, "cur.json", bad)
+        assert check_bench.main(["--baseline", str(base),
+                                 "--current", str(cur)]) == 1
+        failures, _ = check_bench.compare_spec(check_bench.load_rows(cur))
+        assert len(failures) == 1 and needle in failures[0], failures
+
+
+def test_spec_gate_skips_without_spec_rows(tmp_path):
+    p = _write(tmp_path, "plain.json", _report(100.0, 40.0))
+    failures, compared = check_bench.compare_spec(check_bench.load_rows(p))
+    assert failures == [] and compared == 0

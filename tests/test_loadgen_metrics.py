@@ -158,3 +158,58 @@ def test_metrics_percentile_helper():
     vals = [1.0, 2.0, 3.0, 4.0]
     assert ServeMetrics.percentile(vals, 50) == pytest.approx(2.5)
     assert ServeMetrics.percentile(vals, 99) <= 4.0
+
+
+def test_metrics_percentile_single_sample_every_quantile():
+    # one sample answers every quantile with itself — never NaN, never an
+    # index error at the q=0/q=100 extremes
+    for q in (0, 1, 50, 99, 100):
+        assert ServeMetrics.percentile([3.25], q) == 3.25
+
+
+def test_metrics_percentile_ignores_input_order():
+    shuffled = [4.0, 1.0, 3.0, 2.0]
+    for q in (1, 50, 99):
+        assert ServeMetrics.percentile(shuffled, q) == pytest.approx(
+            ServeMetrics.percentile(sorted(shuffled), q))
+    assert ServeMetrics.percentile(shuffled, 50) == pytest.approx(2.5)
+
+
+def test_metrics_degenerate_distribution_p50_equals_p99():
+    """All-equal samples collapse the whole distribution to one point:
+    p50 == p99 is legitimate, not a sign of a broken summary."""
+    m = ServeMetrics()
+    for rid in range(3):
+        m.on_arrival(rid, 0.0)
+        m.on_token(rid, 1.0)     # every TTFT exactly 1.0
+        m.on_token(rid, 2.0)     # every gap exactly 1.0
+        m.on_finish(rid, 2.0)
+    s = m.summary()
+    assert s["ttft_p50"] == s["ttft_p99"] == pytest.approx(1.0)
+    assert s["tok_latency_p50"] == s["tok_latency_p99"] == pytest.approx(1.0)
+
+
+def test_metrics_single_token_request_has_no_gaps():
+    # a max_new == 1 request produces a TTFT but zero inter-token gaps;
+    # the summary must report None for gap percentiles, not NaN or 0.0
+    m = ServeMetrics()
+    m.on_arrival(0, 0.0)
+    m.on_token(0, 2.0)
+    m.on_finish(0, 2.0)
+    s = m.summary()
+    assert s["ttft_p50"] == pytest.approx(2.0)
+    assert s["tok_latency_p50"] is None and s["tok_latency_p99"] is None
+    assert s["new_tokens"] == 1
+
+
+def test_metrics_spec_counters_default_none_and_accumulate():
+    m = ServeMetrics()
+    s = m.summary()
+    assert s["spec_accept_rate"] is None          # no drafter: absent,
+    assert s["spec_tokens_per_step"] is None      # not 0.0 or NaN
+    m.on_spec_step(drafted=3, accepted=2, emitted=3)
+    m.on_spec_step(drafted=3, accepted=0, emitted=1)
+    m.on_spec_step(drafted=0, accepted=0, emitted=1)  # no-draft verify
+    s = m.summary()
+    assert s["spec_accept_rate"] == pytest.approx(2 / 6)
+    assert s["spec_tokens_per_step"] == pytest.approx(5 / 3)

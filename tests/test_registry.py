@@ -142,6 +142,73 @@ def test_vjp_ops_pass_fp32_grad_differential(op, empty_plan_cache):
             rtol=5e-4, atol=5e-4), gk, gr)
 
 
+def test_matmul_bwd_routes_through_tuned_gemms(empty_plan_cache):
+    """Satellite: the matmul VJP's projection grads are plain GEMMs
+    dispatched through the staged tuned kernel (dx = g @ w.T, dw =
+    x.T @ g) — each resolving its own transposed shape's plan and
+    counting its route via the public ``matmul_bwd`` hook, the same
+    paired-schedule idiom as the attention backward."""
+    x = jax.random.normal(jax.random.key(0), (2, 16, 32), jnp.float32)
+    w = jax.random.normal(jax.random.key(1), (32, 24), jnp.float32)
+    cot = jax.random.normal(jax.random.key(2), (2, 16, 24), jnp.float32)
+
+    def f(x_, w_):
+        return jnp.sum(dispatch.matmul(x_, w_, policy="kernels") * cot)
+
+    with dispatch.stats_scope() as stats:
+        gx, gw = jax.grad(f, argnums=(0, 1))(x, w)
+        s = stats()
+    assert s.get(("matmul_bwd", "kernel"), 0) == 2, s   # dA and dB
+    # the tuned-GEMM grads still match the plain einsum contraction
+    np.testing.assert_allclose(
+        np.asarray(gx, np.float32),
+        np.einsum("bsn,kn->bsk", np.asarray(cot), np.asarray(w)),
+        rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(
+        np.asarray(gw, np.float32),
+        np.einsum("bsk,bsn->kn", np.asarray(x), np.asarray(cot)),
+        rtol=5e-4, atol=5e-4)
+
+
+def test_matmul_bwd_respects_tuned_level_pin(tmp_path, monkeypatch):
+    """A tuned entry at the dA GEMM's own (transposed) shape pinning
+    level 1 sends THAT grad to the reference contraction under auto mode
+    while the dB grad still runs the kernel — the backward resolves
+    per-shape plans, never reusing the forward's."""
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(tmp_path / "plans.json"))
+    x = jax.random.normal(jax.random.key(0), (2, 16, 32), jnp.float32)
+    w = jax.random.normal(jax.random.key(1), (32, 24), jnp.float32)
+    cache = tune_cache.PlanCache(tmp_path / "plans.json")
+    # dx GEMM is g2 (32, 24) @ w2.T (24, 32) -> plan key (32, 24, 32)
+    cache.put("matmul", (32, 24, 32), jnp.float32,
+              {"level": int(Level.T1_PIPELINED)}, us=1.0)
+    # the forward and the dw GEMM share the key (32, 32, 24); pin it to
+    # the kernel level so the T1 entry above can't hijack it via the
+    # nearest-shape fallback
+    cache.put("matmul", (32, 32, 24), jnp.float32,
+              {"level": int(Level.T3_REPLICATED)}, us=1.0)
+    cache.save()
+    tune_cache.preload()
+    # emulate a TPU-style auto route so ctx.mode stays "auto" (an explicit
+    # "kernels" policy overrides tuned level pins by contract)
+    monkeypatch.setattr(dispatch, "_kernels_by_default", lambda: True)
+    try:
+        def f(x_, w_):
+            return jnp.sum(dispatch.matmul(x_, w_, policy="auto"))
+
+        with dispatch.stats_scope() as stats:
+            jax.grad(f, argnums=(0, 1))(x, w)
+            s = stats()
+            sources = dispatch.plan_source_stats()
+        assert s.get(("matmul_bwd", "reference"), 0) == 1, s
+        assert s.get(("matmul_bwd", "kernel"), 0) == 1, s
+        assert sources.get(("matmul_bwd", "reference", "exact"), 0) == 1, \
+            sources
+    finally:
+        monkeypatch.delenv("REPRO_TUNE_CACHE")
+        tune_cache.preload()
+
+
 # ----------------------------------------------------- plan-source threading
 def test_plan_source_tags_agree_with_lookup_stats(tmp_path, monkeypatch):
     """Satellite regression: a tuned entry that says "the reference

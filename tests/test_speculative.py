@@ -1,0 +1,265 @@
+"""Speculative decoding: draft -> verify -> accept/rollback tests.
+
+Three layers, mirroring the subsystem's structure:
+
+1. unit — ``accept_longest_prefix`` semantics, the model-free
+   ``NgramDrafter``, and ``make_draft_config`` truncation, no model in
+   the loop;
+2. differential — greedy speculative streams must be BIT-IDENTICAL to
+   the non-speculative baseline for both drafters, on both the static
+   ``run_speculative`` path and the continuous-batching engine path
+   (the acceptance rule guarantees this: the bonus token of an empty
+   acceptance IS the plain decode argmax);
+3. runtime properties — the verify forward routes through the existing
+   ragged ``prefill_attention`` kernel (zero new kernels), and host
+   rollback keeps ``check_page_accounting`` honest under the full
+   composition: oversubscribed pool + prefix-sharing CoW + int8 KV +
+   sliding-window reclamation.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.archs import ARCHS
+from repro.core.memory import DtypePolicy
+from repro.kernels import dispatch
+from repro.launch.engine import ContinuousEngine
+from repro.launch.serve import PagedScheduler, Request
+from repro.launch.speculative import (NgramDrafter, accept_longest_prefix,
+                                      make_draft_config, make_drafter)
+from repro.models.transformer import ExecOptions, Model
+
+
+def _tiny_cfg(name, **overrides):
+    cfg = ARCHS[name].smoke()
+    return dataclasses.replace(
+        cfg, d_model=32, n_heads=2, n_kv_heads=1, head_dim=16, d_ff=64,
+        vocab_size=128, n_experts=min(cfg.n_experts, 4) or 0,
+        **overrides)
+
+
+def _make_scheduler(slots=2, max_len=32, page=4, total_pages=0,
+                    arch="gemma-2b", dispatch_policy="reference",
+                    kv_dtype="", prefix_cache=False, all_swa=False):
+    cfg = _tiny_cfg(arch, dispatch=dispatch_policy, kv_dtype=kv_dtype)
+    if all_swa:   # every layer windowed -> sliding-window reclamation on
+        cfg = cfg.with_layers((("swa", "mlp"),) * 2)
+    model = Model(cfg, dt=DtypePolicy(compute=jnp.float32),
+                  opts=ExecOptions(mode="run"))
+    params = model.init(jax.random.key(0))
+    sched = PagedScheduler(model, params, slots=slots, max_len=max_len,
+                           page_size=page, total_pages=total_pages,
+                           prefix_cache=prefix_cache,
+                           log=lambda *a, **k: None)
+    return sched, cfg
+
+
+def _prompts(n, rng_seed=5, lo=3, hi=9):
+    rng = np.random.default_rng(rng_seed)
+    return [rng.integers(0, 128, rng.integers(lo, hi)) for _ in range(n)]
+
+
+# ------------------------------------------------------------------- units
+def test_accept_longest_prefix_semantics():
+    # no drafts: the bonus token is exactly the plain decode argmax
+    assert accept_longest_prefix([], np.array([7])) == [7]
+    # full acceptance: all drafts confirmed + bonus from the last row
+    assert accept_longest_prefix([1, 2], np.array([1, 2, 9])) == [1, 2, 9]
+    # partial: second draft disagrees with row 1's prediction -> the
+    # prediction itself is emitted in its place, nothing after
+    assert accept_longest_prefix([1, 5], np.array([1, 2, 9])) == [1, 2]
+    # immediate mismatch: emit only row 0's prediction (>= 1 token/step)
+    assert accept_longest_prefix([4, 5], np.array([1, 2, 3])) == [1]
+
+
+def test_ngram_drafter_replays_most_recent_suffix_match():
+    d = NgramDrafter(max_draft=3, n=3)
+    # suffix [1,2,3] occurred at the start: replay what followed it
+    assert d.propose([[1, 2, 3, 9, 1, 2, 3]]) == [[9, 1, 2]]
+    # order fallback to n=1: [5] matched, propose its continuation
+    assert d.propose([[5, 6, 5]]) == [[6, 5]]
+    # no earlier occurrence at any order -> no drafts (plain decode step)
+    assert d.propose([[1, 2, 3, 4]]) == [[]]
+    assert d.propose([[], [7]]) == [[], []]    # degenerate histories
+    with pytest.raises(ValueError, match="max_draft"):
+        NgramDrafter(max_draft=-1)
+
+
+def test_make_draft_config_truncates_leading_layers():
+    cfg = _tiny_cfg("gemma3-4b")               # 3-layer smoke stack
+    kinds = cfg.layer_kinds()
+    half = make_draft_config(cfg)
+    assert half.layer_kinds() == kinds[:max(1, len(kinds) // 2)]
+    assert half.name == cfg.name + "-draft"
+    assert half.vocab_size == cfg.vocab_size
+    two = make_draft_config(cfg, n_layers=2)
+    assert two.layer_kinds() == kinds[:2]
+
+
+def test_make_drafter_rejects_unknown_kind_and_vocab_mismatch():
+    cfg = _tiny_cfg("gemma-2b")
+    with pytest.raises(ValueError, match="unknown drafter"):
+        make_drafter("medusa", cfg)
+    other = Model(dataclasses.replace(_tiny_cfg("gemma-2b"), vocab_size=64),
+                  dt=DtypePolicy(compute=jnp.float32),
+                  opts=ExecOptions(mode="run"))
+    with pytest.raises(ValueError, match="vocab"):
+        make_drafter("model", cfg, model=other,
+                     params=other.init(jax.random.key(0)))
+
+
+# ----------------------------------------------------------- differentials
+def test_static_ngram_speculative_matches_baseline_exactly():
+    """run_speculative with the n-gram drafter emits bit-identical greedy
+    streams to run(), including slot recycling across > slots requests."""
+    prompts = _prompts(5)
+    base, _ = _make_scheduler(slots=2)
+    want = {r.rid: list(r.out)
+            for r in base.run([Request(i, p, 6)
+                               for i, p in enumerate(prompts)])}
+
+    spec, _ = _make_scheduler(slots=2)
+    got = {r.rid: list(r.out)
+           for r in spec.run_speculative(
+               [Request(i, p.copy(), 6) for i, p in enumerate(prompts)],
+               NgramDrafter(max_draft=3))}
+    assert got == want
+    assert spec.verify_steps > 0
+    # structural floor: every verify step emits at least one token
+    assert spec.spec_emitted >= spec.verify_steps
+    # prefill emits each request's first token; verify emits the rest
+    assert spec.spec_emitted == sum(len(o) - 1 for o in got.values())
+
+
+def test_static_model_drafter_matches_baseline_and_accepts():
+    """A full-depth draft sibling initialized from the target's rng key
+    IS the target (Model.init folds the key per layer index), so drafts
+    agree with verify and acceptance is exercised — while the stream
+    stays bit-identical to the baseline by the acceptance rule alone."""
+    prompts = _prompts(4, rng_seed=8)
+    base, cfg = _make_scheduler(slots=2)
+    want = {r.rid: list(r.out)
+            for r in base.run([Request(i, p, 5)
+                               for i, p in enumerate(prompts)])}
+
+    spec, cfg = _make_scheduler(slots=2)
+    drafter = make_drafter("model", cfg, max_draft=2,
+                           draft_layers=len(cfg.layer_kinds()),
+                           dt=DtypePolicy(compute=jnp.float32),
+                           rng_key=jax.random.key(0),
+                           pad_to=spec.max_len + 2, batch_pad=spec.slots)
+    got = {r.rid: list(r.out)
+           for r in spec.run_speculative(
+               [Request(i, p.copy(), 5) for i, p in enumerate(prompts)],
+               drafter)}
+    assert got == want
+    assert spec.spec_drafted > 0 and spec.spec_accepted > 0
+
+
+def test_engine_speculative_matches_baseline_both_drafters():
+    """Continuous-batching path: an engine with a drafter produces the
+    same streams as the plain engine, and the spec metrics populate."""
+    prompts = _prompts(4, rng_seed=13)
+
+    def serve(drafter):
+        sched, cfg = _make_scheduler(slots=2)
+        engine = ContinuousEngine(sched, clock="tick", drafter=drafter,
+                                  log=None)
+        done = engine.run([Request(i, p.copy(), 5)
+                           for i, p in enumerate(prompts)])
+        return {r.rid: list(r.out) for r in done}, engine, cfg
+
+    want, plain, cfg = serve(None)
+    assert plain.metrics.summary()["spec_accept_rate"] is None
+
+    for drafter in (NgramDrafter(max_draft=3),
+                    make_drafter("model", cfg, max_draft=2,
+                                 dt=DtypePolicy(compute=jnp.float32),
+                                 rng_key=jax.random.key(0),
+                                 pad_to=34, batch_pad=2)):
+        got, engine, _ = serve(drafter)
+        assert got == want, f"{drafter.name} stream diverged"
+        s = engine.metrics.summary()
+        assert s["spec_tokens_per_step"] is not None
+        assert s["spec_tokens_per_step"] >= 1.0   # >= 1 token per verify
+        assert engine.sched.verify_steps > 0
+
+
+# ------------------------------------------------------ runtime properties
+def test_verify_routes_through_prefill_attention_kernel():
+    """The verify forward is the ragged prefill op under kernels dispatch
+    — zero new kernels; the route counters are the proof."""
+    sched, _ = _make_scheduler(slots=1, dispatch_policy="kernels")
+    with dispatch.stats_scope() as stats:
+        done = sched.run_speculative(
+            [Request(0, np.arange(6) % 128, 4)], NgramDrafter(max_draft=2))
+        counts = stats()
+    assert len(done) == 1 and done[0].done
+    assert counts.get(("prefill_attention", "kernel"), 0) > 0
+    assert counts.get(("prefill_attention", "reference"), 0) == 0
+
+
+def test_rollback_accounting_oversubscribed_int8_prefix_sharing():
+    """The stress composition: all-swa stack (sliding-window reclamation
+    live), int8 KV (per-page scale rows), prefix-sharing CoW, and an
+    oversubscribed pool — check_page_accounting asserts inside every
+    scheduler mutation including post-rollback, and streams still match
+    the non-speculative scheduler under the same pressure."""
+    rng = np.random.default_rng(21)
+    base_prompt = rng.integers(0, 128, 16)
+    prompts = [base_prompt, base_prompt.copy(),          # sharers
+               rng.integers(0, 128, 12), rng.integers(0, 128, 8),
+               base_prompt.copy(), rng.integers(0, 128, 10)]
+    kw = dict(slots=3, max_len=32, page=4, total_pages=15,
+              arch="gemma3-4b", all_swa=True, kv_dtype="int8",
+              prefix_cache=True)
+
+    ref, _ = _make_scheduler(**kw)
+    assert ref.window > 0, "all-swa stack should enable reclamation"
+    want = {r.rid: list(r.out)
+            for r in ref.run([Request(i, p, 6)
+                              for i, p in enumerate(prompts)])}
+
+    spec, _ = _make_scheduler(**kw)
+    done = spec.run_speculative(
+        [Request(i, p.copy(), 6) for i, p in enumerate(prompts)],
+        NgramDrafter(max_draft=3))
+    got = {r.rid: list(r.out) for r in done}
+    assert got == want
+    assert len(done) == len(prompts) and all(r.done for r in done)
+    spec.check_page_accounting()               # final post-rollback state
+    assert spec.pages_reclaimed > 0            # window reclaim interleaved
+    assert spec.shared_tokens_total > 0        # prefix hits interleaved
+    # rollback never leaves a slot claiming more tokens than its pages
+    assert all(r is None for r in spec.active)
+
+
+def test_speculative_cow_through_prepare_verify():
+    """A fully-covered sharer's verify window appends into published
+    pages: prepare_verify must copy-on-write before the batched write,
+    preserving both the sharer's stream and the published pages."""
+    rng = np.random.default_rng(3)
+    base_prompt = rng.integers(0, 128, 16)
+    kw = dict(slots=2, max_len=32, page=4, prefix_cache=True)
+
+    ref, _ = _make_scheduler(**kw)
+    want = {r.rid: list(r.out)
+            for r in ref.run([Request(0, base_prompt, 4),
+                              Request(1, base_prompt.copy(), 4)])}
+
+    spec, _ = _make_scheduler(**kw)
+    # serve sequentially through one admission each so the publisher's
+    # prefix is in the trie before the repeat admits (same-tick twins
+    # both admit pre-publication and nothing would be shared)
+    out = {}
+    for rid in (0, 1):
+        done = spec.run_speculative(
+            [Request(rid, base_prompt.copy(), 4)], NgramDrafter(max_draft=3))
+        out[rid] = list(done[0].out)
+    assert out == want
+    assert spec.shared_tokens_total == 16      # repeat fully covered
+    assert spec.cow_copies >= 1                # divergence copied, not aliased
+    spec.check_page_accounting()
